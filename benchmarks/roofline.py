@@ -1,0 +1,160 @@
+"""Roofline analysis over dry-run reports (EXPERIMENTS.md §Roofline).
+
+Reads ``experiments/dryrun/*.json`` (written by repro.launch.dryrun), and
+for each (arch × shape × mesh) cell derives the three roofline terms:
+
+    compute    = HLO_FLOPs(per-device program)   / 197 TFLOP/s (bf16)
+    memory     = HLO_bytes_accessed(per-device)  / 819 GB/s HBM
+    collective = per-device link bytes (ring-model: all-reduce counts 2×,
+                 gather/scatter/permute 1×, all-to-all 1×) / 50 GB/s link
+
+``cost_analysis()`` describes the post-SPMD per-device module, so terms are
+per-device seconds directly.  MODEL_FLOPS uses 6·N_active·tokens for train
+and 2·N_active·tokens for inference, divided over devices — the "useful"
+fraction of compiled compute (catches remat/redundancy waste).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.roofline --dir experiments/dryrun \
+        --md experiments/roofline.md --json experiments/roofline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_MODEL_PARAM_CACHE: Dict[str, int] = {}
+
+
+def _active_params(arch: str) -> int:
+    if arch not in _MODEL_PARAM_CACHE:
+        from repro.configs import get_arch
+        from repro.models.model import active_param_count
+
+        _MODEL_PARAM_CACHE[arch] = active_param_count(get_arch(arch).full)
+    return _MODEL_PARAM_CACHE[arch]
+
+
+def _tokens(report: dict) -> int:
+    from repro.configs import get_shape
+
+    shape = get_shape(report["shape"])
+    if shape.kind == "decode":
+        return shape.global_batch  # one new token per sequence
+    return shape.global_batch * shape.seq_len
+
+
+# hand count of the hdiff update per grid point (lap 6 + bilap 6 + fluxes/grads
+# 4×2 + limiter 2×3 + update 5 ≈ 31; extent-extended stages round it up)
+_HDIFF_FLOPS_PER_POINT = 36.0
+
+
+def _stencil_model_flops(report: dict) -> float:
+    gi, gj, nk = (int(x) for x in report["shape"].split("x"))
+    return _HDIFF_FLOPS_PER_POINT * gi * gj * nk / report["devices"]
+
+
+def analyze_report(report: dict) -> dict:
+    devices = report["devices"]
+    walked = report.get("walked")
+    if walked:  # trip-count-aware HLO walk (see launch/hlo_count.py)
+        flops = walked["flops"]
+        hbm_bytes = walked["bytes"]
+        link_bytes = walked["collective_link_bytes"]
+    else:  # legacy: XLA cost_analysis (undercounts while bodies)
+        flops = report.get("cost", {}).get("flops", 0.0)
+        hbm_bytes = report.get("cost", {}).get("bytes_accessed", 0.0)
+        link_bytes = report.get("collective_link_bytes", 0.0)
+    if report["kind"] == "stencil":
+        # stencil flops are elementwise (the walker counts only dots); the
+        # body has no while loops, so XLA's own count is exact here
+        flops = max(flops, report.get("cost", {}).get("flops", 0.0))
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = link_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    if report["kind"] == "stencil":
+        model_flops_dev = _stencil_model_flops(report)
+    else:
+        n_active = _active_params(report["arch"])
+        tokens = _tokens(report)
+        flops_per_tok = 6 if report["kind"] == "train" else 2
+        model_flops_dev = flops_per_tok * n_active * tokens / devices
+    useful_ratio = model_flops_dev / flops if flops else 0.0
+
+    bound_s = max(terms.values())
+    roofline_fraction = (model_flops_dev / PEAK_FLOPS) / bound_s if bound_s else 0.0
+
+    recs = {
+        "compute": "reduce recompute (remat policy) / keep MXU utilization high — "
+                   "ratio below 1 indicates remat or non-model FLOPs",
+        "memory": "increase arithmetic intensity: fuse stages (larger attention/stencil "
+                  "blocks), bf16 activations, avoid materialized logits/score tensors",
+        "collective": "reshard to cut collective payloads (kv-seq vs head-dim sharding, "
+                      "collective-permute instead of all-gather, overlap with compute)",
+    }
+
+    return {
+        **{k: report[k] for k in ("arch", "shape", "mesh", "devices", "kind")},
+        "hlo_flops": flops,
+        "hlo_bytes": hbm_bytes,
+        "collective_link_bytes": link_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_per_device": model_flops_dev,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": roofline_fraction,
+        "memory_gib_per_device": report.get("memory", {}).get("total_per_device_bytes", 0) / 2**30,
+        "note": recs[dominant],
+    }
+
+
+def to_markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | mesh | dominant | compute s | memory s | collective s | "
+           "useful/HLO | roofline frac | GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | **{r['dominant']}** "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['memory_gib_per_device']:.1f} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--json", dest="json_out", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(Path(args.dir).glob("*.json")):
+        report = json.loads(path.read_text())
+        rows.append(analyze_report(report))
+
+    md = to_markdown(rows)
+    print(md)
+    if args.md:
+        Path(args.md).write_text(md)
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

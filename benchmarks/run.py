@@ -1,0 +1,230 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+Paper artifacts reproduced:
+  * Fig. 3 (left):  horizontal diffusion across backends × domain sizes
+  * Fig. 3 (right): implicit vertical advection across backends × domains
+  * Fig. 3 (dashed-vs-solid): run-time argument-validation overhead
+
+System benches beyond the paper:
+  * tiny-LM train-step throughput (tokens/s) per architecture family
+  * distributed halo-exchange stencil on 8 simulated devices (subprocess —
+    jax locks the device count at init, so it gets its own process)
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+import repro  # noqa: E402,F401
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import storage  # noqa: E402
+from repro.stencils.hdiff import build_hdiff  # noqa: E402
+from repro.stencils.vadv import build_vadv  # noqa: E402
+
+ROWS = []
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _time(fn, warmup=2, iters=10) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------------------------------------------------------------
+# paper Fig. 3 left: horizontal diffusion
+# ---------------------------------------------------------------------------
+
+
+def bench_hdiff() -> None:
+    H = 3
+    domains = [(32, 32, 8), (64, 64, 16), (128, 128, 32)]
+    for ni, nj, nk in domains:
+        rng = np.random.default_rng(0)
+        data = rng.normal(size=(ni + 2 * H, nj + 2 * H, nk))
+        pts = ni * nj * nk
+        backends = ["numpy", "jax", "pallas"] + (["debug"] if ni <= 32 else [])
+        for backend in backends:
+            st = build_hdiff(backend)
+            i = storage.from_array(data, backend=backend, default_origin=(H, H, 0))
+            o = storage.zeros(data.shape, backend=backend, default_origin=(H, H, 0))
+
+            def call():
+                st(i, o, alpha=np.float64(0.05), domain=(ni, nj, nk))
+                o.synchronize()
+
+            iters = 1 if backend == "debug" else 10
+            us = _time(call, warmup=1 if backend == "debug" else 2, iters=iters)
+            row(f"hdiff_{backend}_{ni}x{nj}x{nk}", us, f"{pts / us:.0f}pts/us")
+
+
+# ---------------------------------------------------------------------------
+# paper Fig. 3 right: vertical advection (implicit solver)
+# ---------------------------------------------------------------------------
+
+
+def bench_vadv() -> None:
+    domains = [(32, 32, 16), (64, 64, 32), (128, 128, 64)]
+    for ni, nj, nk in domains:
+        rng = np.random.default_rng(1)
+        fields_np = {
+            "a": rng.normal(size=(ni, nj, nk)) * 0.1,
+            "b": 2.0 + rng.random((ni, nj, nk)),
+            "c": rng.normal(size=(ni, nj, nk)) * 0.1,
+            "d": rng.normal(size=(ni, nj, nk)),
+        }
+        pts = ni * nj * nk
+        backends = ["numpy", "jax", "pallas"] + (["debug"] if ni <= 32 else [])
+        for backend in backends:
+            st = build_vadv(backend)
+            fs = {n: storage.from_array(v, backend=backend) for n, v in fields_np.items()}
+            out = storage.zeros((ni, nj, nk), backend=backend)
+
+            def call():
+                st(fs["a"], fs["b"], fs["c"], fs["d"], out, domain=(ni, nj, nk))
+                out.synchronize()
+
+            iters = 1 if backend == "debug" else 10
+            us = _time(call, warmup=1 if backend == "debug" else 2, iters=iters)
+            row(f"vadv_{backend}_{ni}x{nj}x{nk}", us, f"{pts / us:.0f}pts/us")
+
+
+# ---------------------------------------------------------------------------
+# paper Fig. 3 dashed vs solid: argument-validation overhead
+# ---------------------------------------------------------------------------
+
+
+def bench_call_overhead() -> None:
+    H = 3
+    ni = nj = 64
+    nk = 16
+    st = build_hdiff("numpy")
+    data = np.random.default_rng(0).normal(size=(ni + 2 * H, nj + 2 * H, nk))
+    i = storage.from_array(data, default_origin=(H, H, 0))
+    o = storage.zeros(data.shape, default_origin=(H, H, 0))
+    us_checked = _time(lambda: st(i, o, alpha=np.float64(0.05), domain=(ni, nj, nk),
+                                  validate_args=True))
+    us_raw = _time(lambda: st(i, o, alpha=np.float64(0.05), domain=(ni, nj, nk),
+                              validate_args=False))
+    row("hdiff_call_validated", us_checked)
+    row("hdiff_call_raw", us_raw, f"overhead={us_checked - us_raw:.0f}us")
+
+
+# ---------------------------------------------------------------------------
+# LM train-step throughput (reduced configs, CPU)
+# ---------------------------------------------------------------------------
+
+
+def bench_lm_train() -> None:
+    from repro.configs import get_arch
+    from repro.data.pipeline import SyntheticLMDataset
+    from repro.models import build_model
+    from repro.runtime.loop import init_train_state, make_train_step
+
+    for arch in ["phi3-mini-3.8b", "mamba2-370m", "recurrentgemma-2b", "phi3.5-moe-42b-a6.6b"]:
+        cfg = get_arch(arch).reduced
+        model = build_model(cfg)
+        ds = SyntheticLMDataset(
+            vocab=cfg.vocab, seq_len=64, global_batch=4,
+            frames_shape=(cfg.encoder_seq, cfg.d_model) if cfg.is_encdec else None,
+            patches_shape=(cfg.encoder_seq, cfg.d_model) if cfg.frontend == "vision" else None,
+        )
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model), donate_argnums=(0,))
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+        holder = {"state": state}
+
+        def call():
+            holder["state"], metrics = step(holder["state"], batch)
+            jax.block_until_ready(metrics["loss"])
+
+        us = _time(call, warmup=2, iters=5)
+        row(f"train_step_{arch}_reduced", us, f"{4 * 64 / (us / 1e6):.0f}tok/s")
+
+
+# ---------------------------------------------------------------------------
+# distributed halo-exchange stencil (8 simulated devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_DIST_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time, json
+sys.path.insert(0, {src!r})
+import repro
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.stencils.hdiff import build_hdiff
+from repro.stencils.distributed import DistributedStencil
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+st = build_hdiff("jax")
+dist = DistributedStencil(st, mesh, i_axis="data", j_axis="model")
+NI, NJ, NK = 256, 128, 16
+rng = np.random.default_rng(0)
+fields = {{
+    "in_phi": jnp.asarray(rng.normal(size=(NI, NJ, NK))),
+    "out_phi": jnp.zeros((NI, NJ, NK)),
+}}
+scalars = {{"alpha": np.float64(0.05)}}
+out = dist(fields, scalars)  # compile
+jax.block_until_ready(out["out_phi"])
+t0 = time.perf_counter()
+for _ in range(10):
+    out = dist(fields, scalars)
+jax.block_until_ready(out["out_phi"])
+us = (time.perf_counter() - t0) / 10 * 1e6
+print(json.dumps({{"us": us, "devices": 8}}))
+"""
+
+
+def bench_distributed_stencil() -> None:
+    script = _DIST_SCRIPT.format(src=SRC)
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    try:
+        res = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=600, env=env)
+        line = res.stdout.strip().splitlines()[-1]
+        data = json.loads(line)
+        row("hdiff_distributed_8dev_256x128x16", data["us"], "halo-exchange shard_map")
+    except Exception as e:  # noqa: BLE001
+        row("hdiff_distributed_8dev_256x128x16", float("nan"), f"failed: {e}")
+
+
+def main() -> None:
+    bench_hdiff()
+    bench_vadv()
+    bench_call_overhead()
+    bench_lm_train()
+    bench_distributed_stencil()
+    out = Path(__file__).resolve().parent.parent / "experiments"
+    out.mkdir(exist_ok=True)
+    (out / "bench_results.csv").write_text(
+        "name,us_per_call,derived\n" + "\n".join(f"{n},{u:.1f},{d}" for n, u, d in ROWS) + "\n"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving demo: prefill a batch of prompts, decode greedily — the
+hybrid (RecurrentGemma-style) arch shows the O(1)-state decode path.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --gen 48
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch import serve  # noqa: E402
+
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "recurrentgemma-2b", "--gen", "48"])
+    serve.main()

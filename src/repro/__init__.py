@@ -1,0 +1,13 @@
+"""repro — GT4Py-style performance-portable stencil DSL + multi-pod JAX
+training/serving framework.
+
+Weather & climate stencils (the paper's domain) use float64, so x64 is
+enabled globally; all model/kernel code states dtypes explicitly (bf16/f32)
+and is unaffected.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

@@ -1,0 +1,9 @@
+"""Checkpointing substrate: sharded, async, atomic, elastic-restorable."""
+
+from .store import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]

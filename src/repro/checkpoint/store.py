@@ -1,0 +1,182 @@
+"""Checkpoint store: zstd-compressed npz shards with atomic commit + async IO.
+
+Layout::
+
+    <dir>/step_000042/
+        meta.json            # step, pytree structure, leaf manifest
+        shard_00000.npz.zst  # leaf arrays (host-local shard)
+        COMMIT               # written last — partial checkpoints are ignored
+
+Elastic restore: leaves are stored whole (gathered) keyed by pytree path, so
+a checkpoint written on one mesh restores onto any other mesh/topology — the
+target shardings come from the model's logical-axis rules, not from the
+checkpoint (DESIGN.md §5).  Async saves overlap serialization with training.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+import zstandard
+
+_COMMIT = "COMMIT"
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_path_str(p), v) for p, v in flat]
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any, *, keep: int = 3) -> Path:
+    """Synchronous sharded save with atomic COMMIT."""
+    directory = Path(directory)
+    target = directory / f"step_{step:09d}"
+    tmp = directory / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves = _flatten_with_paths(tree)
+    manifest = []
+    cctx = zstandard.ZstdCompressor(level=3)
+    buf_path = tmp / "shard_00000.npz.zst"
+    import io
+
+    raw = io.BytesIO()
+    arrays = {}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"leaf_{i:05d}"
+        arrays[key] = arr
+        manifest.append({"path": path, "key": key, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype)})
+    np.savez(raw, **arrays)
+    buf_path.write_bytes(cctx.compress(raw.getvalue()))
+
+    meta = {
+        "step": step,
+        "format": 1,
+        "leaves": manifest,
+        "written_at": time.time(),
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / _COMMIT).write_text("ok")
+    if target.exists():
+        shutil.rmtree(target)
+    tmp.rename(target)
+    _gc_old(directory, keep)
+    return target
+
+
+def _gc_old(directory: Path, keep: int) -> None:
+    steps = sorted(p for p in directory.glob("step_*") if (p / _COMMIT).exists())
+    for old in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in directory.glob("step_*") if (p / _COMMIT).exists()
+    )
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(directory: str | Path, template: Any, step: Optional[int] = None,
+                    shardings: Any = None) -> Tuple[int, Any]:
+    """Restore into the structure of ``template`` (values ignored).
+
+    ``shardings``: optional pytree of NamedShardings (elastic re-shard onto
+    the current mesh via jax.device_put).
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints under {directory}")
+    src = directory / f"step_{step:09d}"
+    if not (src / _COMMIT).exists():
+        raise FileNotFoundError(f"checkpoint {src} is not committed")
+    meta = json.loads((src / "meta.json").read_text())
+    dctx = zstandard.ZstdDecompressor()
+    import io
+
+    raw = io.BytesIO(dctx.decompress((src / "shard_00000.npz.zst").read_bytes()))
+    arrays = np.load(raw)
+    by_path = {m["path"]: arrays[m["key"]] for m in meta["leaves"]}
+
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves_t, treedef = flat_t
+    out = []
+    missing = []
+    for path, leaf in leaves_t:
+        key = _path_str(path)
+        if key not in by_path:
+            missing.append(key)
+            out.append(leaf)
+            continue
+        arr = by_path[key]
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        out.append(np.asarray(arr, dtype=want_dtype))
+    if missing:
+        raise KeyError(f"checkpoint {src} is missing leaves: {missing[:5]}... "
+                       f"({len(missing)} total)")
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x, tree, shardings
+        )
+    return meta["step"], tree
+
+
+class CheckpointManager:
+    """Async wrapper: save() snapshots to host memory synchronously, writes in
+    a background thread; wait() joins; restore_or_init resumes elastically."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, keep=self.keep)
+            except BaseException as e:  # noqa: BLE001 — surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore_or_init(self, template: Any, init_fn: Callable[[], Any],
+                        shardings: Any = None) -> Tuple[int, Any]:
+        step = latest_step(self.directory)
+        if step is None:
+            return 0, init_fn()
+        return load_checkpoint(self.directory, template, step, shardings)

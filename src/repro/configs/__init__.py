@@ -1,0 +1,19 @@
+"""Config registry: one module per assigned architecture + shape sets +
+the paper's own stencil benchmark suite (stencil_suite)."""
+
+from .base import ArchConfig, ArchEntry, MoEConfig, RGLRUConfig, SSMConfig, get_arch, list_archs
+from .shapes import ALL_SHAPE_IDS, SHAPES, ShapeSpec, get_shape
+
+__all__ = [
+    "ArchConfig",
+    "ArchEntry",
+    "MoEConfig",
+    "RGLRUConfig",
+    "SSMConfig",
+    "get_arch",
+    "list_archs",
+    "SHAPES",
+    "ALL_SHAPE_IDS",
+    "ShapeSpec",
+    "get_shape",
+]

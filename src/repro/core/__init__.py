@@ -1,0 +1,44 @@
+"""repro.core — the paper's primary contribution: a GTScript-style embedded
+stencil DSL with an IR-based analysis pipeline and code-generating backends
+(debug | numpy | jax | pallas), re-targeted from GridTools/CUDA to JAX/TPU.
+"""
+
+from . import gtscript, storage
+from .gtscript import (
+    BACKWARD,
+    FORWARD,
+    IJ,
+    IJK,
+    K,
+    PARALLEL,
+    Field,
+    GTScriptSemanticError,
+    GTScriptSyntaxError,
+    computation,
+    function,
+    interval,
+    lazy_stencil,
+    stencil,
+)
+from .stencil import StencilObject, build_stencil_object
+
+__all__ = [
+    "gtscript",
+    "storage",
+    "Field",
+    "IJK",
+    "IJ",
+    "K",
+    "PARALLEL",
+    "FORWARD",
+    "BACKWARD",
+    "computation",
+    "interval",
+    "function",
+    "stencil",
+    "lazy_stencil",
+    "StencilObject",
+    "build_stencil_object",
+    "GTScriptSyntaxError",
+    "GTScriptSemanticError",
+]

@@ -1,0 +1,412 @@
+"""Analysis pipeline: Definition IR → Implementation IR.
+
+Mirrors the paper's §2.3 pipeline.  Passes, in order:
+
+1. **interval validation** — intervals within a computation must be disjoint
+   and are re-ordered to execution order (ascending for FORWARD/PARALLEL,
+   descending for BACKWARD).
+2. **race / offset checks** — the paper's compile-time access checks:
+   in a PARALLEL computation a statement may not read its own target with a
+   nonzero offset ("self assignment is forbidden ... if it has
+   dependencies"); in FORWARD/BACKWARD computations reads of fields written
+   in the same computation may not look *ahead* of the sweep direction, and
+   may not use horizontal offsets within the defining statement.
+3. **definition checks** — temporaries must be written before read;
+   temporaries first defined inside a conditional are zero-initialized.
+4. **liveness + extent analysis** — demand-driven reverse fixpoint
+   computing, for every field, the region it must be available on
+   (halo for API inputs, compute extent for temporaries); dead temporaries
+   and the statements that only feed them are pruned.
+5. **stage scheduling** — one stage per statement, grouped into
+   multi-stages (one per computation block); adjacent PARALLEL multi-stages
+   with identical interval structure are fused (the GridTools fusion that
+   lets the Pallas backend emit a single VMEM-resident kernel).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import ir
+from .gtscript import GTScriptSemanticError
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: interval validation / normalization
+# ---------------------------------------------------------------------------
+
+
+def _validate_and_sort_intervals(block: ir.ComputationBlock, name: str) -> ir.ComputationBlock:
+    ivs = list(block.intervals)
+    # sort by start bound (large-domain ordering)
+    ivs.sort(key=lambda ib: ib.interval.start.key())
+    for a, b in zip(ivs, ivs[1:]):
+        ka, kb = a.interval.end.key(), b.interval.start.key()
+        # end of a must be <= start of b under large-domain ordering
+        if ka > kb:
+            raise GTScriptSemanticError(
+                f"stencil {name}: overlapping vertical intervals "
+                f"{a.interval} and {b.interval} in a {block.order.name} computation"
+            )
+    if block.order == ir.IterationOrder.BACKWARD:
+        ivs.reverse()
+    return ir.ComputationBlock(order=block.order, intervals=tuple(ivs))
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: race / offset checks
+# ---------------------------------------------------------------------------
+
+
+def _check_stmt_offsets(
+    stmt: ir.Stmt,
+    order: ir.IterationOrder,
+    block_writes: set,
+    name: str,
+) -> None:
+    if isinstance(stmt, ir.If):
+        for s in tuple(stmt.body) + tuple(stmt.orelse):
+            _check_stmt_offsets(s, order, block_writes, name)
+        return
+    if not isinstance(stmt, ir.Assign):
+        return
+    target = stmt.target.name
+    for rname, off in ir.stmt_reads(stmt):
+        di, dj, dk = off
+        if rname == target and off != (0, 0, 0):
+            if order == ir.IterationOrder.PARALLEL:
+                raise GTScriptSemanticError(
+                    f"stencil {name}: statement writing {target!r} reads it at offset {off} "
+                    "in a PARALLEL computation (self-assignment with dependencies, paper §2.2)"
+                )
+            if (di, dj) != (0, 0):
+                raise GTScriptSemanticError(
+                    f"stencil {name}: statement writing {target!r} reads it at horizontal offset "
+                    f"{(di, dj)} — the horizontal plane executes in parallel"
+                )
+        if rname in block_writes and rname != target:
+            # cross-statement reads of block-written fields: whole-plane stage
+            # semantics make same-level / already-swept levels well defined;
+            # looking ahead of the sweep is a compile-time error.
+            pass
+        if rname in block_writes:
+            if order == ir.IterationOrder.FORWARD and dk > 0:
+                raise GTScriptSemanticError(
+                    f"stencil {name}: read of {rname}[{di},{dj},{dk}] looks ahead of a FORWARD sweep "
+                    f"that writes {rname!r}"
+                )
+            if order == ir.IterationOrder.BACKWARD and dk < 0:
+                raise GTScriptSemanticError(
+                    f"stencil {name}: read of {rname}[{di},{dj},{dk}] looks behind a BACKWARD sweep "
+                    f"that writes {rname!r}"
+                )
+            if order == ir.IterationOrder.PARALLEL and rname == target and dk != 0:
+                raise GTScriptSemanticError(
+                    f"stencil {name}: vertical self-dependency {rname}[{di},{dj},{dk}] "
+                    "in a PARALLEL computation"
+                )
+
+
+def _check_races(definition: ir.StencilDefinition) -> None:
+    for block in definition.computations:
+        block_writes: set = set()
+        for ib in block.intervals:
+            for s in ib.body:
+                block_writes.update(ir.stmt_writes(s))
+        for ib in block.intervals:
+            for s in ib.body:
+                _check_stmt_offsets(s, block.order, block_writes, definition.name)
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: definition checks (use-before-def, conditional first definitions)
+# ---------------------------------------------------------------------------
+
+
+def _definition_checks(definition: ir.StencilDefinition) -> Tuple[str, ...]:
+    api = {f.name for f in definition.api_fields if f.is_api}
+    temps = {f.name for f in definition.api_fields if not f.is_api}
+    defined: set = set(api)
+    zero_init: List[str] = []
+
+    def _walk(stmts: Sequence[ir.Stmt], conditional: bool) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, ir.Assign):
+                for rname, _off in ir.stmt_reads(stmt):
+                    if rname in temps and rname not in defined:
+                        raise GTScriptSemanticError(
+                            f"stencil {definition.name}: temporary {rname!r} read before definition"
+                        )
+                if conditional and stmt.target.name in temps and stmt.target.name not in defined:
+                    if stmt.target.name not in zero_init:
+                        zero_init.append(stmt.target.name)
+                defined.add(stmt.target.name)
+            elif isinstance(stmt, ir.If):
+                for rname, _off in (
+                    (e.name, e.offset) for e in ir.walk_exprs(stmt.cond) if isinstance(e, ir.FieldAccess)
+                ):
+                    if rname in temps and rname not in defined:
+                        raise GTScriptSemanticError(
+                            f"stencil {definition.name}: temporary {rname!r} read before definition"
+                        )
+                _walk(stmt.body, True)
+                _walk(stmt.orelse, True)
+
+    for block in definition.computations:
+        for ib in block.intervals:
+            _walk(ib.body, False)
+    return tuple(zero_init)
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: liveness + extent analysis (demand-driven reverse fixpoint)
+# ---------------------------------------------------------------------------
+
+
+_MAX_FIXPOINT_ITERS = 64
+
+
+def _compute_extents(
+    definition: ir.StencilDefinition,
+) -> Tuple[Dict[str, Optional[ir.Extent]], Dict[int, ir.Extent]]:
+    """Returns (required extent per field | None if dead, compute extent per stmt id)."""
+    api = {f.name for f in definition.api_fields if f.is_api}
+
+    # flatten statements in program order, remembering identity + block order
+    flat: List[ir.Stmt] = []
+    stmt_order: Dict[int, ir.IterationOrder] = {}
+    for block in definition.computations:
+        for ib in block.intervals:
+            for s in ib.body:
+                flat.append(s)
+                stmt_order[id(s)] = block.order
+
+    required: Dict[str, Optional[ir.Extent]] = {}
+    for block in definition.computations:
+        for ib in block.intervals:
+            for s in ib.body:
+                for w in ir.stmt_writes(s):
+                    if w in api:
+                        required[w] = ir.Extent.zero()
+
+    stmt_extent: Dict[int, ir.Extent] = {}
+
+    for it in range(_MAX_FIXPOINT_ITERS):
+        changed = False
+        for stmt in reversed(flat):
+            writes = list(ir.stmt_writes(stmt))
+            live = any(required.get(w) is not None for w in writes)
+            if not live:
+                continue
+            ext = ir.Extent.zero()
+            for w in writes:
+                r = required.get(w)
+                if r is None:
+                    continue
+                # API fields are only ever written on the compute domain
+                # (writes never touch the halo); temporaries are computed on
+                # their full required extent.
+                ext = ext.union(ir.Extent.zero() if w in api else r)
+            prev = stmt_extent.get(id(stmt))
+            if prev is None or prev != ext:
+                stmt_extent[id(stmt)] = ext if prev is None else prev.union(ext)
+                ext = stmt_extent[id(stmt)]
+                changed = changed or (prev != ext)
+            ext = stmt_extent[id(stmt)]
+            sequential = stmt_order[id(stmt)] != ir.IterationOrder.PARALLEL
+            for rname, off in ir.stmt_reads(stmt):
+                if sequential:
+                    # vertical offsets in FORWARD/BACKWARD sweeps read levels
+                    # already computed inside the domain — they are loop-carried
+                    # dependencies, not halo reads, and must not grow extents.
+                    off = (off[0], off[1], 0)
+                nreq = ext.add_offset(off)
+                old = required.get(rname)
+                new = nreq if old is None else old.union(nreq)
+                if old != new:
+                    required[rname] = new
+                    changed = True
+        if not changed:
+            break
+    else:
+        raise GTScriptSemanticError(
+            f"stencil {definition.name}: extent analysis did not converge — a field's halo "
+            "grows with every vertical level (vertically-propagating horizontal dependency); "
+            "this pattern is not supported"
+        )
+
+    for name in api:
+        required.setdefault(name, None)
+    return required, stmt_extent
+
+
+# ---------------------------------------------------------------------------
+# Pass 5: stage scheduling + fusion
+# ---------------------------------------------------------------------------
+
+
+def _build_stages(
+    definition: ir.StencilDefinition,
+    stmt_extent: Dict[int, ir.Extent],
+) -> List[ir.MultiStage]:
+    multi_stages: List[ir.MultiStage] = []
+    for block in definition.computations:
+        ms_intervals: List[ir.MultiStageInterval] = []
+        for ib in block.intervals:
+            stages: List[ir.Stage] = []
+            for stmt in ib.body:
+                ext = stmt_extent.get(id(stmt))
+                if ext is None:
+                    continue  # dead statement (feeds only unused temporaries)
+                stages.append(
+                    ir.Stage(
+                        stmts=(stmt,),
+                        compute_extent=ext,
+                        writes=tuple(sorted(set(ir.stmt_writes(stmt)))),
+                        reads=tuple(sorted({r for r, _ in ir.stmt_reads(stmt)})),
+                    )
+                )
+            if stages:
+                ms_intervals.append(ir.MultiStageInterval(interval=ib.interval, stages=tuple(stages)))
+        if ms_intervals:
+            multi_stages.append(ir.MultiStage(order=block.order, intervals=tuple(ms_intervals)))
+    return multi_stages
+
+
+def _fuse_parallel_multistages(multi_stages: List[ir.MultiStage]) -> List[ir.MultiStage]:
+    """Fuse adjacent PARALLEL multi-stages with identical interval structure.
+
+    This is the GridTools multi-stage fusion that lets a backend keep all
+    intermediate stages resident in fast memory (VMEM on TPU).
+    """
+    fused: List[ir.MultiStage] = []
+    for ms in multi_stages:
+        if (
+            fused
+            and ms.order == ir.IterationOrder.PARALLEL
+            and fused[-1].order == ir.IterationOrder.PARALLEL
+            and tuple(i.interval for i in fused[-1].intervals) == tuple(i.interval for i in ms.intervals)
+        ):
+            prev = fused.pop()
+            merged = tuple(
+                ir.MultiStageInterval(interval=a.interval, stages=tuple(a.stages) + tuple(b.stages))
+                for a, b in zip(prev.intervals, ms.intervals)
+            )
+            fused.append(ir.MultiStage(order=ir.IterationOrder.PARALLEL, intervals=merged))
+        else:
+            fused.append(ms)
+    return fused
+
+
+# ---------------------------------------------------------------------------
+# Vertical bounds (the paper's compile-time offset checks, K axis)
+# ---------------------------------------------------------------------------
+
+
+def _check_vertical_bounds(definition: ir.StencilDefinition) -> int:
+    """Statically verify vertical reads stay inside [0, nk); returns the
+    extra min-k-levels requirement implied by cross-boundary offsets."""
+    temps = {f.name for f in definition.api_fields if not f.is_api}
+    extra_min_k = 1
+    for block in definition.computations:
+        for ib in block.intervals:
+            s, e = ib.interval.start, ib.interval.end
+            for stmt in ib.body:
+                for rname, off in ir.stmt_reads(stmt):
+                    dk = off[2]
+                    if dk == 0 or rname in temps:
+                        continue  # temporaries are allocated k-extended
+                    if dk < 0:
+                        if s.level == ir.LevelMarker.START and s.offset + dk < 0:
+                            raise GTScriptSemanticError(
+                                f"stencil {definition.name}: read {rname}[k{dk:+d}] from interval "
+                                f"starting at level {s.offset} reaches below the vertical domain"
+                            )
+                        if s.level == ir.LevelMarker.END:
+                            extra_min_k = max(extra_min_k, -(s.offset + dk))
+                    else:
+                        if e.level == ir.LevelMarker.END and e.offset + dk > 0:
+                            raise GTScriptSemanticError(
+                                f"stencil {definition.name}: read {rname}[k+{dk}] from interval "
+                                f"ending at level end{e.offset:+d} reaches above the vertical domain"
+                            )
+                        if e.level == ir.LevelMarker.START:
+                            extra_min_k = max(extra_min_k, e.offset + dk)
+    return extra_min_k
+
+
+# ---------------------------------------------------------------------------
+# K-extent bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def _k_extents(definition: ir.StencilDefinition) -> Dict[str, Tuple[int, int]]:
+    kext: Dict[str, Tuple[int, int]] = {}
+    for block in definition.computations:
+        for ib in block.intervals:
+            for s in ib.body:
+                for rname, off in ir.stmt_reads(s):
+                    lo, hi = kext.get(rname, (0, 0))
+                    kext[rname] = (min(lo, off[2]), max(hi, off[2]))
+    return kext
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def analyze(definition: ir.StencilDefinition, fuse: bool = True) -> ir.StencilImplementation:
+    # 1. intervals
+    blocks = tuple(_validate_and_sort_intervals(b, definition.name) for b in definition.computations)
+    definition = ir.StencilDefinition(
+        name=definition.name,
+        api_fields=definition.api_fields,
+        scalars=definition.scalars,
+        computations=blocks,
+        externals=definition.externals,
+        docstring=definition.docstring,
+    )
+
+    # 2. races / offsets
+    _check_races(definition)
+
+    # 3. definitions
+    zero_init = _definition_checks(definition)
+
+    # 4. liveness + extents
+    required, stmt_extent = _compute_extents(definition)
+
+    # 5. stages
+    multi_stages = _build_stages(definition, stmt_extent)
+    if fuse:
+        multi_stages = _fuse_parallel_multistages(multi_stages)
+
+    api_fields = tuple(f for f in definition.api_fields if f.is_api)
+    live_temps = tuple(
+        f for f in definition.api_fields if not f.is_api and required.get(f.name) is not None
+    )
+
+    field_extents = tuple(
+        sorted((name, ext) for name, ext in required.items() if ext is not None)
+    )
+    kext = _k_extents(definition)
+    k_extents = tuple(sorted((name, rng) for name, rng in kext.items()))
+
+    min_k = _check_vertical_bounds(definition)
+    for block in definition.computations:
+        for ib in block.intervals:
+            min_k = max(min_k, ib.interval.min_levels())
+
+    return ir.StencilImplementation(
+        name=definition.name,
+        api_fields=api_fields,
+        temporaries=live_temps,
+        scalars=definition.scalars,
+        multi_stages=tuple(multi_stages),
+        field_extents=field_extents,
+        k_extents=k_extents,
+        externals=definition.externals,
+        min_k_levels=min_k,
+        zero_init_temps=tuple(t for t in zero_init if any(f.name == t for f in live_temps)),
+    )

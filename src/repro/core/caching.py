@@ -1,0 +1,72 @@
+"""Structural fingerprint cache for generated stencil modules.
+
+Per the paper (§2.3): stencils are hashed so that *reformatting* the Python
+source does not trigger re-codegen — the fingerprint is computed from the
+(normalized) Definition IR, not from source text.  Generated modules are
+written to a cache directory as real ``.py`` files (inspectable, steppable)
+and re-imported on subsequent runs if the fingerprint matches.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import importlib.util
+import os
+import sys
+import threading
+from pathlib import Path
+from types import ModuleType
+from typing import Any, Dict, Optional
+
+from . import ir
+
+_CACHE_VERSION = "repro-gt-1"
+_lock = threading.Lock()
+_memory_cache: Dict[str, ModuleType] = {}
+
+
+def cache_dir() -> Path:
+    root = os.environ.get("REPRO_GT_CACHE")
+    if root:
+        p = Path(root)
+    else:
+        p = Path.home() / ".cache" / "repro_gt"
+    p.mkdir(parents=True, exist_ok=True)
+    return p
+
+
+def fingerprint(definition: ir.StencilDefinition, backend: str, options: Optional[Dict[str, Any]] = None) -> str:
+    payload = "|".join(
+        [
+            _CACHE_VERSION,
+            backend,
+            repr(definition),
+            repr(sorted((options or {}).items())),
+        ]
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def load_generated_module(name: str, fp: str, source: str, rebuild: bool = False) -> ModuleType:
+    """Write ``source`` to the cache (if needed) and import it as a module."""
+    key = f"{name}_{fp}"
+    with _lock:
+        if not rebuild and key in _memory_cache:
+            return _memory_cache[key]
+        module_name = f"_repro_gt_{key}"
+        try:
+            path = cache_dir() / f"{key}.py"
+            if rebuild or not path.exists() or path.read_text() != source:
+                path.write_text(source)
+            spec = importlib.util.spec_from_file_location(module_name, path)
+            assert spec and spec.loader
+            module = importlib.util.module_from_spec(spec)
+            sys.modules[module_name] = module
+            spec.loader.exec_module(module)
+        except OSError:
+            # read-only filesystem: exec in-memory
+            module = ModuleType(module_name)
+            module.__dict__["__file__"] = f"<generated {key}>"
+            exec(compile(source, f"<generated {key}>", "exec"), module.__dict__)
+        _memory_cache[key] = module
+        return module

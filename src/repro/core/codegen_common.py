@@ -1,0 +1,339 @@
+"""Shared source-generation machinery for the array backends (numpy / jax).
+
+Backends generate *actual Python source* (inspectable via
+``StencilObject.generated_source``, cached on disk by ``caching.py``), in the
+spirit of the paper's code-generating toolchain.
+
+Conventions of generated ``run()`` functions
+--------------------------------------------
+* ``fields``  : dict name → array, full storage *including halo*
+* ``scalars`` : dict name → python/np scalar
+* ``domain``  : (ni, nj, nk) compute-domain size (python ints → static)
+* ``origins`` : dict name → (oi, oj, ok) offset of the compute-domain origin
+  inside each field's storage
+
+Field reads at relative offset (di, dj, dk) from a stage with compute extent
+((ilo, ihi), (jlo, jhi)) over vertical interval [k0, k1) become slices::
+
+    arr[o_i + ilo + di : o_i + ni + ihi + di,
+        o_j + jlo + dj : o_j + nj + jhi + dj,
+        o_k + k0 + dk  : o_k + k1 + dk]          # PARALLEL (3D block)
+
+or, in sequential (FORWARD/BACKWARD) multi-stages, 2D planes at a loop-
+carried level ``k``.  Temporaries are allocated inside ``run`` extended by
+their required extents, with origins shifted accordingly.
+"""
+
+from __future__ import annotations
+
+import io
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import ir
+
+
+def _c(off: int) -> str:
+    """Format '+ n' / '- n' / '' for a constant offset inside a slice."""
+    if off == 0:
+        return ""
+    return f" + {off}" if off > 0 else f" - {-off}"
+
+
+def bound_expr(b: ir.AxisBound) -> str:
+    if b.level == ir.LevelMarker.START:
+        return str(b.offset)
+    return f"nk{_c(b.offset)}" if b.offset else "nk"
+
+
+class Emitter:
+    def __init__(self) -> None:
+        self._buf = io.StringIO()
+        self._indent = 0
+
+    def line(self, s: str = "") -> None:
+        self._buf.write(("    " * self._indent) + s + "\n" if s else "\n")
+
+    def push(self) -> None:
+        self._indent += 1
+
+    def pop(self) -> None:
+        self._indent -= 1
+
+    def source(self) -> str:
+        return self._buf.getvalue()
+
+
+class ArrayExprPrinter:
+    """Prints ir.Expr as vectorized numpy/jnp source.
+
+    ``mode`` is "block" (PARALLEL: 3D region over [k0, k1)) or "plane"
+    (sequential: 2D region at level variable ``k``).
+    """
+
+    def __init__(
+        self,
+        impl: ir.StencilImplementation,
+        lib: str,  # 'np' | 'jnp'
+        axes_of: Dict[str, Tuple[str, ...]],
+        dtype_of: Dict[str, str],
+    ):
+        self.impl = impl
+        self.lib = lib
+        self.axes_of = axes_of
+        self.dtype_of = dtype_of
+        self.mode = "block"
+        self.extent: ir.Extent = ir.Extent.zero()
+        self.k0 = "_k0"
+        self.k1 = "_k1"
+        self.used_helpers: set = set()
+
+    # -- region slices ---------------------------------------------------------
+
+    def _hslices(self, name: str, di: int, dj: int) -> Tuple[str, str]:
+        (ilo, ihi), (jlo, jhi), _ = self.extent.as_tuple()
+        si = f"_oi_{name}{_c(ilo + di)}:_oi_{name} + ni{_c(ihi + di)}"
+        sj = f"_oj_{name}{_c(jlo + dj)}:_oj_{name} + nj{_c(jhi + dj)}"
+        return si, sj
+
+    def _kslice(self, name: str, dk: int) -> str:
+        if self.mode == "block":
+            return f"_ok_{name} + {self.k0}{_c(dk)}:_ok_{name} + {self.k1}{_c(dk)}"
+        return f"_ok_{name} + k{_c(dk)}"
+
+    def read(self, fa: ir.FieldAccess) -> str:
+        name = fa.name
+        di, dj, dk = fa.offset
+        axes = self.axes_of[name]
+        if axes == ("I", "J", "K"):
+            si, sj = self._hslices(name, di, dj)
+            return f"{name}[{si}, {sj}, {self._kslice(name, dk)}]"
+        if axes == ("I", "J"):
+            si, sj = self._hslices(name, di, dj)
+            if self.mode == "block":
+                return f"{name}[{si}, {sj}, None]"
+            return f"{name}[{si}, {sj}]"
+        if axes == ("K",):
+            if self.mode == "block":
+                return f"{name}[None, None, {self._kslice(name, dk)}]"
+            return f"{name}[{self._kslice(name, dk)}]"
+        raise NotImplementedError(f"axes {axes}")
+
+    def write_target(self, name: str) -> str:
+        axes = self.axes_of[name]
+        if axes == ("I", "J", "K"):
+            si, sj = self._hslices(name, 0, 0)
+            return f"{name}[{si}, {sj}, {self._kslice(name, 0)}]"
+        if axes == ("I", "J"):
+            si, sj = self._hslices(name, 0, 0)
+            return f"{name}[{si}, {sj}]"
+        if axes == ("K",):
+            return f"{name}[{self._kslice(name, 0)}]"
+        raise NotImplementedError(f"axes {axes}")
+
+    def write_starts_shape(self, name: str) -> Tuple[str, str]:
+        """(start-indices tuple expr, region shape tuple expr) for functional
+        writes via lax.dynamic_update_slice (Pallas kernels may not capture
+        the scatter constants `.at[].set()` would create)."""
+        axes = self.axes_of[name]
+        (ilo, ihi), (jlo, jhi), _ = self.extent.as_tuple()
+        si = f"_oi_{name}{_c(ilo)}"
+        sj = f"_oj_{name}{_c(jlo)}"
+        di = f"ni{_c(ihi - ilo)}"
+        dj = f"nj{_c(jhi - jlo)}"
+        if self.mode == "block":
+            sk = f"_ok_{name} + {self.k0}"
+            dk = f"{self.k1} - {self.k0}"
+        else:
+            sk = f"_ok_{name} + k"
+            dk = "1"
+        if axes == ("I", "J", "K"):
+            return f"({si}, {sj}, {sk})", f"({di}, {dj}, {dk})"
+        if axes == ("I", "J"):
+            return f"({si}, {sj})", f"({di}, {dj})"
+        if axes == ("K",):
+            return f"({sk},)", f"({dk},)"
+        raise NotImplementedError(f"axes {axes}")
+
+    # -- expressions -----------------------------------------------------------
+
+    def expr(self, e: ir.Expr) -> str:
+        lib = self.lib
+        if isinstance(e, ir.Literal):
+            if e.dtype == "bool":
+                return "True" if e.value else "False"
+            return repr(e.value)
+        if isinstance(e, ir.ScalarRef):
+            return e.name
+        if isinstance(e, ir.FieldAccess):
+            return self.read(e)
+        if isinstance(e, ir.UnaryOp):
+            if e.op == "not":
+                return f"{lib}.logical_not({self.expr(e.operand)})"
+            return f"({e.op}{self.expr(e.operand)})"
+        if isinstance(e, ir.BinOp):
+            if e.op == "and":
+                return f"{lib}.logical_and({self.expr(e.left)}, {self.expr(e.right)})"
+            if e.op == "or":
+                return f"{lib}.logical_or({self.expr(e.left)}, {self.expr(e.right)})"
+            return f"({self.expr(e.left)} {e.op} {self.expr(e.right)})"
+        if isinstance(e, ir.TernaryOp):
+            return f"{lib}.where({self.expr(e.cond)}, {self.expr(e.true_expr)}, {self.expr(e.false_expr)})"
+        if isinstance(e, ir.NativeCall):
+            return self._native(e)
+        if isinstance(e, ir.Cast):
+            self.used_helpers.add("cast")
+            return f"_cast({self.expr(e.expr)}, '{e.dtype}')"
+        raise NotImplementedError(f"expr {type(e)}")
+
+    def _native(self, e: ir.NativeCall) -> str:
+        lib = self.lib
+        args = ", ".join(self.expr(a) for a in e.args)
+        fn = e.func
+        if fn == "min":
+            return f"{lib}.minimum({args})"
+        if fn == "max":
+            return f"{lib}.maximum({args})"
+        if fn == "abs":
+            return f"{lib}.abs({args})"
+        if fn == "mod":
+            return f"{lib}.mod({args})"
+        if fn == "pow":
+            return f"{lib}.power({args})"
+        if fn == "sigmoid":
+            self.used_helpers.add("sigmoid")
+            return f"_sigmoid({args})"
+        if fn in ("erf", "erfc"):
+            self.used_helpers.add(fn)
+            return f"_{fn}({args})"
+        if fn == "gamma":
+            self.used_helpers.add("gamma")
+            return f"_gamma({args})"
+        return f"{lib}.{fn}({args})"
+
+
+class ArrayStmtEmitter:
+    """Emits statements for one (multi-stage, interval) context."""
+
+    def __init__(self, printer: ArrayExprPrinter, em: Emitter, functional: bool):
+        self.p = printer
+        self.em = em
+        # functional=True (jax): writes rebind names via .at[].set();
+        # functional=False (numpy): writes mutate slices in place.
+        self.functional = functional
+        self._mask_counter = 0
+
+    def assign(self, stmt: ir.Assign, mask: Optional[str]) -> None:
+        p = self.p
+        name = stmt.target.name
+        value = p.expr(stmt.value)
+        if mask is not None:
+            old = p.read(ir.FieldAccess(name, (0, 0, 0)))
+            value = f"{p.lib}.where({mask}, {value}, {old})"
+        if self.functional:
+            p.used_helpers.add("dus")
+            starts, shape = p.write_starts_shape(name)
+            self.em.line(f"{name} = _dus({name}, {value}, {starts}, {shape})")
+        else:
+            tgt = p.write_target(name)
+            self.em.line(f"{tgt} = {value}")
+
+    def if_stmt(self, stmt: ir.If, mask: Optional[str]) -> None:
+        p = self.p
+        self._mask_counter += 1
+        mv = f"_mask_{self._mask_counter}"
+        cond = p.expr(stmt.cond)
+        self.em.line(f"{mv} = {cond}")
+        then_mask = mv if mask is None else f"{p.lib}.logical_and({mask}, {mv})"
+        if mask is not None:
+            then_v = f"_mask_{self._mask_counter}_t"
+            self.em.line(f"{then_v} = {then_mask}")
+            then_mask = then_v
+        for s in stmt.body:
+            self.stmt(s, then_mask)
+        if stmt.orelse:
+            else_mask = f"{p.lib}.logical_not({mv})"
+            if mask is not None:
+                else_mask = f"{p.lib}.logical_and({mask}, {else_mask})"
+            else_v = f"_mask_{self._mask_counter}_e"
+            self.em.line(f"{else_v} = {else_mask}")
+            for s in stmt.orelse:
+                self.stmt(s, else_v)
+
+    def stmt(self, stmt: ir.Stmt, mask: Optional[str] = None) -> None:
+        if isinstance(stmt, ir.Assign):
+            self.assign(stmt, mask)
+        elif isinstance(stmt, ir.If):
+            self.if_stmt(stmt, mask)
+        else:
+            raise NotImplementedError(type(stmt))
+
+
+# ---------------------------------------------------------------------------
+# Shared preamble / allocation helpers
+# ---------------------------------------------------------------------------
+
+
+def temp_alloc_shape(impl: ir.StencilImplementation, name: str) -> Tuple[str, Tuple[int, int, int]]:
+    """Returns (shape_expr, origin) for a temporary field."""
+    ext = impl.extent_of(name)
+    (ilo, ihi), (jlo, jhi), (klo, khi) = ext.as_tuple()
+    axes = impl.field(name).axes
+    oi, oj, ok = -ilo, -jlo, -klo
+    if axes == ("I", "J", "K"):
+        shape = f"(ni{_c(ihi - ilo)}, nj{_c(jhi - jlo)}, nk{_c(khi - klo)})"
+        return shape, (oi, oj, ok)
+    if axes == ("I", "J"):
+        shape = f"(ni{_c(ihi - ilo)}, nj{_c(jhi - jlo)})"
+        return shape, (oi, oj, 0)
+    if axes == ("K",):
+        shape = f"(nk{_c(khi - klo)},)"
+        return shape, (0, 0, ok)
+    raise NotImplementedError(axes)
+
+
+def emit_helpers(em: Emitter, used: set, lib: str) -> None:
+    if "dus" in used:
+        em.line("def _dus(arr, val, starts, shape):")
+        em.push()
+        em.line("val = jnp.asarray(val, dtype=arr.dtype)")
+        em.line("if val.ndim == len(shape) - 1:")
+        em.push()
+        em.line("val = val[..., None]")
+        em.pop()
+        em.line("val = jnp.broadcast_to(val, shape)")
+        em.line("return lax.dynamic_update_slice(arr, val, starts)")
+        em.pop()
+    if "cast" in used:
+        em.line(f"def _cast(x, dt):")
+        em.push()
+        em.line(f"return {lib}.asarray(x).astype(dt)")
+        em.pop()
+    if "sigmoid" in used:
+        em.line("def _sigmoid(x):")
+        em.push()
+        em.line(f"return 1.0 / (1.0 + {lib}.exp(-x))")
+        em.pop()
+    if "erf" in used or "erfc" in used:
+        if lib == "np":
+            em.line("import math as _math")
+            em.line("_erf = _np_vectorize_erf = __import__('numpy').vectorize(_math.erf)")
+            em.line("def _erfc(x):")
+            em.push()
+            em.line("return 1.0 - _erf(x)")
+            em.pop()
+        else:
+            em.line("from jax.scipy.special import erf as _erf")
+            em.line("def _erfc(x):")
+            em.push()
+            em.line("return 1.0 - _erf(x)")
+            em.pop()
+
+
+def multistage_plan(ms: ir.MultiStage) -> str:
+    """Human-readable schedule line for the generated source header."""
+    parts = []
+    for itv in ms.intervals:
+        parts.append(
+            f"[{bound_expr(itv.interval.start)}, {bound_expr(itv.interval.end)}) × {len(itv.stages)} stages"
+        )
+    return f"{ms.order.name}: " + "; ".join(parts)

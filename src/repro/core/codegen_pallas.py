@@ -1,0 +1,373 @@
+"""Pallas TPU backend: the analogue of the paper's ``gtcuda`` code generator.
+
+TPU adaptation of the GridTools GPU schedule (see DESIGN.md §2):
+
+* The horizontal (i, j) plane is tiled over a 2-D Pallas grid; each grid cell
+  DMAs its *tile + halo* from HBM (inputs live in ``ANY`` memory space) into
+  VMEM scratch with ``pltpu.make_async_copy`` — TPU blocks cannot overlap, so
+  the CUDA shared-memory halo load becomes an explicit strided DMA.
+* All multi-stages of the stencil execute **fused** inside one kernel while
+  the tile is VMEM-resident: intermediate stages (temporaries) never touch
+  HBM.  This is the GridTools fusion argument restated for the TPU memory
+  hierarchy — the memory-roofline win of the backend.
+* PARALLEL multi-stages vectorize over the whole (tile_i, tile_j, k) block;
+  FORWARD/BACKWARD multi-stages run a ``lax.fori_loop`` over k carrying the
+  written planes (thread-per-column on GPUs → plane-per-level on the 8×128
+  VPU).
+* Outputs are written back through regular non-overlapping BlockSpecs.
+
+Limitations (documented): written API fields may not be read at nonzero
+horizontal offsets (allocate a temporary instead); TPU hardware wants
+float32/bfloat16 — float64 kernels run under ``interpret=True`` only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from . import ir
+from .codegen_common import (
+    ArrayExprPrinter,
+    ArrayStmtEmitter,
+    Emitter,
+    _c,
+    bound_expr,
+    emit_helpers,
+    multistage_plan,
+)
+from .gtscript import GTScriptSemanticError
+
+
+def _reads_of(impl: ir.StencilImplementation) -> Dict[str, List[Tuple[int, int, int]]]:
+    reads: Dict[str, List[Tuple[int, int, int]]] = {}
+    for ms in impl.multi_stages:
+        for itv in ms.intervals:
+            for st in itv.stages:
+                for stmt in st.stmts:
+                    for n, off in ir.stmt_reads(stmt):
+                        reads.setdefault(n, []).append(off)
+    return reads
+
+
+def _writes_of(impl: ir.StencilImplementation) -> List[str]:
+    out: List[str] = []
+    for ms in impl.multi_stages:
+        for itv in ms.intervals:
+            for st in itv.stages:
+                for w in st.writes:
+                    if w not in out:
+                        out.append(w)
+    return out
+
+
+def generate_pallas_source(
+    impl: ir.StencilImplementation,
+    block: Tuple[int, int] = (8, 128),
+) -> str:
+    api_names = {f.name: f for f in impl.api_fields}
+    reads = _reads_of(impl)
+    writes = _writes_of(impl)
+    written_api = [w for w in writes if w in api_names]
+    read_api = [f.name for f in impl.api_fields if f.name in reads]
+    # API fields that are both read and written need their tile DMA'd in as
+    # the initial value of the functional in-kernel array.
+    inout_api = [n for n in written_api if n in reads]
+    input_api = [n for n in read_api if n not in written_api] + inout_api
+
+    for n in written_api:
+        for off in reads.get(n, []):
+            if (off[0], off[1]) != (0, 0):
+                raise GTScriptSemanticError(
+                    f"pallas backend: written API field {n!r} is read at horizontal offset "
+                    f"{off}; stage the value through a temporary instead"
+                )
+
+    # vertical reads stay in-domain (analysis._check_vertical_bounds) and the
+    # DMA always carries the full column, so only the horizontal halo matters.
+    H = max(impl.max_halo[0], impl.max_halo[1])
+
+    axes_of = {f.name: f.axes for f in impl.all_fields}
+    dtype_of = {f.name: f.dtype for f in impl.all_fields}
+    for n in list(api_names) :
+        if axes_of[n] not in (("I", "J", "K"), ("I", "J"), ("K",)):
+            raise GTScriptSemanticError(f"pallas backend: unsupported axes {axes_of[n]} for {n!r}")
+
+    printer = ArrayExprPrinter(impl, "jnp", axes_of, dtype_of)
+
+    # ---------------- kernel body ----------------
+    kb = Emitter()
+    kb.push()  # inside def _make_kernel
+    kb.push()  # inside def _kernel
+    kb.line("ni, nj = _BI, _BJ")
+    kb.line("nk = _NK")
+    kb.line("gi = pl.program_id(0)")
+    kb.line("gj = pl.program_id(1)")
+    # DMA input tiles (tile + halo) HBM→VMEM
+    for n in input_api:
+        axes = axes_of[n]
+        if axes == ("K",):
+            continue  # K fields arrive whole in VMEM
+        if axes == ("I", "J"):
+            src = f"{n}_hbm.at[pl.ds(gi * _BI, _BI + 2 * _H), pl.ds(gj * _BJ, _BJ + 2 * _H)]"
+        else:
+            src = f"{n}_hbm.at[pl.ds(gi * _BI, _BI + 2 * _H), pl.ds(gj * _BJ, _BJ + 2 * _H), :]"
+        kb.line(f"_cp_{n} = pltpu.make_async_copy({src}, _s_{n}, _dma_sem)")
+        kb.line(f"_cp_{n}.start()")
+    for n in input_api:
+        if axes_of[n] == ("K",):
+            continue
+        kb.line(f"_cp_{n}.wait()")
+    # bind in-kernel arrays + origins
+    for n in read_api + written_api:
+        axes = axes_of[n]
+        if n in written_api:
+            if axes == ("I", "J", "K"):
+                shape, origin = "(ni, nj, nk)", (0, 0, 0)
+            elif axes == ("I", "J"):
+                shape, origin = "(ni, nj)", (0, 0, 0)
+            else:
+                shape, origin = "(nk,)", (0, 0, 0)
+            if n in inout_api:
+                if axes == ("I", "J", "K"):
+                    kb.line(f"{n} = _s_{n}[_H:_H + ni, _H:_H + nj, :]")
+                elif axes == ("I", "J"):
+                    kb.line(f"{n} = _s_{n}[_H:_H + ni, _H:_H + nj]")
+                else:
+                    kb.line(f"{n} = {n}_vmem[...]")
+            else:
+                kb.line(f"{n} = jnp.zeros({shape}, dtype='{dtype_of[n]}')")
+            kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = {origin}")
+        else:
+            axes = axes_of[n]
+            if axes == ("K",):
+                kb.line(f"{n} = {n}_vmem[...]")
+                kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = (0, 0, 0)")
+            else:
+                kb.line(f"{n} = _s_{n}[...]")
+                kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = (_H, _H, 0)")
+    for s in impl.scalars:
+        kb.line(f"{s.name} = {s.name}_smem[0]")
+    # temporaries (in-tile, VMEM-resident — the fusion payoff)
+    for t in impl.temporaries:
+        ext = impl.extent_of(t.name)
+        (ilo, ihi), (jlo, jhi), (klo, khi) = ext.as_tuple()
+        axes = axes_of[t.name]
+        if axes == ("I", "J", "K"):
+            shape = f"(ni{_c(ihi - ilo)}, nj{_c(jhi - jlo)}, nk{_c(khi - klo)})"
+            origin = (-ilo, -jlo, -klo)
+        elif axes == ("I", "J"):
+            shape = f"(ni{_c(ihi - ilo)}, nj{_c(jhi - jlo)})"
+            origin = (-ilo, -jlo, 0)
+        else:
+            shape = f"(nk{_c(khi - klo)},)"
+            origin = (0, 0, -klo)
+        kb.line(f"{t.name} = jnp.zeros({shape}, dtype='{t.dtype}')")
+        kb.line(f"_oi_{t.name}, _oj_{t.name}, _ok_{t.name} = {origin}")
+
+    # ----- fused multi-stages
+    for mi, ms in enumerate(impl.multi_stages):
+        kb.line(f"# === multi-stage {mi}: {multistage_plan(ms)}")
+        backward = ms.order == ir.IterationOrder.BACKWARD
+        for ii, itv in enumerate(ms.intervals):
+            k0, k1 = f"_k0_{mi}_{ii}", f"_k1_{mi}_{ii}"
+            kb.line(f"{k0} = {bound_expr(itv.interval.start)}")
+            kb.line(f"{k1} = {bound_expr(itv.interval.end)}")
+            if ms.order == ir.IterationOrder.PARALLEL:
+                printer.mode = "block"
+                printer.k0, printer.k1 = k0, k1
+                emitter = ArrayStmtEmitter(printer, kb, functional=True)
+                for st in itv.stages:
+                    printer.extent = st.compute_extent
+                    for stmt in st.stmts:
+                        emitter.stmt(stmt)
+            else:
+                printer.mode = "plane"
+                carried: List[str] = []
+                for st in itv.stages:
+                    for w in st.writes:
+                        if w not in carried:
+                            carried.append(w)
+                # carry every field written anywhere in this multi-stage so
+                # intervals of the same sweep chain state consistently
+                for st_itv in ms.intervals:
+                    for st in st_itv.stages:
+                        for w in st.writes:
+                            if w not in carried:
+                                carried.append(w)
+                carry = ", ".join(carried)
+                trailing = "," if len(carried) == 1 else ""
+                kb.line(f"def _body_{mi}_{ii}(_it, _carry):")
+                kb.push()
+                kb.line(f"({carry}{trailing}) = _carry")
+                kb.line(f"k = {k1} - 1 - _it" if backward else f"k = {k0} + _it")
+                emitter = ArrayStmtEmitter(printer, kb, functional=True)
+                for st in itv.stages:
+                    printer.extent = st.compute_extent
+                    for stmt in st.stmts:
+                        emitter.stmt(stmt)
+                kb.line(f"return ({carry}{trailing})")
+                kb.pop()
+                kb.line(
+                    f"({carry}{trailing}) = lax.fori_loop(0, {k1} - {k0}, _body_{mi}_{ii}, "
+                    f"({carry}{trailing}))"
+                )
+
+    for n in written_api:
+        kb.line(f"{n}_out_ref[...] = {n}")
+
+    # ---------------- module assembly ----------------
+    em = Emitter()
+    em.line(f'"""Auto-generated by repro.core — stencil {impl.name!r}, backend \'pallas\'."""')
+    em.line("import functools")
+    em.line("import numpy as np")
+    em.line("import jax")
+    em.line("import jax.numpy as jnp")
+    em.line("from jax import lax")
+    em.line("from jax.experimental import pallas as pl")
+    em.line("from jax.experimental.pallas import tpu as pltpu")
+    emit_helpers(em, printer.used_helpers, "jnp")
+    em.line()
+    em.line("INTERPRET = jax.devices()[0].platform != 'tpu'")
+    em.line(f"_H = {H}")
+    em.line(f"_BLOCK_DEFAULT = {tuple(block)!r}")
+    em.line(f"_SCALARS = {[s.name for s in impl.scalars]!r}")
+    em.line(f"_INPUT_API = {input_api!r}")
+    em.line(f"_WRITTEN_API = {written_api!r}")
+    em.line(f"_K_FIELDS = {[n for n in read_api if axes_of[n] == ('K',)]!r}")
+    em.line(f"_AXES = {dict(sorted((n, axes_of[n]) for n in api_names))!r}")
+    em.line(f"_DTYPES = {dict(sorted((n, dtype_of[n]) for n in api_names))!r}")
+    em.line()
+    em.line("def _make_kernel(_BI, _BJ, _NK):")
+    em.push()
+    em.line("def _kernel(" + ", ".join(
+        [f"{s.name}_smem" for s in impl.scalars]
+        + [f"{n}_vmem" if axes_of[n] == ("K",) else f"{n}_hbm" for n in input_api]
+        + [f"{n}_out_ref" for n in written_api]
+        + [f"_s_{n}" for n in input_api if axes_of[n] != ("K",)]
+        + ["_dma_sem"]
+    ) + "):")
+    em.pop()
+    source = em.source() + kb.source()
+
+    tail = Emitter()
+    tail.push()
+    tail.line("return _kernel")
+    tail.pop()
+    tail.line()
+    tail.line("@functools.lru_cache(maxsize=None)")
+    tail.line("def _build(domain, block):")
+    tail.push()
+    tail.line("ni, nj, nk = domain")
+    tail.line("bi = min(block[0], ni)")
+    tail.line("bj = min(block[1], nj)")
+    tail.line("nti = -(-ni // bi)")
+    tail.line("ntj = -(-nj // bj)")
+    tail.line("kernel = _make_kernel(bi, bj, nk)")
+    tail.line("in_specs = []")
+    tail.line("for s in _SCALARS:")
+    tail.push()
+    tail.line("in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))")
+    tail.pop()
+    tail.line("for n in _INPUT_API:")
+    tail.push()
+    tail.line("if n in _K_FIELDS:")
+    tail.push()
+    tail.line("in_specs.append(pl.BlockSpec(memory_space=pltpu.VMEM))")
+    tail.pop()
+    tail.line("else:")
+    tail.push()
+    tail.line("in_specs.append(pl.BlockSpec(memory_space=pl.ANY))")
+    tail.pop()
+    tail.pop()
+    tail.line("out_specs = []")
+    tail.line("out_shapes = []")
+    tail.line("for n in _WRITTEN_API:")
+    tail.push()
+    tail.line("if _AXES[n] == ('I', 'J', 'K'):")
+    tail.push()
+    tail.line("out_specs.append(pl.BlockSpec((bi, bj, nk), lambda i, j: (i, j, 0)))")
+    tail.line("out_shapes.append(jax.ShapeDtypeStruct((nti * bi, ntj * bj, nk), _DTYPES[n]))")
+    tail.pop()
+    tail.line("elif _AXES[n] == ('I', 'J'):")
+    tail.push()
+    tail.line("out_specs.append(pl.BlockSpec((bi, bj), lambda i, j: (i, j)))")
+    tail.line("out_shapes.append(jax.ShapeDtypeStruct((nti * bi, ntj * bj), _DTYPES[n]))")
+    tail.pop()
+    tail.line("else:")
+    tail.push()
+    tail.line("raise NotImplementedError('K-field outputs in pallas backend')")
+    tail.pop()
+    tail.pop()
+    tail.line("scratch = []")
+    tail.line("for n in _INPUT_API:")
+    tail.push()
+    tail.line("if n in _K_FIELDS:")
+    tail.push()
+    tail.line("continue")
+    tail.pop()
+    tail.line("if _AXES[n] == ('I', 'J'):")
+    tail.push()
+    tail.line("scratch.append(pltpu.VMEM((bi + 2 * _H, bj + 2 * _H), _DTYPES[n]))")
+    tail.pop()
+    tail.line("else:")
+    tail.push()
+    tail.line("scratch.append(pltpu.VMEM((bi + 2 * _H, bj + 2 * _H, nk), _DTYPES[n]))")
+    tail.pop()
+    tail.pop()
+    tail.line("scratch.append(pltpu.SemaphoreType.DMA)")
+    tail.line("call = pl.pallas_call(kernel, grid=(nti, ntj), in_specs=in_specs, out_specs=out_specs,")
+    tail.line("                      out_shape=out_shapes, scratch_shapes=scratch, interpret=INTERPRET)")
+    tail.line("return jax.jit(call), (bi, bj, nti, ntj)")
+    tail.pop()
+    tail.line()
+    tail.line("def run(fields, scalars, domain, origins, block=None):")
+    tail.push()
+    tail.line("ni, nj, nk = domain")
+    tail.line("call, (bi, bj, nti, ntj) = _build(tuple(domain), tuple(block or _BLOCK_DEFAULT))")
+    tail.line("args = []")
+    tail.line("for s in _SCALARS:")
+    tail.push()
+    tail.line("args.append(jnp.asarray([scalars[s]], dtype=_DTYPES[_WRITTEN_API[0]]))")
+    tail.pop()
+    tail.line("pad_i = nti * bi - ni")
+    tail.line("pad_j = ntj * bj - nj")
+    tail.line("for n in _INPUT_API:")
+    tail.push()
+    tail.line("arr = fields[n]")
+    tail.line("oi, oj, ok = origins[n]")
+    tail.line("if n in _K_FIELDS:")
+    tail.push()
+    tail.line("args.append(jax.lax.dynamic_slice(arr, (ok,), (nk,)))")
+    tail.line("continue")
+    tail.pop()
+    tail.line("if _AXES[n] == ('I', 'J'):")
+    tail.push()
+    tail.line("region = arr[oi - _H:oi + ni + _H, oj - _H:oj + nj + _H]")
+    tail.line("region = jnp.pad(region, ((0, pad_i), (0, pad_j)), mode='edge')")
+    tail.pop()
+    tail.line("else:")
+    tail.push()
+    tail.line("region = arr[oi - _H:oi + ni + _H, oj - _H:oj + nj + _H, ok:ok + nk]")
+    tail.line("region = jnp.pad(region, ((0, pad_i), (0, pad_j), (0, 0)), mode='edge')")
+    tail.pop()
+    tail.line("args.append(region)")
+    tail.pop()
+    tail.line("outs = call(*args)")
+    tail.line("updates = {}")
+    tail.line("for n, new in zip(_WRITTEN_API, outs):")
+    tail.push()
+    tail.line("arr = fields[n]")
+    tail.line("oi, oj, ok = origins[n]")
+    tail.line("if _AXES[n] == ('I', 'J'):")
+    tail.push()
+    tail.line("updates[n] = arr.at[oi:oi + ni, oj:oj + nj].set(new[:ni, :nj])")
+    tail.pop()
+    tail.line("else:")
+    tail.push()
+    tail.line("updates[n] = arr.at[oi:oi + ni, oj:oj + nj, ok:ok + nk].set(new[:ni, :nj, :])")
+    tail.pop()
+    tail.pop()
+    tail.line("return updates")
+    tail.pop()
+
+    return source + tail.source()

@@ -1,0 +1,361 @@
+"""StencilObject: the compiled, callable artifact produced by @gtscript.stencil.
+
+Implements the paper's call conventions: fields (Storage or bare arrays) are
+positional-or-keyword in declaration order, scalar parameters are
+keyword-only, and the iteration space is implicit — deduced from field sizes
+and the stencil shape — with optional ``domain=`` / ``origin=`` overrides
+(§2.2).  ``validate_args`` reproduces the run-time storage checks whose cost
+is the paper's Fig. 3 dashed-vs-solid gap; ``exec_info`` captures the same
+timings the paper reports.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from . import analysis, caching, frontend, ir
+from .gtscript import GTScriptSemanticError
+from .storage import Storage
+
+_AXIS_INDEX = {"I": 0, "J": 1, "K": 2}
+
+
+class FieldInfo:
+    def __init__(self, decl: ir.FieldDecl, extent: ir.Extent, k_extent: Tuple[int, int]):
+        self.name = decl.name
+        self.dtype = np.dtype(decl.dtype)
+        self.axes = decl.axes
+        self.extent = extent
+        self.k_extent = k_extent
+
+    @property
+    def halo_lo(self) -> Tuple[int, int, int]:
+        (ilo, _), (jlo, _), (klo, _) = self.extent.as_tuple()
+        return (max(0, -ilo), max(0, -jlo), max(0, -klo))
+
+    @property
+    def halo_hi(self) -> Tuple[int, int, int]:
+        (_, ihi), (_, jhi), (_, khi) = self.extent.as_tuple()
+        return (max(0, ihi), max(0, jhi), max(0, khi))
+
+    def __repr__(self) -> str:
+        return f"FieldInfo({self.name}, dtype={self.dtype}, axes={self.axes}, extent={self.extent.as_tuple()})"
+
+
+class StencilObject:
+    """A compiled stencil. See module docstring for call conventions."""
+
+    def __init__(
+        self,
+        name: str,
+        backend: str,
+        definition_ir: ir.StencilDefinition,
+        implementation_ir: ir.StencilImplementation,
+        generated_source: str,
+        run_fn: Callable,
+        validate_args: bool = True,
+        fingerprint: str = "",
+    ):
+        self.name = name
+        self.backend = backend
+        self.definition_ir = definition_ir
+        self.implementation_ir = implementation_ir
+        self.generated_source = generated_source
+        self._run = run_fn
+        self.validate_args_default = validate_args
+        self.fingerprint = fingerprint
+
+        impl = implementation_ir
+        kext = dict(impl.k_extents)
+        self.field_info: Dict[str, FieldInfo] = {
+            f.name: FieldInfo(f, impl.extent_of(f.name), kext.get(f.name, (0, 0)))
+            for f in impl.api_fields
+        }
+        self.scalar_info = {s.name: np.dtype(s.dtype) for s in impl.scalars}
+        self._field_order = [f.name for f in impl.api_fields]
+        self._jit_cache: Dict[Any, Callable] = {}
+
+    # ------------------------------------------------------------------ binding
+
+    def _bind(self, args, kwargs):
+        fields: Dict[str, Any] = {}
+        scalars: Dict[str, Any] = {}
+        for name, val in zip(self._field_order, args):
+            fields[name] = val
+        if len(args) > len(self._field_order):
+            raise TypeError(
+                f"{self.name}() takes {len(self._field_order)} positional field arguments, "
+                f"got {len(args)}"
+            )
+        for key, val in kwargs.items():
+            if key in self.field_info:
+                if key in fields:
+                    raise TypeError(f"{self.name}() got duplicate field argument {key!r}")
+                fields[key] = val
+            elif key in self.scalar_info:
+                scalars[key] = val
+            else:
+                raise TypeError(f"{self.name}() got unexpected argument {key!r}")
+        missing = [n for n in self._field_order if n not in fields]
+        if missing:
+            raise TypeError(f"{self.name}() missing field arguments: {missing}")
+        missing_s = [n for n in self.scalar_info if n not in scalars]
+        if missing_s:
+            raise TypeError(f"{self.name}() missing scalar arguments: {missing_s}")
+        return fields, scalars
+
+    @staticmethod
+    def _raw(value):
+        return value.data if isinstance(value, Storage) else value
+
+    def _axes_shape(self, name: str, shape: Tuple[int, ...]) -> Dict[str, int]:
+        axes = self.field_info[name].axes
+        if len(shape) != len(axes):
+            raise ValueError(
+                f"{self.name}(): field {name!r} has axes {axes} but a {len(shape)}-d array was passed"
+            )
+        return dict(zip(axes, shape))
+
+    def _default_origin(self, name: str, value) -> Tuple[int, ...]:
+        if isinstance(value, Storage) and value.default_origin is not None and any(value.default_origin):
+            return tuple(value.default_origin)
+        info = self.field_info[name]
+        lo = info.halo_lo
+        # K origin defaults to 0: vertical reads stay in-domain by construction
+        return tuple(0 if a == "K" else lo[_AXIS_INDEX[a]] for a in info.axes)
+
+    def _resolve_origins(self, fields, origin) -> Dict[str, Tuple[int, int, int]]:
+        origins: Dict[str, Tuple[int, int, int]] = {}
+        for name, val in fields.items():
+            info = self.field_info[name]
+            if origin is None:
+                o = self._default_origin(name, val)
+            elif isinstance(origin, dict):
+                o = origin.get(name, self._default_origin(name, val))
+                o = tuple(o)[: len(info.axes)] if len(o) >= len(info.axes) else tuple(o)
+            else:
+                o = tuple(origin)
+                o = tuple(o[_AXIS_INDEX[a]] for a in info.axes)
+            if len(o) != len(info.axes):
+                raise ValueError(f"{self.name}(): origin {o} rank mismatch for field {name!r}")
+            # expand to 3-tuple (I, J, K) with zeros on missing axes
+            o3 = [0, 0, 0]
+            for a, v in zip(info.axes, o):
+                o3[_AXIS_INDEX[a]] = int(v)
+            origins[name] = tuple(o3)
+        return origins
+
+    def _deduce_domain(self, fields, origins) -> Tuple[int, int, int]:
+        dom = [None, None, None]
+        for name, val in fields.items():
+            info = self.field_info[name]
+            shape = self._axes_shape(name, tuple(self._raw(val).shape))
+            hi = info.halo_hi
+            o3 = origins[name]
+            for a, n in shape.items():
+                ax = _AXIS_INDEX[a]
+                avail = n - o3[ax] - hi[ax]
+                dom[ax] = avail if dom[ax] is None else min(dom[ax], avail)
+        # K axis when only IJ fields: no constraint → default 1 level
+        result = tuple(d if d is not None else 1 for d in dom)
+        return result  # type: ignore[return-value]
+
+    # --------------------------------------------------------------- validation
+
+    def _validate(self, fields, scalars, domain, origins) -> None:
+        ni, nj, nk = domain
+        if min(ni, nj, nk) <= 0:
+            raise ValueError(f"{self.name}(): empty compute domain {domain}")
+        if nk < self.implementation_ir.min_k_levels:
+            raise ValueError(
+                f"{self.name}(): domain has {nk} vertical levels but the stencil's intervals "
+                f"require at least {self.implementation_ir.min_k_levels}"
+            )
+        for name, val in fields.items():
+            info = self.field_info[name]
+            arr = self._raw(val)
+            if np.dtype(str(arr.dtype)) != info.dtype:
+                raise TypeError(
+                    f"{self.name}(): field {name!r} expects dtype {info.dtype}, got {arr.dtype}"
+                )
+            shape = self._axes_shape(name, tuple(arr.shape))
+            o3 = origins[name]
+            lo, hi = info.halo_lo, info.halo_hi
+            dom3 = {"I": ni, "J": nj, "K": nk}
+            for a, n in shape.items():
+                ax = _AXIS_INDEX[a]
+                # vertical reads are checked statically to stay inside the
+                # domain (analysis._check_vertical_bounds) — no K halo needed
+                lo_ax = 0 if a == "K" else lo[ax]
+                hi_ax = 0 if a == "K" else hi[ax]
+                if o3[ax] < lo_ax:
+                    raise ValueError(
+                        f"{self.name}(): field {name!r} origin {o3[ax]} along {a} is smaller than "
+                        f"the required halo {lo_ax}"
+                    )
+                need = o3[ax] + dom3[a] + hi_ax
+                if n < need:
+                    raise ValueError(
+                        f"{self.name}(): field {name!r} extends to {n} along {a} but needs "
+                        f"{need} (origin {o3[ax]} + domain {dom3[a]} + halo {hi_ax})"
+                    )
+        for name, val in scalars.items():
+            if not np.isscalar(val) and not (hasattr(val, "ndim") and val.ndim == 0):
+                raise TypeError(f"{self.name}(): parameter {name!r} must be a scalar, got {type(val)}")
+
+    # ------------------------------------------------------------------ calling
+
+    def __call__(
+        self,
+        *args,
+        domain: Optional[Tuple[int, int, int]] = None,
+        origin=None,
+        validate_args: Optional[bool] = None,
+        exec_info: Optional[dict] = None,
+        **kwargs,
+    ):
+        if exec_info is not None:
+            exec_info["call_start_time"] = time.perf_counter()
+        fields, scalars = self._bind(args, kwargs)
+        origins = self._resolve_origins(fields, origin)
+        if domain is None:
+            domain = self._deduce_domain(fields, origins)
+        domain = tuple(int(d) for d in domain)  # type: ignore[assignment]
+
+        do_validate = self.validate_args_default if validate_args is None else validate_args
+        if do_validate:
+            self._validate(fields, scalars, domain, origins)
+
+        raw_fields = {n: self._raw(v) for n, v in fields.items()}
+        if exec_info is not None:
+            exec_info["run_start_time"] = time.perf_counter()
+
+        if self.backend in ("debug", "numpy"):
+            for n, v in raw_fields.items():
+                if not isinstance(v, np.ndarray):
+                    raise TypeError(
+                        f"{self.name}(): backend {self.backend!r} requires NumPy-backed fields; "
+                        f"{n!r} is {type(v)} (use storage backend={self.backend!r})"
+                    )
+            self._run(raw_fields, scalars, domain, origins)
+            result = None
+        else:  # jax / pallas
+            fn = self._jitted(domain, origins)
+            updates = fn(raw_fields, dict(scalars))
+            for n, new in updates.items():
+                val = fields[n]
+                if isinstance(val, Storage):
+                    val.data = new
+            result = updates
+
+        if exec_info is not None:
+            if result is not None:
+                for v in result.values():
+                    v.block_until_ready()
+            exec_info["run_end_time"] = time.perf_counter()
+        return result
+
+    def _jitted(self, domain, origins) -> Callable:
+        key = (tuple(domain), tuple(sorted(origins.items())))
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            import jax
+
+            run = self._run
+
+            def _pure(fields, scalars):
+                return run(fields, scalars, tuple(domain), dict(origins))
+
+            fn = jax.jit(_pure)
+            self._jit_cache[key] = fn
+        return fn
+
+    def as_jax_function(
+        self,
+        domain: Tuple[int, int, int],
+        origin=None,
+    ) -> Callable:
+        """A pure ``fn(fields_dict, scalars_dict) -> updated-fields dict`` for
+        composing this stencil inside larger jit programs / shard_map bodies.
+        Only available for the jax-family backends."""
+        if self.backend not in ("jax", "pallas"):
+            raise TypeError(f"as_jax_function() requires the jax/pallas backends, not {self.backend!r}")
+        run = self._run
+
+        def _fn(fields: Dict[str, Any], scalars: Optional[Dict[str, Any]] = None):
+            org = self._resolve_origins(fields, origin)
+            return run(fields, scalars or {}, tuple(domain), org)
+
+        return _fn
+
+    def __repr__(self) -> str:
+        return f"StencilObject({self.name!r}, backend={self.backend!r}, fingerprint={self.fingerprint})"
+
+
+# ---------------------------------------------------------------------------
+# build pipeline: definition function → StencilObject
+# ---------------------------------------------------------------------------
+
+
+def build_stencil_object(
+    definition: Callable,
+    backend: str,
+    externals: Dict[str, Any],
+    name: str,
+    rebuild: bool = False,
+    validate_args: bool = True,
+    backend_opts: Optional[Dict[str, Any]] = None,
+) -> StencilObject:
+    definition_ir = frontend.parse_stencil_definition(definition, externals=externals, name=name)
+    return build_from_definition(definition_ir, backend, rebuild=rebuild,
+                                 validate_args=validate_args, backend_opts=backend_opts)
+
+
+def build_from_definition(
+    definition_ir: ir.StencilDefinition,
+    backend: str,
+    *,
+    rebuild: bool = False,
+    validate_args: bool = True,
+    backend_opts: Optional[Dict[str, Any]] = None,
+) -> StencilObject:
+    """Build directly from a Definition IR (used by property tests and any
+    alternative frontends — the IR is the toolchain interface, paper §2.3)."""
+    backend_opts = backend_opts or {}
+    name = definition_ir.name
+    impl = analysis.analyze(definition_ir)
+    fp = caching.fingerprint(definition_ir, backend, backend_opts)
+
+    if backend == "numpy":
+        from .codegen_array import generate_numpy_source
+
+        source = generate_numpy_source(impl)
+    elif backend == "jax":
+        from .codegen_array import generate_jax_source
+
+        source = generate_jax_source(impl)
+    elif backend == "debug":
+        from .codegen_debug import generate_debug_source
+
+        source = generate_debug_source(impl)
+    elif backend == "pallas":
+        from .codegen_pallas import generate_pallas_source
+
+        source = generate_pallas_source(impl, **backend_opts)
+    else:
+        raise ValueError(f"unknown backend {backend!r} (expected debug|numpy|jax|pallas)")
+
+    module = caching.load_generated_module(name, fp, source, rebuild=rebuild)
+    return StencilObject(
+        name=name,
+        backend=backend,
+        definition_ir=definition_ir,
+        implementation_ir=impl,
+        generated_source=source,
+        run_fn=module.run,
+        validate_args=validate_args,
+        fingerprint=fp,
+    )

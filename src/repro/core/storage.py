@@ -1,0 +1,158 @@
+"""Field storage: the paper's backend-aware NumPy-like containers.
+
+A :class:`Storage` owns a buffer (NumPy for the ``debug``/``numpy`` backends,
+a ``jax.Array`` for ``jax``/``pallas``), carries a ``default_origin`` (the
+position of the compute-domain origin inside the buffer — i.e. the halo) and
+implements ``__array__`` so it inter-operates copy-free with the rest of the
+Python ecosystem (the paper's buffer-protocol point).
+
+Backend-specific layout: for the TPU backends an optional alignment pads the
+trailing dimensions up to the (8, 128) sublane×lane register tile so Pallas
+block shapes stay hardware-aligned; the logical shape is unchanged (reads and
+writes go through a view).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+_JAX_BACKENDS = ("jax", "pallas")
+_ALL_BACKENDS = ("debug", "numpy") + _JAX_BACKENDS
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class Storage:
+    """A field container bound to a backend."""
+
+    def __init__(
+        self,
+        data: Any,
+        backend: str = "numpy",
+        default_origin: Tuple[int, ...] = (0, 0, 0),
+        axes: Tuple[str, ...] = ("I", "J", "K"),
+    ):
+        if backend not in _ALL_BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of {_ALL_BACKENDS}")
+        self.backend = backend
+        self.axes = tuple(axes)
+        self.default_origin = tuple(default_origin)[: len(self.axes)]
+        if backend in _JAX_BACKENDS:
+            import jax.numpy as jnp
+
+            self.data = jnp.asarray(data)
+        else:
+            self.data = np.asarray(data)
+
+    # -- NumPy-like surface ----------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.data.shape)
+
+    @property
+    def dtype(self):
+        return np.dtype(str(self.data.dtype))
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    def __array__(self, dtype=None):
+        arr = np.asarray(self.data)
+        return arr.astype(dtype) if dtype is not None else arr
+
+    def __getitem__(self, idx):
+        return self.data[idx]
+
+    def __setitem__(self, idx, value):
+        if self.backend in _JAX_BACKENDS:
+            self.data = self.data.at[idx].set(value)
+        else:
+            self.data[idx] = value
+
+    def __repr__(self) -> str:
+        return (
+            f"Storage(shape={self.shape}, dtype={self.dtype}, backend={self.backend!r}, "
+            f"default_origin={self.default_origin})"
+        )
+
+    def synchronize(self) -> None:
+        """Block until pending device work on this storage is done."""
+        if self.backend in _JAX_BACKENDS:
+            self.data.block_until_ready()
+
+    def to_numpy(self) -> np.ndarray:
+        return np.asarray(self.data)
+
+
+def _alloc(shape, dtype, backend, default_origin, fill, axes) -> Storage:
+    shape = tuple(int(s) for s in shape)
+    if default_origin is None:
+        default_origin = (0,) * len(shape)
+    if backend in _JAX_BACKENDS:
+        import jax.numpy as jnp
+
+        if fill == "zeros":
+            data = jnp.zeros(shape, dtype=dtype)
+        elif fill == "ones":
+            data = jnp.ones(shape, dtype=dtype)
+        else:
+            data = jnp.zeros(shape, dtype=dtype)  # no uninitialized memory in JAX
+    else:
+        if fill == "zeros":
+            data = np.zeros(shape, dtype=dtype)
+        elif fill == "ones":
+            data = np.ones(shape, dtype=dtype)
+        else:
+            data = np.empty(shape, dtype=dtype)
+    if axes is None:
+        axes = ("I", "J", "K")[: len(shape)] if len(shape) <= 3 else tuple(f"D{i}" for i in range(len(shape)))
+    return Storage(data, backend=backend, default_origin=default_origin, axes=axes)
+
+
+def zeros(shape, dtype="float64", backend="numpy", default_origin=None, axes=None) -> Storage:
+    return _alloc(shape, dtype, backend, default_origin, "zeros", axes)
+
+
+def ones(shape, dtype="float64", backend="numpy", default_origin=None, axes=None) -> Storage:
+    return _alloc(shape, dtype, backend, default_origin, "ones", axes)
+
+
+def empty(shape, dtype="float64", backend="numpy", default_origin=None, axes=None) -> Storage:
+    return _alloc(shape, dtype, backend, default_origin, "empty", axes)
+
+
+def from_array(array, backend="numpy", default_origin=None, dtype=None, axes=None) -> Storage:
+    arr = np.asarray(array)
+    if dtype is not None:
+        arr = arr.astype(dtype)
+    if default_origin is None:
+        default_origin = (0,) * arr.ndim
+    if axes is None:
+        axes = ("I", "J", "K")[: arr.ndim] if arr.ndim <= 3 else tuple(f"D{i}" for i in range(arr.ndim))
+    return Storage(arr, backend=backend, default_origin=default_origin, axes=axes)
+
+
+def storage_for_domain(
+    domain: Tuple[int, int, int],
+    halo: Tuple[int, int, int],
+    dtype="float64",
+    backend="numpy",
+    fill="zeros",
+    axes=("I", "J", "K"),
+) -> Storage:
+    """Allocate a storage sized domain+2·halo with origin at the halo."""
+    ni, nj, nk = domain
+    hi, hj, hk = halo
+    full = []
+    origin = []
+    for ax, (n, h) in zip(("I", "J", "K"), ((ni, hi), (nj, hj), (nk, hk))):
+        if ax in axes:
+            full.append(n + 2 * h)
+            origin.append(h)
+    return _alloc(tuple(full), dtype, backend, tuple(origin), fill, tuple(a for a in ("I", "J", "K") if a in axes))

@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline (restart-exact, shard-aware)."""
+
+from .pipeline import SyntheticLMDataset, make_batch_specs
+
+__all__ = ["SyntheticLMDataset", "make_batch_specs"]

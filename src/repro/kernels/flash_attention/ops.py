@@ -1,0 +1,58 @@
+"""jit'd public wrapper: layout transform + padding around the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "cap", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, Dh) — model layout
+    k: jax.Array,  # (B, Skv, Kh, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    kv_len=None,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+    bq: int = 256,
+    bk: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+
+    bq_eff = min(bq, sq)
+    bk_eff = min(bk, skv)
+    pad_q = (-sq) % bq_eff
+    pad_k = (-skv) % bk_eff
+
+    qt = jnp.moveaxis(q, 2, 1)  # (B, H, S, Dh)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    eff_kv_len = kv_len if kv_len is not None else skv  # padded keys masked out
+
+    o = flash_attention_bhsd(
+        qt, kt, vt,
+        causal=causal, q_offset=q_offset, kv_len=eff_kv_len,
+        window=window, cap=cap, bq=bq_eff, bk=bk_eff, interpret=interpret,
+    )
+    if pad_q:
+        o = o[:, :, :sq]
+    return jnp.moveaxis(o, 1, 2)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the flash-attention kernel (no pallas imports)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, Dh)
+    k: jax.Array,  # (B, Skv, Kh, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    kv_len=None,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    kh, skv = k.shape[2], k.shape[1]
+    qg = q.reshape(b, sq, kh, h // kh, dh).astype(jnp.float32)
+    scale = float(1.0 / np.sqrt(dh))
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, dh).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import hdiff
+
+__all__ = ["hdiff"]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for hdiff (hand-vectorized, independent of the DSL)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hdiff_ref(in_phi, alpha, *, lim: float = 0.01):
+    """in_phi: (NI+6, NJ+6, NK); returns full array with interior updated."""
+
+    def lap(a):
+        out = jnp.zeros_like(a)
+        return out.at[1:-1, 1:-1, :].set(
+            -4.0 * a[1:-1, 1:-1, :] + a[:-2, 1:-1, :] + a[2:, 1:-1, :]
+            + a[1:-1, :-2, :] + a[1:-1, 2:, :]
+        )
+
+    def gx(a):
+        out = jnp.zeros_like(a)
+        return out.at[:-1, :, :].set(a[1:, :, :] - a[:-1, :, :])
+
+    def gy(a):
+        out = jnp.zeros_like(a)
+        return out.at[:, :-1, :].set(a[:, 1:, :] - a[:, :-1, :])
+
+    x = in_phi
+    bilap = lap(lap(x))
+    fx = gx(bilap)
+    fy = gy(bilap)
+    fx = jnp.where(fx * gx(x) > lim, fx, lim)
+    fy = jnp.where(fy * gy(x) > lim, fy, lim)
+    upd = x[3:-3, 3:-3, :] + alpha * (
+        (fx[3:-3, 3:-3, :] - fx[2:-4, 3:-3, :]) + (fy[3:-3, 3:-3, :] - fy[3:-3, 2:-4, :])
+    )
+    return x.at[3:-3, 3:-3, :].set(upd)

@@ -1,0 +1,3 @@
+from .ops import rglru_scan
+
+__all__ = ["rglru_scan"]

@@ -1,0 +1,40 @@
+"""jit'd wrapper: padding + dispatch for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_bsd
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bd", "chunk", "interpret"))
+def rglru_scan(
+    a: jax.Array,  # (B, S, D)
+    b: jax.Array,
+    h0: Optional[jax.Array] = None,
+    *,
+    bb: int = 8,
+    bd: int = 512,
+    chunk: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, S, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+    bb_eff = min(bb, B)
+    bd_eff = min(bd, D)
+    chunk_eff = min(chunk, S)
+    pad_b = (-B) % bb_eff
+    pad_d = (-D) % bd_eff
+    pad_s = (-S) % chunk_eff
+    if pad_b or pad_d or pad_s:
+        # pad decay with zeros: padded steps write b only, never corrupt state
+        a = jnp.pad(a, ((0, pad_b), (0, pad_s), (0, pad_d)))
+        b = jnp.pad(b, ((0, pad_b), (0, pad_s), (0, pad_d)))
+        h0 = jnp.pad(h0, ((0, pad_b), (0, pad_d)))
+    y = rglru_scan_bsd(a, b, h0, bb=bb_eff, bd=bd_eff, chunk=chunk_eff, interpret=interpret)
+    return y[:B, :S, :D]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: associative-scan linear recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t · h_{t−1} + b_t over axis 1; a, b (B, S, D); h0 (B, D)."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    b32 = b32.at[:, 0, :].add(a32[:, 0, :] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h.astype(a.dtype)

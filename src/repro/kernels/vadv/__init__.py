@@ -1,0 +1,3 @@
+from .ops import vadv
+
+__all__ = ["vadv"]

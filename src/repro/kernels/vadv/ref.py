@@ -1,0 +1,35 @@
+"""Pure-jnp Thomas-algorithm oracle (scan-based, independent of the DSL)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vadv_ref(a, b, c, d):
+    """Solve (a, b, c)·x = d along the last axis (tridiagonal, Thomas)."""
+
+    def fwd(carry, abcd):
+        cp_prev, dp_prev = carry
+        a_k, b_k, c_k, d_k = abcd
+        denom = b_k - a_k * cp_prev
+        cp = c_k / denom
+        dp = (d_k - a_k * dp_prev) / denom
+        return (cp, dp), (cp, dp)
+
+    abcd = (
+        jnp.moveaxis(a, -1, 0),
+        jnp.moveaxis(b, -1, 0),
+        jnp.moveaxis(c, -1, 0),
+        jnp.moveaxis(d, -1, 0),
+    )
+    zeros = jnp.zeros(a.shape[:-1], a.dtype)
+    _, (cp, dp) = jax.lax.scan(fwd, (zeros, zeros), abcd)
+
+    def bwd(x_next, cpdp):
+        cp_k, dp_k = cpdp
+        x = dp_k - cp_k * x_next
+        return x, x
+
+    _, xs = jax.lax.scan(bwd, zeros, (cp, dp), reverse=True)
+    return jnp.moveaxis(xs, 0, -1)

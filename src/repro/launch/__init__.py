@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, input specs, dry-run, train/serve drivers."""

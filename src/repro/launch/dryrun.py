@@ -1,0 +1,346 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 pods × 256 chips.
+For each cell we jit the real step function (train_step / prefill /
+decode_step) with production in/out shardings, ``.lower().compile()`` it,
+and record ``memory_analysis()`` + ``cost_analysis()`` + per-collective
+byte counts (parsed from the compiled HLO) into a JSON report consumed by
+the roofline analysis (benchmarks/roofline.py, EXPERIMENTS.md §Dry-run).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro  # noqa: F401  (x64 flag)
+from repro.configs import get_arch, get_shape, list_archs
+from repro.models import build_model
+from repro.parallel.sharding import DEFAULT_RULES, axis_rules
+from repro.runtime.loop import make_train_step
+
+from .mesh import make_production_mesh
+from .specs import (
+    batch_shardings,
+    cache_shardings,
+    cache_specs,
+    input_specs,
+    param_shardings,
+    serve_batch_shardings,
+    serve_input_specs,
+    state_shardings,
+    train_state_specs,
+)
+
+# microbatch counts keeping per-device live activations bounded at train_4k
+TRAIN_MICROBATCHES = {
+    "deepseek-coder-33b": 8,
+    "command-r-35b": 8,
+    "stablelm-12b": 8,
+    # (mb=16 measured: per-device memory flat, collective rounds +26% — the
+    # residual footprint is not microbatch-scaled; keep 8. §Perf iteration 8)
+    "phi3.5-moe-42b-a6.6b": 8,
+    "moonshot-v1-16b-a3b": 8,
+    "recurrentgemma-2b": 4,
+    "phi3-mini-3.8b": 4,
+    "whisper-medium": 4,
+    "internvl2-1b": 4,
+    "mamba2-370m": 4,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\w+\[[^\]]*\][^ ]*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def _tensor_bytes(shape_str: str) -> int:
+    """'f32[8,128]' (or tuple '(f32[..], f32[..])') → total bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum output bytes per collective kind from compiled HLO text."""
+    out: Dict[str, Dict[str, float]] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        kind = m.group(3)
+        nbytes = _tensor_bytes(m.group(2))
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+def _collective_link_bytes(colls: Dict[str, Dict[str, float]]) -> float:
+    """Ring-model per-device link traffic (bytes) from collective sums."""
+    total = 0.0
+    for kind, rec in colls.items():
+        b = rec["bytes"]
+        if kind == "all-reduce":
+            total += 2.0 * b  # reduce-scatter + all-gather phases
+        elif kind in ("all-gather", "reduce-scatter"):
+            total += b
+        elif kind == "all-to-all":
+            total += b
+        elif kind == "collective-permute":
+            total += b
+    return total
+
+
+def lower_cell(arch: str, shape_id: str, multi_pod: bool) -> Dict[str, Any]:
+    entry = get_arch(arch)
+    cfg = entry.full
+    shape = get_shape(shape_id)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    report: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "kind": shape.kind,
+    }
+    t0 = time.time()
+
+    with axis_rules(DEFAULT_RULES, mesh=mesh):
+        if shape.kind == "train":
+            specs = input_specs(arch, shape_id)["batch"]
+            st_specs = train_state_specs(model)
+            st_sh = state_shardings(model, mesh)
+            b_sh = batch_shardings(mesh, specs)
+            step = make_train_step(model, microbatches=TRAIN_MICROBATCHES.get(arch, 1))
+            jitted = jax.jit(
+                step,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            )
+            with mesh:
+                lowered = jitted.lower(st_specs, specs)
+        else:
+            batch = serve_input_specs(cfg, shape.kind, shape.seq_len, shape.global_batch)
+            cache = cache_specs(model, shape.global_batch, shape.seq_len)
+            p_sh = param_shardings(model, mesh)
+            c_sh = cache_shardings(mesh, cache)
+            b_sh = serve_batch_shardings(mesh, batch)
+            fn = model.prefill if shape.kind == "prefill" else model.decode_step
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_sh, b_sh, c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            )
+            with mesh:
+                lowered = jitted.lower(model.param_shapes(), batch, cache)
+
+        compiled = lowered.compile()
+
+    report["lower_compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        report["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+        report["memory"]["total_per_device_bytes"] = (
+            report["memory"]["argument_bytes"]
+            + report["memory"]["output_bytes"]
+            + report["memory"]["temp_bytes"]
+        )
+
+    cost = compiled.cost_analysis()
+    if cost:
+        c = cost if isinstance(cost, dict) else cost[0]
+        report["cost"] = {
+            "flops": float(c.get("flops", 0.0)),
+            "bytes_accessed": float(c.get("bytes accessed", 0.0)),
+            "transcendentals": float(c.get("transcendentals", 0.0)),
+        }
+
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    report["collectives"] = colls
+    report["collective_link_bytes"] = _collective_link_bytes(colls)
+    report["hlo_bytes"] = len(hlo)
+
+    # trip-count-aware re-walk: XLA's cost_analysis counts while bodies once,
+    # which undercounts scan-over-layers models by O(layers × microbatches)
+    from .hlo_count import analyze_hlo_text
+
+    walked = analyze_hlo_text(hlo)
+    report["walked"] = {
+        "flops": walked["flops"],
+        "bytes": walked["bytes"],
+        "collectives": walked["collectives"],
+        "collective_link_bytes": _collective_link_bytes(
+            {k: {"bytes": v} for k, v in walked["collectives"].items()}
+        ),
+    }
+    return report
+
+
+def lower_stencil_cell(multi_pod: bool, *, global_ij: int = 8192, nk: int = 64,
+                       backend: str = "jax", overlap: bool = False,
+                       dtype: str = "float64") -> Dict[str, Any]:
+    """The paper's own workload at production scale: distributed horizontal
+    diffusion (halo exchange on the torus + fused local stencil)."""
+    from repro.stencils.distributed import DistributedStencil
+    from repro.stencils.hdiff import build_hdiff
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    st = build_hdiff(backend, dtype=dtype)
+    i_axes = ("pod", "data") if multi_pod else ("data",)
+    # decompose i over data(+pod), j over model
+    dist = DistributedStencil(st, mesh, i_axis="data", j_axis="model", overlap=overlap)
+    gi = global_ij * (2 if multi_pod else 1)
+    specs = {
+        "in_phi": jax.ShapeDtypeStruct((gi, global_ij, nk), dtype),
+        "out_phi": jax.ShapeDtypeStruct((gi, global_ij, nk), dtype),
+    }
+    report: Dict[str, Any] = {
+        "arch": f"stencil-hdiff-{backend}" + ("-f32" if dtype == "float32" else ""),
+        "shape": f"{gi}x{global_ij}x{nk}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(np.prod(mesh.devices.shape)),
+        "kind": "stencil",
+    }
+    t0 = time.time()
+    lowered = dist.lower(specs, {"alpha": np.float64(0.05)})
+    compiled = lowered.compile()
+    report["lower_compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        report["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        }
+        report["memory"]["total_per_device_bytes"] = sum(report["memory"].values())
+    cost = compiled.cost_analysis()
+    if cost:
+        c = cost if isinstance(cost, dict) else cost[0]
+        report["cost"] = {"flops": float(c.get("flops", 0.0)),
+                         "bytes_accessed": float(c.get("bytes accessed", 0.0))}
+    hlo = compiled.as_text()
+    report["collectives"] = parse_collectives(hlo)
+    report["collective_link_bytes"] = _collective_link_bytes(report["collectives"])
+    from .hlo_count import analyze_hlo_text
+
+    walked = analyze_hlo_text(hlo)
+    report["walked"] = {
+        "flops": walked["flops"],
+        "bytes": walked["bytes"],
+        "collectives": walked["collectives"],
+        "collective_link_bytes": _collective_link_bytes(
+            {k: {"bytes": v} for k, v in walked["collectives"].items()}
+        ),
+    }
+    return report
+
+
+def cells_for(arch: str):
+    entry = get_arch(arch)
+    return list(entry.shapes)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--stencil", action="store_true",
+                    help="run the distributed-stencil (paper workload) cell")
+    ap.add_argument("--stencil-overlap", action="store_true")
+    ap.add_argument("--stencil-dtype", default="float64")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.stencil:
+        meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+        for multi_pod in meshes:
+            tag = f"stencil-hdiff_{'multi' if multi_pod else 'single'}" + (
+                "_overlap" if args.stencil_overlap else "") + (
+                "_f32" if args.stencil_dtype == "float32" else "")
+            report = lower_stencil_cell(multi_pod, overlap=args.stencil_overlap,
+                                        dtype=args.stencil_dtype)
+            (outdir / f"{tag}.json").write_text(json.dumps(report, indent=1))
+            print(f"OK   {tag}: compile {report['lower_compile_s']}s, "
+                  f"colls {report['walked']['collectives']}")
+        return
+
+    if args.all:
+        targets = [(a, s) for a in list_archs() for s in cells_for(a)]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        targets = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch, shape_id in targets:
+        for multi_pod in meshes:
+            tag = f"{arch}_{shape_id}_{'multi' if multi_pod else 'single'}"
+            path = outdir / f"{tag}.json"
+            try:
+                report = lower_cell(arch, shape_id, multi_pod)
+                path.write_text(json.dumps(report, indent=1))
+                mem_gb = report.get("memory", {}).get("total_per_device_bytes", 0) / 2**30
+                print(f"OK   {tag}: compile {report['lower_compile_s']}s, "
+                      f"{mem_gb:.2f} GiB/dev, flops {report.get('cost', {}).get('flops', 0):.3e}")
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                path.with_suffix(".error.txt").write_text(traceback.format_exc())
+                print(f"FAIL {tag}: {type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

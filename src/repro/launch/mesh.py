@@ -1,0 +1,23 @@
+"""Production meshes.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state — required for the smoke tests to keep seeing the
+single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi_pod adds the 2-pod axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist right now, as a 1-D 'data' mesh (laptop/tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,189 @@
+"""ShapeDtypeStruct input specs + sharding trees for every (arch × shape) cell.
+
+``input_specs(arch, shape_id)`` returns weak-type-correct, shardable
+stand-ins for every model input (the dry-run contract): training batches for
+``train_*`` shapes; (tokens, cache) for prefill/decode shapes.  No device
+allocation happens here.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, get_shape
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import make_batch_specs
+from repro.models import build_model
+from repro.models.layers import ParamSpec
+from repro.optim import adamw_init
+from repro.parallel.sharding import current_rules, logical_spec
+from repro.runtime.loop import TrainState
+
+
+# ---------------------------------------------------------------------------
+# per-arch serve batch specs
+# ---------------------------------------------------------------------------
+
+
+def serve_input_specs(cfg: ArchConfig, kind: str, seq_len: int, batch: int) -> Dict[str, Any]:
+    """Model inputs for prefill (full prompt) or decode (1 token + cache)."""
+    s = seq_len if kind == "prefill" else 1
+    if cfg.frontend == "vision" and kind == "prefill":
+        # seq_len budgets the TOTAL sequence: image patch prefix + text prompt
+        s = seq_len - cfg.encoder_seq
+    specs: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((batch, s), np.int32)}
+    if cfg.frontend == "vision" and kind == "prefill":
+        specs["patches"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), np.float32)
+    if cfg.is_encdec:
+        if kind == "prefill":
+            specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), np.float32)
+        else:
+            # decode uses the cross-attention K/V precomputed at prefill
+            hd = cfg.resolved_head_dim
+            specs["enc_kv"] = (
+                jax.ShapeDtypeStruct((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, hd),
+                                     cfg.dtype),
+                jax.ShapeDtypeStruct((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, hd),
+                                     cfg.dtype),
+            )
+    return specs
+
+
+def cache_specs(model, batch: int, max_len: int) -> Any:
+    """ShapeDtypeStruct tree of the serve cache (no allocation)."""
+    return jax.eval_shape(lambda: model.make_cache(batch=batch, max_len=max_len))
+
+
+def input_specs(arch: str, shape_id: str) -> Dict[str, Any]:
+    """Entry point required by the dry-run: stand-ins for every model input."""
+    entry = get_arch(arch)
+    cfg = entry.full
+    shape = get_shape(shape_id)
+    model = build_model(cfg)
+    if shape.kind == "train":
+        return {"batch": make_batch_specs(cfg, shape)}
+    batch = serve_input_specs(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    cache = cache_specs(model, shape.global_batch, shape.seq_len)
+    return {"batch": batch, "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+
+def _spec_to_sharding(mesh: Mesh, spec: ParamSpec) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(spec.logical, mesh, spec.shape))
+
+
+def param_shardings(model, mesh: Mesh) -> Any:
+    specs = model.param_specs()
+    return jax.tree_util.tree_map(
+        lambda s: _spec_to_sharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def state_shardings(model, mesh: Mesh) -> TrainState:
+    """TrainState shardings: opt m/v follow their parameters exactly."""
+    ps = param_shardings(model, mesh)
+    scalar = NamedSharding(mesh, P())
+    from repro.optim.adamw import OptState
+
+    return TrainState(
+        step=scalar,
+        params=ps,
+        opt=OptState(step=scalar, m=ps, v=ps),
+    )
+
+
+def batch_shardings(mesh: Mesh, batch_specs: Dict[str, Any]) -> Dict[str, Any]:
+    def shard_one(s):
+        logical = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, logical_spec(logical, mesh, s.shape))
+
+    return jax.tree_util.tree_map(shard_one, batch_specs)
+
+
+_CACHE_LOGICAL_BY_KEY = {
+    # stacked (L, B, S, Kh, Dh) attention caches
+    "k": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+    # mamba2 (L, B, H, N, P) state + (L, B, K-1, C) conv tail
+    "state": (None, "batch", "ssm_heads", None, None),
+    "conv": (None, "batch", None, "mlp"),
+    # rglru hidden state (L, B, Dr)
+    "h": (None, "batch", "mlp"),
+}
+
+
+def cache_shardings(mesh: Mesh, cache_tree: Any) -> Any:
+    """Path-keyed shardings for a serve cache tree (stacked or unstacked)."""
+
+    def walk(path, leaf):
+        key = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                key = k
+                break
+        stacked_tail = any(
+            isinstance(getattr(p, "key", None), str) and str(getattr(p, "key", "")).startswith("tail_")
+            for p in path
+        )
+        logical = _CACHE_LOGICAL_BY_KEY.get(key)
+        if key == "pos" or logical is None:
+            return NamedSharding(mesh, P())
+        if stacked_tail:  # unstacked single-layer cache: drop the layer dim
+            logical = logical[1:]
+        logical = logical[: len(leaf.shape)] if len(logical) > len(leaf.shape) else logical
+        if len(logical) < len(leaf.shape):
+            logical = logical + (None,) * (len(leaf.shape) - len(logical))
+        return NamedSharding(mesh, logical_spec(logical, mesh, leaf.shape))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(treedef, [walk(p, l) for p, l in flat])
+
+
+def serve_batch_shardings(mesh: Mesh, batch_specs: Dict[str, Any]) -> Dict[str, Any]:
+    def shard_one(path, s):
+        key = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                key = k
+                break
+        if key == "enc_kv" or (key is None and len(s.shape) == 5):
+            logical = (None, "batch", None, "kv_heads", "head_dim")
+        else:
+            logical = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, logical_spec(logical, mesh, s.shape))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_specs)
+    return jax.tree_util.tree_unflatten(treedef, [shard_one(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# train-state specs (shapes only — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def train_state_specs(model) -> TrainState:
+    params = model.param_shapes()
+    from repro.optim.adamw import OptState
+
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)  # noqa: E731
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=params,
+        opt=OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree_util.tree_map(f32, params),
+            v=jax.tree_util.tree_map(f32, params),
+        ),
+    )

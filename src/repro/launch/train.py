@@ -1,0 +1,102 @@
+"""End-to-end training driver.
+
+Laptop-scale by default (reduced config, host mesh); the same driver drives
+the production mesh when run under a real multi-host topology — mesh size,
+shardings, and checkpoints are all derived from logical rules, so the script
+is identical (elastic by construction).
+
+Example (the ~100M-model end-to-end run used in EXPERIMENTS.md)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m \
+        --reduced --steps 300 --batch 16 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.configs import get_arch
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models import build_model
+from repro.parallel.sharding import DEFAULT_RULES, axis_rules
+from repro.runtime.loop import StragglerWatchdog, Trainer, make_train_step
+
+from .mesh import make_host_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
+    entry = get_arch(args.arch)
+    cfg = entry.reduced if args.reduced else entry.full
+    model = build_model(cfg)
+
+    dataset = SyntheticLMDataset(
+        vocab=cfg.vocab,
+        seq_len=args.seq,
+        global_batch=args.batch,
+        frames_shape=(cfg.encoder_seq, cfg.d_model) if cfg.is_encdec else None,
+        patches_shape=(cfg.encoder_seq, cfg.d_model) if cfg.frontend == "vision" else None,
+    )
+
+    mesh = make_host_mesh()
+    step_fn = make_train_step(
+        model, base_lr=args.lr, total_steps=args.steps,
+        warmup_steps=max(args.steps // 20, 5), microbatches=args.microbatches,
+    )
+
+    with axis_rules(DEFAULT_RULES, mesh=mesh):
+        trainer = Trainer(
+            model, dataset, args.ckpt_dir,
+            train_step=step_fn, ckpt_every=args.ckpt_every,
+            watchdog=StragglerWatchdog(),
+        )
+        t0 = time.time()
+        state = trainer.restore_or_init()
+        start_step = int(state.step)
+        n_logged = 0
+        for step in range(start_step, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in dataset.batch_at(step).items()}
+            state, metrics = trainer._step(state, batch)
+            if (step + 1) % args.log_every == 0 or step == start_step:
+                loss = float(metrics["loss"])
+                print(f"step {step + 1:5d}  loss {loss:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  gnorm {float(metrics['grad_norm']):.3f}")
+                trainer.metrics_history.append({k: float(v) for k, v in metrics.items()})
+                n_logged += 1
+            if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+                trainer.ckpt.save_async(step + 1, state)
+        trainer.ckpt.wait()
+        dt = time.time() - t0
+        steps_done = args.steps - start_step
+        print(f"done: {steps_done} steps in {dt:.1f}s "
+              f"({steps_done * args.batch * args.seq / max(dt, 1e-9):.0f} tok/s)")
+
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(json.dumps(trainer.metrics_history, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""LM architecture zoo (assigned pool): pure-JAX models with logical-axis
+sharding annotations, scan-over-layers stacks, and KV/state caches."""
+
+from .model import LM, build_model
+
+__all__ = ["LM", "build_model"]

@@ -1,0 +1,207 @@
+"""Core NN layers in pure JAX: params are nested dicts of arrays, with a
+parallel ParamSpec tree carrying logical sharding axes (see parallel/sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import with_logical_constraint
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: str = "float32"
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+
+    def initializer(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        scale = self.scale
+        if scale is None:
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(self.dtype)
+
+
+def init_param_tree(specs: Any, rng: jax.Array) -> Any:
+    """Materialize a ParamSpec pytree deterministically (path-keyed folds)."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )[0]
+    treedef = jax.tree_util.tree_structure(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    out = []
+    for path, spec in leaves_with_paths:
+        path_str = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = jax.random.fold_in(rng, int(np.uint32(hash(path_str) & 0xFFFFFFFF)))
+        out.append(spec.initializer(key))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def spec_tree_shapes(specs: Any) -> Any:
+    """ParamSpec tree → ShapeDtypeStruct tree (for dry-run lowering)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(d: int) -> Dict[str, ParamSpec]:
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones"),
+        "bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_spec, rmsnorm
+    if kind == "layernorm":
+        return layernorm_spec, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embeddings
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(d_in: int, d_out: int, logical: Tuple[Optional[str], Optional[str]],
+               use_bias: bool = False, out_logical: Optional[str] = None) -> Dict[str, ParamSpec]:
+    spec = {"kernel": ParamSpec((d_in, d_out), logical)}
+    if use_bias:
+        spec["bias"] = ParamSpec((d_out,), (logical[1],), init="zeros")
+    return spec
+
+
+def dense(params, x, compute_dtype=None):
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+    # mixed precision: fp32 master weights cast to the activation dtype
+    k = params["kernel"].astype(x.dtype)
+    y = x @ k
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+def embedding_spec(vocab: int, d: int) -> Dict[str, ParamSpec]:
+    return {"embedding": ParamSpec((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params, tokens, dtype):
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    """Logits head (optionally tied to the embedding)."""
+    return x @ params["embedding"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def _act(kind: str, x):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def mlp_spec(d: int, d_ff: int, activation: str, use_bias: bool) -> Dict[str, Any]:
+    if activation in ("swiglu", "geglu"):
+        return {
+            "wi": dense_spec(d, d_ff, ("embed", "mlp"), use_bias),
+            "wg": dense_spec(d, d_ff, ("embed", "mlp"), use_bias),
+            "wo": dense_spec(d_ff, d, ("mlp", "embed"), use_bias),
+        }
+    return {
+        "wi": dense_spec(d, d_ff, ("embed", "mlp"), use_bias),
+        "wo": dense_spec(d_ff, d, ("mlp", "embed"), use_bias),
+    }
+
+
+def mlp(params, x, activation: str):
+    if activation in ("swiglu", "geglu"):
+        act = "silu" if activation == "swiglu" else "gelu"
+        h = _act(act, dense(params["wg"], x)) * dense(params["wi"], x)
+    else:
+        h = _act("gelu" if activation == "gelu" else "silu", dense(params["wi"], x))
+    h = with_logical_constraint(h, ("batch",) + (None,) * (h.ndim - 2) + ("mlp",))
+    return dense(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,324 @@
+"""Model facade: spec/init/loss/prefill/decode for every assigned family.
+
+`build_model(cfg)` returns an :class:`LM` whose methods are pure functions
+of (params, batch/cache) — ready for jit / shard_map / the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import with_logical_constraint
+
+from . import attention as attn_mod
+from . import frontends, transformer
+from .layers import (
+    ParamSpec,
+    embed,
+    embedding_spec,
+    init_param_tree,
+    make_norm,
+    softcap,
+    spec_tree_shapes,
+    unembed,
+)
+from .rglru import make_rglru_cache
+from .ssm import make_ssd_cache
+
+
+@dataclass
+class LM:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------------ specs
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        norm_spec, _ = make_norm(cfg.norm)
+        spec: Dict[str, Any] = {
+            "embed": embedding_spec(cfg.padded_vocab, cfg.d_model),
+            "final_norm": norm_spec(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = {"kernel": ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))}
+        if cfg.is_encdec:
+            spec["frontend"] = frontends.frontend_spec(cfg)
+            spec["encoder"] = transformer.encoder_stack_spec(cfg)
+            spec["enc_norm"] = norm_spec(cfg.d_model)
+            spec["decoder"] = transformer.xdec_stack_spec(cfg)
+            spec["dec_pos_embed"] = ParamSpec((8192, cfg.d_model), (None, "embed"), scale=0.01)
+        else:
+            if cfg.frontend:
+                spec["frontend"] = frontends.frontend_spec(cfg)
+            spec["decoder"] = transformer.decoder_stack_spec(cfg)
+        return spec
+
+    def init_params(self, rng: jax.Array) -> Dict[str, Any]:
+        return init_param_tree(self.param_specs(), rng)
+
+    def param_shapes(self) -> Dict[str, Any]:
+        return spec_tree_shapes(self.param_specs())
+
+    # ------------------------------------------------------------ embeddings
+
+    def _embed_inputs(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], cfg.dtype)
+        if cfg.frontend == "vision" and "patches" in batch:
+            pe = frontends.apply_frontend(params["frontend"], cfg, batch["patches"])
+            x = jnp.concatenate([pe, x], axis=1)
+        x = with_logical_constraint(x, ("batch", "attn_seq", "embed"))
+        return x
+
+    def _logits(self, params, x) -> jax.Array:
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x = norm(params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x)
+        else:
+            logits = x @ params["lm_head"]["kernel"].astype(x.dtype)
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        if cfg.padded_vocab != cfg.vocab:
+            # exact semantics: padded vocab rows never receive probability
+            pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+            logits = jnp.where(pad_mask, logits, -1e30)
+        return with_logical_constraint(logits, ("batch", "attn_seq", "vocab"))
+
+    # ----------------------------------------------------------------- train
+
+    def forward(self, params, batch, *, remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Full-sequence logits. batch: tokens (B,S) [+ frames/patches]."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc_in = frontends.apply_frontend(params["frontend"], cfg, batch["frames"])
+            enc = transformer.encoder_stack(params["encoder"], enc_in, cfg, remat=remat)
+            _, norm = make_norm(cfg.norm)
+            enc = norm(params["enc_norm"], enc)
+            enc_kv = self._cross_kv(params, enc)
+            x = embed(params["embed"], batch["tokens"], cfg.dtype)
+            pos = params["dec_pos_embed"][: x.shape[1]].astype(cfg.dtype)
+            x = x + pos[None]
+            x, _ = transformer.xdec_stack(params["decoder"], x, cfg, enc_kv=enc_kv, remat=remat)
+            return self._logits(params, x), {}
+        x = self._embed_inputs(params, batch)
+        x, _, aux = transformer.decoder_stack(params["decoder"], x, cfg, remat=remat)
+        return self._logits(params, x), aux
+
+    def loss(self, params, batch, *, remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Next-token CE (+ MoE aux). batch needs 'labels' (B, S), -1 = masked."""
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, remat=remat)
+        labels = batch["labels"]
+        if cfg.frontend == "vision" and "patches" in batch:
+            # image positions carry no LM loss
+            pads = jnp.full(batch["patches"].shape[:2], -1, labels.dtype)
+            labels = jnp.concatenate([pads, labels], axis=1)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce
+        metrics = {"ce_loss": ce, "tokens": jnp.sum(mask)}
+        for k, v in aux.items():
+            total = total + v
+            metrics[k] = v
+        metrics["loss"] = total
+        return total, metrics
+
+    def _cross_kv(self, params, enc_out):
+        """Per-decoder-layer cross K/V, stacked (L, B, S_enc, Kh, Dh)."""
+
+        def kv(lp):
+            return attn_mod.encoder_kv(lp["xattn"], enc_out)
+
+        return jax.vmap(kv, in_axes=0, out_axes=0)(params["decoder"]["blocks"])
+
+    # ----------------------------------------------------------------- serve
+
+    def make_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim if cfg.n_heads else 0
+
+        def kv_cache(n):
+            return {
+                "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), cfg.dtype),
+                "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), cfg.dtype),
+            }
+
+        if cfg.is_encdec:
+            return {"layers": kv_cache(cfg.n_layers), "pos": jnp.zeros((), jnp.int32)}
+        if cfg.family == "ssm":
+            base = make_ssd_cache(batch, cfg.d_model, cfg.ssm, cfg.dtype)
+            return {
+                "layers": jax.tree_util.tree_map(
+                    lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), base
+                ),
+                "pos": jnp.zeros((), jnp.int32),
+            }
+        if cfg.family == "hybrid":
+            pat = cfg.rglru.pattern
+            n_groups, rem = divmod(cfg.n_layers, len(pat))
+            win = min(cfg.sliding_window or max_len, max_len)
+
+            def layer_cache(kind, stacked_n=None):
+                if kind == "rglru":
+                    base = make_rglru_cache(batch, cfg.d_model, cfg.rglru, cfg.dtype)
+                else:
+                    base = {
+                        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), cfg.dtype),
+                        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), cfg.dtype),
+                    }
+                if stacked_n is None:
+                    return base
+                return jax.tree_util.tree_map(
+                    lambda a: jnp.zeros((stacked_n,) + a.shape, a.dtype), base
+                )
+
+            cache: Dict[str, Any] = {
+                "groups": {f"{i}_{kind}": layer_cache(kind, n_groups) for i, kind in enumerate(pat)},
+                "pos": jnp.zeros((), jnp.int32),
+            }
+            for r in range(rem):
+                kind = pat[r % len(pat)]
+                cache[f"tail_{r}_{kind}"] = layer_cache(kind)
+            return cache
+        return {"layers": kv_cache(cfg.n_layers), "pos": jnp.zeros((), jnp.int32)}
+
+    def _with_pos(self, cache_layers, pos):
+        """Distribute the global position scalar into per-layer kv caches."""
+        return cache_layers, pos
+
+    def prefill(self, params, batch, cache) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Run the prompt through the model, filling ``cache``.
+
+        Returns (logits for the last position (B, vocab), new cache).
+        """
+        return self._serve(params, batch, cache)
+
+    def decode_step(self, params, batch, cache) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One-token step: batch['tokens'] is (B, 1)."""
+        return self._serve(params, batch, cache)
+
+    def _serve(self, params, batch, cache):
+        cfg = self.cfg
+        pos = cache["pos"]
+        if cfg.is_encdec:
+            if "enc_kv" in batch:
+                enc_kv = batch["enc_kv"]
+            else:
+                enc_in = frontends.apply_frontend(params["frontend"], cfg, batch["frames"])
+                enc = transformer.encoder_stack(params["encoder"], enc_in, cfg, remat=False)
+                _, norm = make_norm(cfg.norm)
+                enc_kv = self._cross_kv(params, norm(params["enc_norm"], enc))
+            x = embed(params["embed"], batch["tokens"], cfg.dtype)
+            s = x.shape[1]
+            posids = pos + jnp.arange(s, dtype=jnp.int32)
+            x = x + jnp.take(params["dec_pos_embed"].astype(cfg.dtype), posids, axis=0)[None]
+            layer_caches = self._inject_pos(cache["layers"], pos)
+            x, new_layers = transformer.xdec_stack(
+                params["decoder"], x, cfg, enc_kv=enc_kv, cache=layer_caches, remat=False
+            )
+            new_cache = {"layers": self._strip_pos(new_layers), "pos": pos + s}
+            logits = self._logits(params, x[:, -1:, :])[:, 0]
+            return logits, new_cache
+
+        x = self._embed_inputs(params, batch)
+        s = x.shape[1]
+        if cfg.family in ("ssm",):
+            layer_caches = cache["layers"]
+            x, new_layers, _ = transformer.decoder_stack(
+                params["decoder"], x, cfg, cache=layer_caches, remat=False
+            )
+            new_cache = {"layers": new_layers, "pos": pos + s}
+        elif cfg.family == "hybrid":
+            hyb = {}
+            for k, v in cache.items():
+                if k == "pos":
+                    continue
+                hyb[k] = self._inject_pos(v, pos, stacked=(k == "groups"))
+            x, new_hyb, _ = transformer.decoder_stack(
+                params["decoder"], x, cfg, cache=hyb, remat=False
+            )
+            new_cache = {**self._strip_pos(new_hyb), "pos": pos + s}
+        else:
+            layer_caches = self._inject_pos(cache["layers"], pos)
+            x, new_layers, _ = transformer.decoder_stack(
+                params["decoder"], x, cfg, cache=layer_caches, remat=False
+            )
+            new_cache = {"layers": self._strip_pos(new_layers), "pos": pos + s}
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, new_cache
+
+    # kv caches used inside blocks carry their own 'pos'; inject/strip the
+    # global scalar so the serve-level cache holds it exactly once.  For
+    # stacked (scanned) caches the scalar is broadcast to (L,) so lax.scan
+    # can slice one per layer.
+    def _inject_pos(self, tree, pos, stacked: bool = True):
+        def walk(node):
+            if isinstance(node, dict):
+                if "k" in node and "v" in node:
+                    if stacked:
+                        n = node["k"].shape[0]
+                        return {**node, "pos": jnp.full((n,), pos, jnp.int32)}
+                    return {**node, "pos": pos}
+                return {k: walk(v) for k, v in node.items()}
+            return node
+
+        return walk(tree)
+
+    def _strip_pos(self, tree):
+        def walk(node):
+            if isinstance(node, dict):
+                if set(node.keys()) >= {"k", "v"}:
+                    return {k: v for k, v in node.items() if k != "pos"}
+                return {k: walk(v) for k, v in node.items()}
+            return node
+
+        return walk(tree)
+
+
+def build_model(cfg: ArchConfig) -> LM:
+    return LM(cfg)
+
+
+def exact_param_count(cfg: ArchConfig) -> int:
+    """Exact parameter count from the spec tree (no materialization)."""
+    import numpy as np
+
+    specs = LM(cfg).param_specs()
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active parameters per token (MoE experts scaled to top-k/E)."""
+    import numpy as np
+
+    total = exact_param_count(cfg)
+    if cfg.family != "moe":
+        return total
+    specs = LM(cfg).param_specs()
+    expert_leaves = []
+
+    def collect(tree, in_moe):
+        if isinstance(tree, ParamSpec):
+            return
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k in ("wi", "wg", "wo") and in_moe and isinstance(v, ParamSpec):
+                    expert_leaves.append(v)
+                else:
+                    collect(v, in_moe or k == "moe")
+
+    collect(specs, False)
+    expert_total = sum(int(np.prod(s.shape)) for s in expert_leaves)
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    return int(total - expert_total * (1.0 - frac))

@@ -1,0 +1,226 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch is sort-based (argsort by expert id + capacity clamp) rather than
+GShard one-hot einsums: the one-hot dispatch tensor is O(T²) at 4k–32k
+sequence lengths, while sort-based stays O(T·k + E·C·D) and maps onto an
+expert-parallel ('experts' → model axis) mesh, where the gathered (E, C, D)
+buffer becomes the all-to-all payload.
+
+Aux losses (load-balance, router-z) follow Switch/ST-MoE.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.parallel.sharding import with_logical_constraint
+
+from .layers import ParamSpec, dense, mlp, mlp_spec
+
+
+def moe_spec(d: int, cfg: MoEConfig, activation: str, use_bias: bool) -> Dict[str, Any]:
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    mult_gated = activation in ("swiglu", "geglu")
+    spec: Dict[str, Any] = {
+        "router": {"kernel": ParamSpec((d, e), ("embed", "experts"), dtype="float32")},
+        "wi": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if mult_gated:
+        spec["wg"] = ParamSpec((e, d, f), ("experts", "embed", "mlp"))
+    if cfg.shared_d_ff:
+        spec["shared"] = mlp_spec(d, cfg.shared_d_ff, activation, use_bias)
+    return spec
+
+
+def _expert_ffn_batched(params, x, activation: str):
+    """x: (B, E, C, D) → (B, E, C, D); E shards over model, B over data."""
+    wi = params["wi"].astype(x.dtype)
+    wo = params["wo"].astype(x.dtype)
+    h = jnp.einsum("becd,edf->becf", x, wi)
+    if "wg" in params:
+        g = jnp.einsum("becd,edf->becf", x, params["wg"].astype(x.dtype))
+        act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = with_logical_constraint(h, ("batch", "experts", None, "mlp"))
+    return jnp.einsum("becf,efd->becd", h, wo)
+
+
+def moe_layer(
+    params,
+    x: jax.Array,
+    cfg: MoEConfig,
+    activation: str,
+    *,
+    capacity: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) → (out (B, S, D), aux-loss dict).
+
+    Dispatch is **row-local** (per sequence, §Perf iteration 4): every
+    sequence routes its own S·k assignments with its own capacity, so the
+    sort/cumsum/scatter machinery is batched over B and stays sharded over
+    the data axis, while the (B, E, C, D) expert buffers shard E over the
+    model axis — the only cross-shard movement is the implicit
+    data↔expert all-to-all on the (small) buffers.  A global-sort dispatch
+    forces GSPMD to replicate (T·k, D) tensors (measured: a 6 GiB f32
+    all-reduce per layer per microbatch on moonshot train_4k).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tk = s * k
+
+    # ---- routing (fp32 for numerics)
+    logits = x.astype(jnp.float32) @ params["router"]["kernel"]  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch/ST-MoE)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )
+    load_balance = e * jnp.sum(me * ce) / k
+    router_z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {
+        "load_balance_loss": cfg.load_balance_coef * load_balance,
+        "router_z_loss": cfg.router_z_coef * router_z,
+    }
+
+    # ---- row-local sort-based dispatch with capacity clamp
+    if capacity is None:
+        capacity = int(cfg.capacity_factor * s * k / e + 1)
+    capacity = min(capacity, s)
+
+    out = _dispatch_ffn_combine(params, x, expert_idx, gate_vals, capacity,
+                                cfg, activation)
+
+    if cfg.shared_d_ff:
+        out = out + mlp(params["shared"], x, activation).astype(jnp.float32)
+
+    return out.astype(x.dtype), aux
+
+
+def _dispatch_combine_local(params, x, expert_idx, gate_vals, capacity: int,
+                            e: int, k: int, activation: str,
+                            ffn=None, expert_offset=0, e_local=None) -> jax.Array:
+    """Row-local dispatch → expert FFN → (partial) combine.
+
+    Pure function of local shards; every op batches over B (no cross-row
+    indexing).  With ``expert_offset``/``e_local`` set, only the local
+    expert slice is buffered/computed/combined — the caller psums partial
+    outputs over the expert-parallel axis."""
+    b, s, d = x.shape
+    tk = s * k
+    e_local = e_local if e_local is not None else e
+    flat_expert = expert_idx.reshape(b, tk)
+    flat_gate = gate_vals.reshape(b, tk)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None], (b, tk)
+    )
+
+    order = jnp.argsort(flat_expert, axis=1, stable=True)  # (B, S·k)
+    se = jnp.take_along_axis(flat_expert, order, axis=1)
+    sg = jnp.take_along_axis(flat_gate, order, axis=1)
+    stok = jnp.take_along_axis(flat_token, order, axis=1)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    counts = jnp.zeros((b, e), jnp.int32).at[rows, se].add(1)
+    group_start = jnp.cumsum(counts, axis=1) - counts  # (B, E)
+    pos = jnp.arange(tk, dtype=jnp.int32)[None] - jnp.take_along_axis(group_start, se, axis=1)
+    keep = pos < capacity
+
+    se_loc = se - expert_offset
+    in_range = keep & (se_loc >= 0) & (se_loc < e_local)
+    slot = jnp.where(in_range, se_loc * capacity + pos, e_local * capacity - 1)
+    x_tok = jnp.take_along_axis(x, stok[..., None], axis=1)  # (B, S·k, D)
+    buf = jnp.zeros((b, e_local * capacity, d), x.dtype)
+    buf = buf.at[rows, slot].add(jnp.where(in_range[..., None], x_tok, 0).astype(x.dtype))
+    buf = buf.reshape(b, e_local, capacity, d)
+
+    y = (ffn or _expert_ffn_batched_local)(params, buf, activation)  # (B, E_loc, C, D)
+    y = y.reshape(b, e_local * capacity, d)
+
+    vals = jnp.where(in_range[..., None], jnp.take_along_axis(y, slot[..., None], axis=1), 0)
+    out = jnp.zeros((b, s, d), jnp.float32)
+    return out.at[rows, stok].add(vals.astype(jnp.float32) * sg[..., None])
+
+
+def _dispatch_ffn_combine(params, x, expert_idx, gate_vals, capacity: int,
+                          cfg: MoEConfig, activation: str) -> jax.Array:
+    """Expert-parallel dispatch (§Perf iterations 4–6).
+
+    With a mesh whose 'model' axis divides E, the whole dispatch → FFN →
+    combine runs inside shard_map: sorts/scatters are rank-local and the
+    data↔expert movement is exactly two all-to-alls of the (B, E, C, D)
+    buffers.  Under plain GSPMD, cross-sharding scatters replicate
+    (T·k, D)-sized tensors (measured 6–15 TiB of all-reduce per step on
+    moonshot train_4k).  Falls back to the local path without a mesh.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import current_mesh
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    mesh = current_mesh()
+    ep = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+    batch_axes = tuple(a for a in ("pod", "data") if a in (mesh.axis_names if mesh else ()))
+    dp = 1
+    for a in batch_axes:
+        dp *= int(mesh.shape[a])
+    if mesh is None or ep <= 1 or e % ep != 0 or b % max(dp, 1) != 0:
+        return _dispatch_combine_local(params, x, expert_idx, gate_vals, capacity,
+                                       e, k, activation)
+
+    e_local = e // ep
+
+    def body(x_l, ei_l, gv_l, wi, wg, wo):
+        # x is replicated across the model axis within each data group, so
+        # each model rank computes ONLY its expert slice for its rows and the
+        # partial outputs psum over 'model' (§Perf iteration 7) — no
+        # all-to-all, no row duplication.
+        p = {"wi": wi, "wo": wo}
+        if wg is not None:
+            p["wg"] = wg
+        offset = jax.lax.axis_index("model") * e_local
+        partial = _dispatch_combine_local(p, x_l, ei_l, gv_l, capacity, e, k,
+                                          activation, expert_offset=offset,
+                                          e_local=e_local)
+        return jax.lax.psum(partial, "model")
+
+    has_wg = "wg" in params
+    data_spec = P(batch_axes, None, None)
+    w_spec = P("model", None, None)
+    if has_wg:
+        fn = jax.shard_map(body, mesh=mesh,
+                           in_specs=(data_spec, data_spec, data_spec, w_spec, w_spec, w_spec),
+                           out_specs=data_spec, check_vma=False)
+        return fn(x, expert_idx, gate_vals, params["wi"], params["wg"], params["wo"])
+
+    def body_nog(x_l, ei_l, gv_l, wi, wo):
+        return body(x_l, ei_l, gv_l, wi, None, wo)
+
+    fn = jax.shard_map(body_nog, mesh=mesh,
+                       in_specs=(data_spec, data_spec, data_spec, w_spec, w_spec),
+                       out_specs=data_spec, check_vma=False)
+    return fn(x, expert_idx, gate_vals, params["wi"], params["wo"])
+
+
+def _expert_ffn_batched_local(params, x, activation: str):
+    """(B, E_loc, C, D) FFN on already-local expert weights (no constraints)."""
+    wi = params["wi"].astype(x.dtype)
+    wo = params["wo"].astype(x.dtype)
+    h = jnp.einsum("becd,edf->becf", x, wi)
+    if "wg" in params and params["wg"] is not None:
+        g = jnp.einsum("becd,edf->becf", x, params["wg"].astype(x.dtype))
+        act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("becf,efd->becd", h, wo)

@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The recurrence h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t) is exactly the
+DSL's ``computation(FORWARD)`` pattern (DESIGN.md §4): sequential in one
+axis, parallel in all others.  Training/prefill uses an associative scan
+(log-depth); decode is a single fused step.  A Pallas chunked-scan kernel
+(repro.kernels.rglru) provides the TPU fast path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.parallel.sharding import with_logical_constraint
+
+from .layers import ParamSpec
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def rglru_block_spec(d_model: int, cfg: RGLRUConfig) -> Dict[str, Any]:
+    dr = cfg.d_rnn or int(1.5 * d_model)
+    return {
+        # two input branches (recurrent + gate), GeGLU-style
+        "w_x": {"kernel": ParamSpec((d_model, dr), ("embed", "mlp"))},
+        "w_gate": {"kernel": ParamSpec((d_model, dr), ("embed", "mlp"))},
+        "conv_w": ParamSpec((cfg.d_conv, dr), (None, "conv_io")),
+        "conv_b": ParamSpec((dr,), ("conv_io",), init="zeros"),
+        # RG-LRU gates
+        "w_input_gate": ParamSpec((dr,), ("mlp",), init="zeros"),
+        "b_input_gate": ParamSpec((dr,), ("mlp",), init="zeros"),
+        "w_rec_gate": ParamSpec((dr,), ("mlp",), init="zeros"),
+        "b_rec_gate": ParamSpec((dr,), ("mlp",), init="zeros"),
+        "lambda_param": ParamSpec((dr,), ("mlp",), init="ones"),
+        "w_out": {"kernel": ParamSpec((dr, d_model), ("mlp", "embed"))},
+    }
+
+
+def _rglru_scan(x: jax.Array, a: jax.Array, h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t·h_{t−1} + x_t via associative scan over S. x,a: (B,S,D)."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    if h0 is not None:
+        # fold initial state into the first element
+        x = x.at[:, 0, :].add(a[:, 0, :] * h0)
+    aa, hh = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return hh, hh[:, -1, :]
+
+
+def rglru(
+    params, x: jax.Array, *, h0: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Core RG-LRU over (B, S, Dr). Returns (y, final h)."""
+    x32 = x.astype(jnp.float32)
+    gate_in = jax.nn.sigmoid(x32 * params["w_input_gate"] + params["b_input_gate"])
+    gate_rec = jax.nn.sigmoid(x32 * params["w_rec_gate"] + params["b_rec_gate"])
+    log_a = -_C * gate_rec * jax.nn.softplus(params["lambda_param"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = mult * gate_in * x32
+    h, h_last = _rglru_scan(gated, a, None if h0 is None else h0.astype(jnp.float32))
+    return h.astype(x.dtype), h_last.astype(x.dtype)
+
+
+def rglru_step(params, x: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. x, h: (B, Dr)."""
+    x32 = x.astype(jnp.float32)
+    gate_in = jax.nn.sigmoid(x32 * params["w_input_gate"] + params["b_input_gate"])
+    gate_rec = jax.nn.sigmoid(x32 * params["w_rec_gate"] + params["b_rec_gate"])
+    log_a = -_C * gate_rec * jax.nn.softplus(params["lambda_param"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h_new = a * h.astype(jnp.float32) + mult * gate_in * x32
+    return h_new.astype(x.dtype), h_new.astype(x.dtype)
+
+
+def _causal_conv(x, w, b, tail):
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return y + b[None, None, :], xp[:, xp.shape[1] - (k - 1) :, :]
+
+
+def rglru_block(
+    params,
+    x: jax.Array,
+    cfg: RGLRUConfig,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full recurrent block: in-proj ∥ gate, conv1d, RG-LRU, gated out-proj.
+
+    cache: {'conv': (B, d_conv−1, Dr), 'h': (B, Dr)} for decode.
+    """
+    gate = jax.nn.gelu(x @ params["w_gate"]["kernel"].astype(x.dtype))
+    xr = x @ params["w_x"]["kernel"].astype(x.dtype)
+    tail = cache["conv"] if cache is not None else None
+    xr, new_tail = _causal_conv(xr, params["conv_w"].astype(x.dtype),
+                                params["conv_b"].astype(x.dtype), tail)
+    xr = with_logical_constraint(xr, ("batch", "seq", "mlp"))
+    h0 = cache["h"] if cache is not None else None
+    y, h_last = rglru(params, xr, h0=h0)
+    out = (y * gate) @ params["w_out"]["kernel"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail, "h": h_last}
+    return out, new_cache
+
+
+def make_rglru_cache(batch: int, d_model: int, cfg: RGLRUConfig, dtype) -> Dict[str, jax.Array]:
+    dr = cfg.d_rnn or int(1.5 * d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, dr), dtype),
+        "h": jnp.zeros((batch, dr), dtype),
+    }

@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD — state-space duality) block in pure JAX.
+
+Chunked SSD algorithm (Dao & Gu 2024): the sequence is split into chunks of
+Q tokens; within a chunk the output is a masked quadratic (attention-like)
+term; across chunks a (H, N, P) state is carried by a sequential scan —
+linear in S, matmul-rich (MXU-friendly), and O(1)-state for decode.
+
+Decode carries {conv tail (B, d_conv-1, d_xBC), state (B, H, N, P)}.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.parallel.sharding import with_logical_constraint
+
+from .layers import ParamSpec
+
+
+def ssd_spec(d_model: int, cfg: SSMConfig) -> Dict[str, Any]:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    d_xbc = di + 2 * gn
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": {"kernel": ParamSpec((d_model, di + d_xbc + nh), ("embed", "mlp"))},
+        "conv_w": ParamSpec((cfg.d_conv, d_xbc), (None, "conv_io")),
+        "conv_b": ParamSpec((d_xbc,), ("conv_io",), init="zeros"),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "norm_scale": ParamSpec((di,), ("mlp",), init="ones"),
+        "w_out": {"kernel": ParamSpec((di, d_model), ("mlp", "embed"))},
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C). Returns (y, new_tail)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_tail = xp[:, xp.shape[1] - (k - 1) :, :]
+    return jax.nn.silu(y + b[None, None, :]), new_tail
+
+
+def _ssd_chunked(x, dt, A, B, C, D, chunk: int, state0: Optional[jax.Array] = None):
+    """Core SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (softplus'd); A: (H,) (negative);
+    B, C: (B, S, G, N); D: (H,).  Returns (y (B,S,H,P), final state (B,H,N,P)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # reshape to chunks: (B, nc, Q, ...)
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = C.reshape(b, nc, q, g, n)
+    rep = h // g
+
+    da = dtc * A[None, None, None, :]          # (B, nc, Q, H) log-decay per step
+    cum = jnp.cumsum(da, axis=2)               # within-chunk cumulative
+    seg_total = cum[:, :, -1, :]                # (B, nc, H)
+
+    # ---- intra-chunk (quadratic within Q): L[i,j] = exp(cum_i - cum_j) · (i >= j)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    ii = jnp.arange(q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    Bh = jnp.repeat(Bc, rep, axis=3)            # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcqhn,bcshn->bcqsh", Ch, Bh)          # (B,nc,Q,Q,H)
+    w = scores * L * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", w, xc)
+
+    # ---- chunk states: S_c = Σ_j exp(seg_total - cum_j) dt_j B_j ⊗ x_j
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)     # (B,nc,Q,H)
+    wB = Bh * (decay_to_end * dtc)[..., None]                  # (B,nc,Q,H,N)
+    chunk_states = jnp.einsum("bcqhn,bcqhp->bchnp", wB, xc)    # (B,nc,H,N,P)
+
+    # ---- inter-chunk scan carrying (B,H,N,P)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, p), x.dtype)
+
+    def scan_body(state, inputs):
+        seg, cs = inputs  # seg (B,H), cs (B,H,N,P)
+        out_state = state  # state BEFORE this chunk
+        new_state = state * jnp.exp(seg)[..., None, None] + cs
+        return new_state, out_state
+
+    xs = (jnp.moveaxis(seg_total, 1, 0), jnp.moveaxis(chunk_states, 1, 0))
+    final_state, prev_states = jax.lax.scan(scan_body, state0, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution: y_i += (C_i · S_prev) · exp(cum_i)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Ch, prev_states) * jnp.exp(cum)[..., None]
+
+    y = y_intra + y_inter + xc * D[None, None, None, :, None]
+    y = y.reshape(b, nc * q, h, p)[:, :s]
+    return y, final_state
+
+
+def ssd_block(
+    params,
+    x: jax.Array,
+    cfg: SSMConfig,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba-2 block. x: (B, S, D). cache: {'conv', 'state'} for decode."""
+    b, s, d_model = x.shape
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    d_xbc = di + 2 * gn
+
+    proj = x @ params["w_in"]["kernel"].astype(x.dtype)  # (B,S, di + d_xbc + nh)
+    z, xbc, dt_raw = jnp.split(proj, [di, di + d_xbc], axis=-1)
+
+    conv_tail = cache["conv"] if cache is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"].astype(x.dtype),
+                                 params["conv_b"].astype(x.dtype), conv_tail)
+    xs, B, C = jnp.split(xbc, [di, di + gn], axis=-1)
+    xs = xs.reshape(b, s, nh, cfg.head_dim)
+    B = B.reshape(b, s, cfg.n_groups, cfg.d_state)
+    C = C.reshape(b, s, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) negative
+
+    xs = with_logical_constraint(xs, ("batch", "seq", "ssm_heads", None))
+
+    state0 = cache["state"] if cache is not None else None
+    y, final_state = _ssd_chunked(
+        xs.astype(jnp.float32), dt, A, B.astype(jnp.float32), C.astype(jnp.float32),
+        params["D"].astype(jnp.float32), cfg.chunk,
+        state0=None if state0 is None else state0.astype(jnp.float32),
+    )
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    # gated RMSNorm (Mamba-2)
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y32 = y32 * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
+    y = y32.astype(x.dtype)
+
+    out = y @ params["w_out"]["kernel"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail, "state": final_state.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def make_ssd_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> Dict[str, jax.Array]:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di + 2 * gn), dtype),
+        "state": jnp.zeros((batch, nh, cfg.d_state, cfg.head_dim), dtype),
+    }

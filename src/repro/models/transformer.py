@@ -1,0 +1,315 @@
+"""Block definitions + scan-over-layers stacks for every assigned family.
+
+Uniform stacks (dense / moe / ssm / encoder / decoder) scan over stacked
+per-layer parameters — small HLO, fast multi-pod compiles, standard remat.
+The hybrid (RecurrentGemma) stack scans over repeating [rglru, rglru, attn]
+groups with an unrolled remainder.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import with_logical_constraint
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import ParamSpec, make_norm, mlp, mlp_spec
+
+
+# ---------------------------------------------------------------------------
+# spec stacking
+# ---------------------------------------------------------------------------
+
+
+def stack_specs(spec: Any, n: int) -> Any:
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + tuple(s.shape), (None,) + tuple(s.logical),
+                         dtype=s.dtype, init=s.init, scale=s.scale)
+
+    return jax.tree_util.tree_map(_stack, spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# blocks (params, x, cache) -> (x, cache, aux)
+# ---------------------------------------------------------------------------
+
+
+def dense_block_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    norm_spec, _ = make_norm(cfg.norm)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    spec = {
+        "ln1": norm_spec(d),
+        "attn": attn_mod.attention_spec(d, cfg.n_heads, cfg.n_kv_heads, hd, cfg.use_bias),
+    }
+    if cfg.family == "moe":
+        spec["moe"] = moe_mod.moe_spec(d, cfg.moe, cfg.activation, cfg.use_bias)
+    else:
+        spec["mlp"] = mlp_spec(d, cfg.d_ff, cfg.activation, cfg.use_bias)
+    if not cfg.parallel_block:
+        spec["ln2"] = norm_spec(d)
+    return spec
+
+
+def dense_block(params, x, cfg: ArchConfig, *, cache=None, window=None, impl=None):
+    _, norm = make_norm(cfg.norm)
+    impl = impl or cfg.attention_impl
+    aux: Dict[str, jax.Array] = {}
+    if cfg.parallel_block:
+        h = norm(params["ln1"], x)
+        attn_out, new_cache = attn_mod.self_attention(
+            params["attn"], h, n_kv_heads=cfg.n_kv_heads, rope_theta=cfg.rope_theta,
+            impl=impl, window=window, chunk=cfg.attention_chunk, cache=cache,
+        )
+        if cfg.family == "moe":
+            ff_out, aux = moe_mod.moe_layer(params["moe"], h, cfg.moe, cfg.activation)
+        else:
+            ff_out = mlp(params["mlp"], h, cfg.activation)
+        x = x + attn_out + ff_out
+    else:
+        h = norm(params["ln1"], x)
+        # pin the sequence sharding on the (bf16) norm output so GSPMD places
+        # any gather after the cast and keeps matmul inputs seq-sharded
+        h = with_logical_constraint(h, ("batch", "attn_seq", "embed"))
+        attn_out, new_cache = attn_mod.self_attention(
+            params["attn"], h, n_kv_heads=cfg.n_kv_heads, rope_theta=cfg.rope_theta,
+            impl=impl, window=window, chunk=cfg.attention_chunk, cache=cache,
+        )
+        attn_out = with_logical_constraint(attn_out, ("batch", "attn_seq", "embed"))
+        x = x + attn_out
+        h2 = norm(params["ln2"], x)
+        h2 = with_logical_constraint(h2, ("batch", "attn_seq", "embed"))
+        if cfg.family == "moe":
+            ff_out, aux = moe_mod.moe_layer(params["moe"], h2, cfg.moe, cfg.activation)
+        else:
+            ff_out = mlp(params["mlp"], h2, cfg.activation)
+        ff_out = with_logical_constraint(ff_out, ("batch", "attn_seq", "embed"))
+        x = x + ff_out
+    # sequence-parallel residual stream (§Perf iteration 2): the stream stays
+    # sequence-sharded over the model axis; norms/elementwise run sharded and
+    # only K/V (small) are gathered inside attention
+    x = with_logical_constraint(x, ("batch", "attn_seq", "embed"))
+    return x, new_cache, aux
+
+
+def ssm_block_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    norm_spec, _ = make_norm(cfg.norm)
+    return {"ln": norm_spec(cfg.d_model), "ssm": ssm_mod.ssd_spec(cfg.d_model, cfg.ssm)}
+
+
+def ssm_block(params, x, cfg: ArchConfig, *, cache=None):
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["ln"], x)
+    y, new_cache = ssm_mod.ssd_block(params["ssm"], h, cfg.ssm, cache=cache)
+    return x + y, new_cache, {}
+
+
+def rglru_block_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    norm_spec, _ = make_norm(cfg.norm)
+    d = cfg.d_model
+    return {
+        "ln1": norm_spec(d),
+        "rec": rglru_mod.rglru_block_spec(d, cfg.rglru),
+        "ln2": norm_spec(d),
+        "mlp": mlp_spec(d, cfg.d_ff, cfg.activation, cfg.use_bias),
+    }
+
+
+def rglru_block(params, x, cfg: ArchConfig, *, cache=None):
+    _, norm = make_norm(cfg.norm)
+    y, new_cache = rglru_mod.rglru_block(params["rec"], norm(params["ln1"], x), cfg.rglru, cache=cache)
+    x = x + y
+    x = x + mlp(params["mlp"], norm(params["ln2"], x), cfg.activation)
+    return x, new_cache, {}
+
+
+# ---------------------------------------------------------------------------
+# uniform decoder stack (scan over layers)
+# ---------------------------------------------------------------------------
+
+
+def _scan_stack(body: Callable, x, stacked_params, cache, remat: bool):
+    """body(layer_params, x, layer_cache) -> (x, new_layer_cache, aux)."""
+    has_cache = cache is not None
+
+    def fn(carry, inp):
+        lp, c = inp if has_cache else (inp, None)
+        y, nc, aux = body(lp, carry, c)
+        return y, (nc, aux)
+
+    if remat:
+        fn = jax.checkpoint(fn, prevent_cse=False)
+    xs = (stacked_params, cache) if has_cache else stacked_params
+    x, (new_cache, auxes) = jax.lax.scan(fn, x, xs)
+    return x, (new_cache if has_cache else None), auxes
+
+
+def decoder_stack_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    if cfg.family == "ssm":
+        block = ssm_block_spec(cfg)
+        return {"blocks": stack_specs(block, cfg.n_layers)}
+    if cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        n_groups, rem = divmod(cfg.n_layers, len(pat))
+        group = {f"{i}_{kind}": (rglru_block_spec(cfg) if kind == "rglru" else dense_block_spec(cfg))
+                 for i, kind in enumerate(pat)}
+        spec = {"groups": stack_specs(group, n_groups)}
+        for r in range(rem):
+            kind = pat[r % len(pat)]
+            spec[f"tail_{r}_{kind}"] = rglru_block_spec(cfg) if kind == "rglru" else dense_block_spec(cfg)
+        return spec
+    return {"blocks": stack_specs(dense_block_spec(cfg), cfg.n_layers)}
+
+
+def decoder_stack(params, x, cfg: ArchConfig, *, cache=None, remat=True, impl=None):
+    """Returns (x, new_cache, aux_losses_summed)."""
+    auxsum: Dict[str, jax.Array] = {}
+
+    def add_aux(aux):
+        for k, v in aux.items():
+            auxsum[k] = auxsum.get(k, 0.0) + jnp.sum(v)
+
+    if cfg.family == "ssm":
+        body = lambda lp, h, c: ssm_block(lp, h, cfg, cache=c)  # noqa: E731
+        x, new_cache, _ = _scan_stack(body, x, params["blocks"], cache, remat)
+        return x, new_cache, auxsum
+
+    if cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        n_groups, rem = divmod(cfg.n_layers, len(pat))
+
+        def group_body(gp, h, gc):
+            nc = {}
+            for i, kind in enumerate(pat):
+                key = f"{i}_{kind}"
+                c = None if gc is None else gc[key]
+                if kind == "rglru":
+                    h, nci, _ = rglru_block(gp[key], h, cfg, cache=c)
+                else:
+                    h, nci, _ = dense_block(gp[key], h, cfg, cache=c,
+                                            window=cfg.sliding_window, impl=impl)
+                nc[key] = nci
+            return h, nc, {}
+
+        gcache = None if cache is None else cache["groups"]
+        x, new_gcache, _ = _scan_stack(group_body, x, params["groups"], gcache, remat)
+        new_cache = {"groups": new_gcache}
+        for r in range(rem):
+            kind = pat[r % len(pat)]
+            key = f"tail_{r}_{kind}"
+            c = None if cache is None else cache[key]
+            if kind == "rglru":
+                x, nc, _ = rglru_block(params[key], x, cfg, cache=c)
+            else:
+                x, nc, _ = dense_block(params[key], x, cfg, cache=c,
+                                       window=cfg.sliding_window, impl=impl)
+            new_cache[key] = nc
+        return x, (new_cache if cache is not None else None), auxsum
+
+    # dense / moe / vlm / internlm backbone
+    body = lambda lp, h, c: dense_block(lp, h, cfg, cache=c, window=cfg.sliding_window, impl=impl)  # noqa: E731
+    x, new_cache, auxes = _scan_stack(body, x, params["blocks"], cache, remat)
+    if cfg.family == "moe":
+        for k in ("load_balance_loss", "router_z_loss"):
+            if k in auxes:
+                auxsum[k] = jnp.sum(auxes[k])
+    return x, new_cache, auxsum
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper-style)
+# ---------------------------------------------------------------------------
+
+
+def encoder_block_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    norm_spec, _ = make_norm(cfg.norm)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "ln1": norm_spec(d),
+        "attn": attn_mod.attention_spec(d, cfg.n_heads, cfg.n_kv_heads, hd, cfg.use_bias),
+        "ln2": norm_spec(d),
+        "mlp": mlp_spec(d, cfg.d_ff, cfg.activation, cfg.use_bias),
+    }
+
+
+def encoder_block(params, x, cfg: ArchConfig, impl=None):
+    _, norm = make_norm(cfg.norm)
+    h, _ = attn_mod.self_attention(
+        params["attn"], norm(params["ln1"], x), n_kv_heads=cfg.n_kv_heads,
+        rope_theta=None, impl=impl or cfg.attention_impl, causal=False,
+        chunk=cfg.attention_chunk,
+    )
+    x = x + h
+    x = x + mlp(params["mlp"], norm(params["ln2"], x), cfg.activation)
+    return x
+
+
+def xdec_block_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    norm_spec, _ = make_norm(cfg.norm)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "ln1": norm_spec(d),
+        "attn": attn_mod.attention_spec(d, cfg.n_heads, cfg.n_kv_heads, hd, cfg.use_bias),
+        "ln_x": norm_spec(d),
+        "xattn": attn_mod.cross_attention_spec(d, cfg.n_heads, cfg.n_kv_heads, hd),
+        "ln2": norm_spec(d),
+        "mlp": mlp_spec(d, cfg.d_ff, cfg.activation, cfg.use_bias),
+    }
+
+
+def xdec_block(params, x, cfg: ArchConfig, *, enc_kv=None, cache=None, impl=None):
+    """Decoder block with cross-attention. enc_kv: (k, v) from the encoder."""
+    _, norm = make_norm(cfg.norm)
+    impl = impl or cfg.attention_impl
+    h, new_cache = attn_mod.self_attention(
+        params["attn"], norm(params["ln1"], x), n_kv_heads=cfg.n_kv_heads,
+        rope_theta=None, impl=impl, chunk=cfg.attention_chunk, cache=cache,
+    )
+    x = x + h
+    x = x + attn_mod.cross_attention(params["xattn"], norm(params["ln_x"], x), enc_kv,
+                                     impl, cfg.attention_chunk)
+    x = x + mlp(params["mlp"], norm(params["ln2"], x), cfg.activation)
+    return x, new_cache, {}
+
+
+def encoder_stack_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    return {"blocks": stack_specs(encoder_block_spec(cfg), cfg.n_encoder_layers)}
+
+
+def encoder_stack(params, x, cfg: ArchConfig, remat=True, impl=None):
+    def body(carry, lp):
+        return encoder_block(lp, carry, cfg, impl=impl), None
+
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    return x
+
+
+def xdec_stack_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    return {"blocks": stack_specs(xdec_block_spec(cfg), cfg.n_layers)}
+
+
+def xdec_stack(params, x, cfg: ArchConfig, *, enc_kv, cache=None, remat=True, impl=None):
+    """enc_kv: stacked (L, B, S_enc, Kh, Dh) pair."""
+
+    has_cache = cache is not None
+
+    def body(carry, inp):
+        if has_cache:
+            lp, ekv, c = inp
+        else:
+            (lp, ekv), c = inp, None
+        y, nc, _ = xdec_block(lp, carry, cfg, enc_kv=ekv, cache=c, impl=impl)
+        return y, nc
+
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    xs = (params["blocks"], enc_kv, cache) if has_cache else (params["blocks"], enc_kv)
+    x, new_cache = jax.lax.scan(fn, x, xs)
+    return x, (new_cache if has_cache else None)

@@ -1,0 +1,15 @@
+"""Optimizer substrate (built from scratch — no optax in this environment)."""
+
+from .adamw import OptState, adamw_init, adamw_update
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .clip import global_norm, clip_by_global_norm
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "global_norm",
+    "clip_by_global_norm",
+]

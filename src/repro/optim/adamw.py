@@ -1,0 +1,68 @@
+"""AdamW with decoupled weight decay, fp32 master state, bf16-safe updates.
+
+State layout mirrors the parameter pytree (m, v per leaf) so the same
+logical-axis shardings apply — optimizer states shard exactly like their
+parameters (ZeRO-1 falls out of the 'data'-axis rules if configured).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # () int32
+    m: Any  # pytree like params (f32)
+    v: Any  # pytree like params (f32)
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: OptState,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_scale: Optional[jax.Array] = None,
+):
+    """Returns (new_params, new_state). ``lr`` may be a traced scalar."""
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        if grad_scale is not None:
+            g32 = g32 * grad_scale
+        m_new = b1 * m + (1.0 - b1) * g32
+        v_new = b2 * v + (1.0 - b2) * jnp.square(g32)
+        mh = m_new / c1
+        vh = v_new / c2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2), standard practice
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v)

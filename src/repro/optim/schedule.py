@@ -1,0 +1,19 @@
+"""LR schedules as pure functions of the (traced) step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, base_lr: float, total_steps: int, final_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return base_lr * (final_frac + (1.0 - final_frac) * cos)
+
+
+def linear_warmup_cosine(step, base_lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    warm = base_lr * (step.astype(jnp.float32) + 1.0) / max(warmup_steps, 1)
+    cos = cosine_schedule(step - warmup_steps, base_lr, max(total_steps - warmup_steps, 1),
+                          final_frac)
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,20 @@
+"""Distribution substrate: logical axis rules, sharding helpers, pipeline
+parallelism, halo exchange for distributed stencils, gradient compression."""
+
+from .sharding import (
+    LogicalAxisRules,
+    axis_rules,
+    current_rules,
+    logical_sharding,
+    logical_spec,
+    with_logical_constraint,
+)
+
+__all__ = [
+    "LogicalAxisRules",
+    "axis_rules",
+    "current_rules",
+    "logical_sharding",
+    "logical_spec",
+    "with_logical_constraint",
+]

@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules (MaxText/T5X-style).
+
+Model code annotates activations and parameters with *logical* axis names
+('batch', 'heads', 'embed', ...).  A :class:`LogicalAxisRules` context maps
+those to physical mesh axes ('pod', 'data', 'model') per deployment, so the
+same model definition runs on a laptop (no mesh), one pod (16×16) or the
+multi-pod production mesh (2×16×16) without edits — the separation-of-
+concerns argument of the paper applied to distribution.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, None, Tuple[str, ...]]
+
+
+class LogicalAxisRules:
+    """Ordered mapping logical-axis-name → mesh axis (or tuple of axes, or None)."""
+
+    def __init__(self, rules: Sequence[Tuple[str, AxisName]]):
+        self.rules: Dict[str, AxisName] = dict(rules)
+
+    def mesh_axes(
+        self,
+        logical: Sequence[Optional[str]],
+        mesh: Optional[Mesh] = None,
+        shape: Optional[Sequence[int]] = None,
+    ) -> P:
+        """Translate logical axes to a PartitionSpec.
+
+        Rules applied left-to-right with three safeguards that make one rule
+        set serve every architecture (DESIGN.md §5):
+        * axes not present in the mesh are dropped,
+        * one mesh axis is never used for two tensor dims,
+        * if ``shape`` is given, a mapping whose dim is not divisible by the
+          mesh-axis size is dropped — e.g. 56 query heads or 8 kv heads on a
+          16-way model axis fall through, letting a later dim (head_dim)
+          pick the axis up instead.
+        """
+        used: set = set()
+        out = []
+        mesh_axis_names = set(mesh.axis_names) if mesh is not None else None
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+
+        def _divides(dim_size: Optional[int], axes: Tuple[str, ...]) -> bool:
+            if dim_size is None or mesh is None:
+                return True
+            total = 1
+            for a in axes:
+                total *= sizes.get(a, 1)
+            return total > 0 and dim_size % total == 0
+
+        for i, name in enumerate(logical):
+            dim = None if shape is None else int(shape[i])
+            if name is None:
+                out.append(None)
+                continue
+            axis = self.rules.get(name)
+            if axis is None:
+                out.append(None)
+                continue
+            if isinstance(axis, tuple):
+                ax = tuple(
+                    a for a in axis
+                    if a not in used and (mesh_axis_names is None or a in mesh_axis_names)
+                )
+                if ax and _divides(dim, ax):
+                    used.update(ax)
+                    out.append(ax)
+                else:
+                    out.append(None)
+            else:
+                if axis in used or (mesh_axis_names is not None and axis not in mesh_axis_names) \
+                        or not _divides(dim, (axis,)):
+                    out.append(None)
+                else:
+                    used.add(axis)
+                    out.append(axis)
+        # PartitionSpec trims trailing Nones automatically
+        return P(*out)
+
+
+# Default production rules: batch over (pod, data); model-parallel dims over
+# model; sequence parallelism over data for batch-starved decode shapes.
+DEFAULT_RULES = LogicalAxisRules(
+    [
+        ("batch", ("pod", "data")),
+        ("seq", None),  # sequence usually replicated (activations)
+        # context-parallel attention: q sequence over the model axis when
+        # head counts don't divide it (beyond-paper optimization, §Perf)
+        ("attn_seq", "model"),
+        # decode KV caches: sequence-parallel over model (flash-decode style)
+        ("kv_seq", "model"),
+        ("embed", None),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        # fallback TP axis: picks up 'model' when a head count does not
+        # divide it (56H / 8KV / 14H archs) — contraction-dim sharding
+        ("head_dim", "model"),
+        ("mlp", "model"),
+        ("experts", "model"),
+        ("vocab", "model"),
+        ("conv_io", None),
+        ("ssm_heads", "model"),
+        ("ssm_state", None),
+        ("stage", "pipe"),
+        # distributed stencils: horizontal plane decomposed over the mesh
+        ("field_i", ("pod", "data")),
+        ("field_j", "model"),
+    ]
+)
+
+_local = threading.local()
+
+
+def current_rules() -> LogicalAxisRules:
+    return getattr(_local, "rules", DEFAULT_RULES)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_local, "mesh", None)
+
+
+@contextmanager
+def axis_rules(rules: LogicalAxisRules, mesh: Optional[Mesh] = None):
+    prev_rules = getattr(_local, "rules", None)
+    prev_mesh = getattr(_local, "mesh", None)
+    _local.rules = rules
+    _local.mesh = mesh
+    try:
+        yield
+    finally:
+        if prev_rules is None:
+            del _local.rules
+        else:
+            _local.rules = prev_rules
+        _local.mesh = prev_mesh
+
+
+def logical_spec(logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
+                 shape: Optional[Sequence[int]] = None) -> P:
+    return current_rules().mesh_axes(logical, mesh or current_mesh(), shape)
+
+
+def logical_sharding(logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        raise ValueError("logical_sharding requires a mesh (use axis_rules(..., mesh=...))")
+    return NamedSharding(mesh, logical_spec(logical, mesh, shape))
+
+
+def with_logical_constraint(x, logical: Sequence[Optional[str]]):
+    """Apply a sharding constraint if a mesh is active; no-op otherwise.
+
+    Model code calls this everywhere; on a laptop (no mesh) it vanishes.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(logical, mesh, getattr(x, "shape", None))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

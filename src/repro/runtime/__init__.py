@@ -1,0 +1,7 @@
+"""Fault-tolerant distributed runtime: train state/step, restartable loop,
+straggler watchdog, gradient compression."""
+
+from .loop import TrainState, Trainer, make_train_step
+from .compression import int8_compress, int8_decompress
+
+__all__ = ["TrainState", "Trainer", "make_train_step", "int8_compress", "int8_decompress"]

@@ -1,0 +1,34 @@
+"""Stencil application library, written in the GTScript DSL.
+
+Contains the paper's two evaluation motifs (horizontal diffusion with flux
+limiter, implicit vertical advection) plus a library of reusable operators,
+mirroring how the paper's isentropic model (Tasmania) composes stencils.
+"""
+
+from . import hdiff, library, vadv
+from .hdiff import build_hdiff, hdiff_defs
+from .library import (
+    avg_x,
+    avg_y,
+    fwd_avg_z,
+    gradx,
+    grady,
+    laplacian,
+)
+from .vadv import build_vadv, vadv_defs
+
+__all__ = [
+    "library",
+    "hdiff",
+    "vadv",
+    "laplacian",
+    "gradx",
+    "grady",
+    "avg_x",
+    "avg_y",
+    "fwd_avg_z",
+    "build_hdiff",
+    "build_vadv",
+    "hdiff_defs",
+    "vadv_defs",
+]

@@ -1,0 +1,13 @@
+import os
+import sys
+from pathlib import Path
+
+# Smoke tests / benches must see the single real CPU device (the 512-device
+# override is confined to launch/dryrun.py per the multi-pod dry-run rules).
+os.environ.setdefault("REPRO_GT_CACHE", str(Path(__file__).resolve().parent.parent / ".gt_cache"))
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+import repro  # noqa: E402,F401  (enables jax x64 once, before any test)

@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests (assignment requirement f).
+
+Each assigned architecture is instantiated at its REDUCED config and runs
+one forward/train step on CPU asserting output shapes + finiteness, plus a
+prefill/decode-consistency check: decoding token-by-token must match the
+full-sequence forward logits.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, get_shape, list_archs
+from repro.models import build_model
+
+ARCHS = list(list_archs())
+
+
+def _batch_for(cfg, batch=2, seq=16, rng=None):
+    rng = rng or np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab, size=(batch, seq)).astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1).astype(np.int32)
+    labels[:, -1] = -1
+    out = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    if cfg.frontend == "vision":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        )
+    if cfg.is_encdec:
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        )
+    return out
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    entry = get_arch(arch)
+    cfg = entry.reduced
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+
+    logits, _ = jax.jit(lambda p, b: model.forward(p, b, remat=False))(params, batch)
+    extra = cfg.encoder_seq if (cfg.frontend == "vision") else 0
+    assert logits.shape == (2, 16 + extra, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b))(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(metrics["ce_loss"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_reduces_loss_direction(arch):
+    """One SGD step on the smoke batch must produce finite grads for every
+    parameter leaf (shape-preserving)."""
+    entry = get_arch(arch)
+    cfg = entry.reduced
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _batch_for(cfg)
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    # shapes preserved
+    jax.tree_util.tree_map(lambda g, p: None if g.shape == p.shape else 1 / 0, grads, params)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """Greedy decode path equals teacher-forced forward logits."""
+    entry = get_arch(arch)
+    cfg = entry.reduced
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2))
+    B, S = 2, 12
+    batch = _batch_for(cfg, batch=B, seq=S)
+
+    full_logits, _ = jax.jit(lambda p, b: model.forward(p, b, remat=False))(params, batch)
+
+    cache = model.make_cache(batch=B, max_len=32)
+    prompt_len = 8
+    prefill_batch = dict(batch)
+    prefill_batch["tokens"] = batch["tokens"][:, :prompt_len]
+    logits_p, cache = jax.jit(model.prefill)(params, prefill_batch, cache)
+
+    extra = cfg.encoder_seq if cfg.frontend == "vision" else 0
+    np.testing.assert_allclose(
+        np.asarray(logits_p),
+        np.asarray(full_logits[:, extra + prompt_len - 1]),
+        rtol=2e-2, atol=2e-3,
+    )
+
+    # token-by-token decode must track the full forward
+    decode = jax.jit(model.decode_step)
+    for t in range(prompt_len, S):
+        step_batch = {"tokens": batch["tokens"][:, t : t + 1]}
+        if cfg.is_encdec:
+            step_batch["frames"] = batch["frames"]
+        if cfg.frontend == "vision":
+            # image prefix was consumed during prefill; decode is text-only
+            pass
+        logits_d, cache = decode(params, step_batch, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_d),
+            np.asarray(full_logits[:, extra + t]),
+            rtol=2e-2, atol=2e-3,
+            err_msg=f"{arch}: decode step {t} diverged from forward",
+        )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_param_count_matches_spec(arch):
+    """Materialized params match the spec tree exactly (reduced config)."""
+    from repro.models.model import exact_param_count
+
+    entry = get_arch(arch)
+    cfg = entry.reduced
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    assert actual == exact_param_count(cfg)
+
+
+# Expected parameter counts for the FULL configs.  Where the assignment
+# table matches the published model, the published size is used; where the
+# table pins a different layout than the released checkpoint (command-r's
+# 35B marketing count; moonshot's 48L/64e-every-layer vs Moonlight's 27L
+# sparse layout) the expectation is hand-derived from the table itself:
+#   per-layer = attn(q,k,v,o) + ffn and emb = vocab·d·(1 or 2).
+# internvl2-1b / whisper count the backbone only (frontends are stubs).
+_EXPECTED_FULL_PARAMS = {
+    "deepseek-coder-33b": (33.3e9, 0.10),
+    "stablelm-12b": (12.1e9, 0.12),
+    "phi3-mini-3.8b": (3.8e9, 0.10),
+    "command-r-35b": (30.3e9, 0.05),  # table-derived (tied emb 2.1B + 40·705M)
+    "phi3.5-moe-42b-a6.6b": (41.9e9, 0.12),
+    "moonshot-v1-16b-a3b": (28.9e9, 0.05),  # table-derived (see note above)
+    "mamba2-370m": (370e6, 0.15),
+    "recurrentgemma-2b": (2.7e9, 0.15),
+    "internvl2-1b": (0.63e9, 0.35),  # Qwen2-0.5B backbone + embeddings (ViT stubbed)
+    "whisper-medium": (0.769e9, 0.20),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_param_count_matches_published(arch):
+    from repro.models.model import active_param_count, exact_param_count
+
+    entry = get_arch(arch)
+    n = exact_param_count(entry.full)
+    expected, tol = _EXPECTED_FULL_PARAMS[arch]
+    assert abs(n - expected) / expected < tol, f"{arch}: {n/1e9:.2f}B vs {expected/1e9:.2f}B"
+    if entry.full.family == "moe":
+        assert active_param_count(entry.full) < n
+
+
+def test_shape_skips_documented():
+    """Every full-attention arch skips long_500k with a reason; ssm/hybrid run it."""
+    for arch in ARCHS:
+        entry = get_arch(arch)
+        skip_ids = {s for s, _ in entry.skips}
+        if entry.full.quadratic_attention:
+            assert "long_500k" in skip_ids, arch
+            assert "long_500k" not in entry.shapes, arch
+        else:
+            assert "long_500k" in entry.shapes, arch

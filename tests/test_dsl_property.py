@@ -1,0 +1,180 @@
+"""Property-based DSL tests: random stencil programs (built at the IR level,
+the toolchain's interface) must agree across all backends — the system
+invariant of the paper's architecture (frontends and backends decouple
+through the IR).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ir
+from repro.core.stencil import build_from_definition
+from repro.core import storage
+
+NI, NJ, NK = 8, 7, 5
+# offsets up to ±2 chained through two temporaries ⇒ extents up to ±6
+HALO = 6
+
+_offsets = st.tuples(st.integers(-2, 2), st.integers(-2, 2), st.just(0))
+
+
+def _exprs(depth: int, names):
+    """Strategy for expression trees over ``names`` (field reads)."""
+    leaf = st.one_of(
+        st.builds(ir.FieldAccess, st.sampled_from(names), _offsets),
+        st.builds(ir.Literal, st.floats(-2.0, 2.0, allow_nan=False), st.just("float")),
+        st.just(ir.ScalarRef("s")),
+    )
+    if depth == 0:
+        return leaf
+    sub = _exprs(depth - 1, names)
+    return st.one_of(
+        leaf,
+        st.builds(ir.BinOp, st.sampled_from(["+", "-", "*"]), sub, sub),
+        st.builds(lambda a, b: ir.NativeCall("min", (a, b)), sub, sub),
+        st.builds(lambda a, b: ir.NativeCall("max", (a, b)), sub, sub),
+        st.builds(lambda a: ir.UnaryOp("-", a), sub),
+        st.builds(lambda a: ir.NativeCall("abs", (a,)), sub),
+        st.builds(
+            lambda c, a, b: ir.TernaryOp(ir.BinOp(">", c, ir.Literal(0.0, "float")), a, b),
+            sub, sub, sub,
+        ),
+    )
+
+
+@st.composite
+def parallel_stencils(draw):
+    """A random PARALLEL stencil: t1 = f(in1, in2); t2 = g(in1, t1); out = h(t1, t2, in2)."""
+    e1 = draw(_exprs(2, ["in1", "in2"]))
+    e2 = draw(_exprs(2, ["in1", "t1"]))
+    e3 = draw(_exprs(1, ["t1", "t2", "in2"]))
+    body = (
+        ir.Assign(ir.FieldAccess("t1", (0, 0, 0)), e1),
+        ir.Assign(ir.FieldAccess("t2", (0, 0, 0)), e2),
+        ir.Assign(ir.FieldAccess("out", (0, 0, 0)), e3),
+    )
+    comp = ir.ComputationBlock(
+        order=ir.IterationOrder.PARALLEL,
+        intervals=(ir.IntervalBlock(ir.VerticalInterval.full(), body),),
+    )
+    return ir.StencilDefinition(
+        name="prop_stencil",
+        api_fields=(
+            ir.FieldDecl("in1", "float64"),
+            ir.FieldDecl("in2", "float64"),
+            ir.FieldDecl("out", "float64"),
+            ir.FieldDecl("t1", "float64", is_api=False),
+            ir.FieldDecl("t2", "float64", is_api=False),
+        ),
+        scalars=(ir.ScalarDecl("s", "float64"),),
+        computations=(comp,),
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(parallel_stencils(), st.integers(0, 2**31 - 1))
+def test_random_parallel_stencils_backends_agree(defn, seed):
+    rng = np.random.default_rng(seed)
+    shape = (NI + 2 * HALO, NJ + 2 * HALO, NK)
+    data1 = rng.normal(size=shape)
+    data2 = rng.normal(size=shape)
+    s = float(rng.normal())
+
+    results = {}
+    for backend in ("debug", "numpy", "jax"):
+        st_obj = build_from_definition(defn, backend)
+        f1 = storage.from_array(data1, backend=backend, default_origin=(HALO, HALO, 0))
+        f2 = storage.from_array(data2, backend=backend, default_origin=(HALO, HALO, 0))
+        out = storage.zeros(shape, backend=backend, default_origin=(HALO, HALO, 0))
+        st_obj(in1=f1, in2=f2, out=out, s=np.float64(s), domain=(NI, NJ, NK))
+        results[backend] = out.to_numpy()[HALO:HALO + NI, HALO:HALO + NJ, :]
+
+    np.testing.assert_allclose(results["numpy"], results["debug"], rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(results["jax"], results["debug"], rtol=1e-12, atol=1e-12)
+
+
+@st.composite
+def sequential_stencils(draw):
+    """Random FORWARD accumulation: acc = f(in1) + w·acc[k−1] on interval [1, None)."""
+    e_init = draw(_exprs(1, ["in1"]))
+    e_step = draw(_exprs(1, ["in1"]))
+    w = draw(st.floats(-0.9, 0.9, allow_nan=False))
+    body0 = (ir.Assign(ir.FieldAccess("acc", (0, 0, 0)), e_init),)
+    body1 = (
+        ir.Assign(
+            ir.FieldAccess("acc", (0, 0, 0)),
+            ir.BinOp(
+                "+",
+                e_step,
+                ir.BinOp("*", ir.Literal(w, "float"), ir.FieldAccess("acc", (0, 0, -1))),
+            ),
+        ),
+    )
+    comp = ir.ComputationBlock(
+        order=ir.IterationOrder.FORWARD,
+        intervals=(
+            ir.IntervalBlock(
+                ir.VerticalInterval(
+                    ir.AxisBound(ir.LevelMarker.START, 0), ir.AxisBound(ir.LevelMarker.START, 1)
+                ),
+                body0,
+            ),
+            ir.IntervalBlock(
+                ir.VerticalInterval(
+                    ir.AxisBound(ir.LevelMarker.START, 1), ir.AxisBound(ir.LevelMarker.END, 0)
+                ),
+                body1,
+            ),
+        ),
+    )
+    return ir.StencilDefinition(
+        name="prop_seq",
+        api_fields=(
+            ir.FieldDecl("in1", "float64"),
+            ir.FieldDecl("acc", "float64"),
+        ),
+        scalars=(ir.ScalarDecl("s", "float64"),),
+        computations=(comp,),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(sequential_stencils(), st.integers(0, 2**31 - 1))
+def test_random_sequential_stencils_backends_agree(defn, seed):
+    rng = np.random.default_rng(seed)
+    shape = (NI + 2 * HALO, NJ + 2 * HALO, NK)
+    data1 = rng.normal(size=shape)
+
+    results = {}
+    for backend in ("debug", "numpy", "jax"):
+        st_obj = build_from_definition(defn, backend)
+        f1 = storage.from_array(data1, backend=backend, default_origin=(HALO, HALO, 0))
+        acc = storage.zeros(shape, backend=backend, default_origin=(HALO, HALO, 0))
+        st_obj(in1=f1, acc=acc, s=np.float64(0.0), domain=(NI, NJ, NK))
+        results[backend] = acc.to_numpy()[HALO:HALO + NI, HALO:HALO + NJ, :]
+
+    np.testing.assert_allclose(results["numpy"], results["debug"], rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(results["jax"], results["debug"], rtol=1e-12, atol=1e-12)
+
+
+def test_extent_invariant_outputs_independent_of_extra_halo():
+    """System invariant: enlarging storage halo beyond the required extent
+    never changes the interior result."""
+    from repro.stencils.hdiff import build_hdiff
+
+    rng = np.random.default_rng(0)
+    ni, nj, nk = 10, 9, 3
+    core = rng.normal(size=(ni + 12, nj + 12, nk))  # big enough for halo 6
+    st_obj = build_hdiff("numpy")
+
+    outs = []
+    for halo in (3, 5, 6):
+        lo = 6 - halo
+        data = core[lo : lo + ni + 2 * halo, lo : lo + nj + 2 * halo, :]
+        i = storage.from_array(data.copy(), default_origin=(halo, halo, 0))
+        o = storage.zeros(data.shape, default_origin=(halo, halo, 0))
+        st_obj(i, o, alpha=np.float64(0.05), domain=(ni, nj, nk))
+        outs.append(o.to_numpy()[halo : halo + ni, halo : halo + nj, :])
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-13)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-13)

@@ -1,0 +1,181 @@
+"""Unit tests: optimizer, schedules, checkpoint store, data pipeline,
+gradient compression."""
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.data.pipeline import SyntheticLMDataset
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    linear_warmup_cosine,
+)
+from repro.runtime.compression import int8_compress, int8_decompress
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw_update(params, grads, state, lr=0.05, weight_decay=0.0)
+
+    for _ in range(300):
+        params, state = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+    assert int(state.step) == 300
+
+
+def test_adamw_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    state = adamw_init(params)
+    grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new_params, _ = adamw_update(params, grads, state, lr=0.1, weight_decay=0.5)
+    assert float(jnp.max(jnp.abs(new_params["w"]))) < 1.0  # decayed
+    np.testing.assert_allclose(np.asarray(new_params["b"]), 1.0)  # not decayed
+
+
+def test_schedule_warmup_and_decay():
+    lrs = [float(linear_warmup_cosine(jnp.asarray(s), 1e-3, 10, 100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9
+    assert lrs[-1] < lrs[20]
+    assert all(l > 0 for l in lrs)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(norm), np.sqrt(10 * 9 + 10 * 16), rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "layer": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4), "b": jnp.ones(4)},
+        "step_count": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 42, tree)
+    step, restored = load_checkpoint(tmp_path, jax.eval_shape(lambda: tree))
+    assert step == 42
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), tree, restored
+    )
+
+
+def test_checkpoint_atomicity_ignores_uncommitted(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 10, tree)
+    # fake a partial (crashed) checkpoint at step 20: no COMMIT
+    bad = tmp_path / "step_000000020"
+    bad.mkdir()
+    (bad / "meta.json").write_text(json.dumps({"step": 20, "leaves": []}))
+    assert latest_step(tmp_path) == 10
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    tree = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    committed = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert committed == ["step_000000004", "step_000000005"]
+
+
+def test_async_manager(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save_async(5, tree)
+    mgr.wait()
+    step, restored = mgr.restore_or_init(jax.eval_shape(lambda: tree), lambda: tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["layer"]["w"]),
+                                  np.asarray(tree["layer"]["w"]))
+
+
+def test_restore_template_dtype_respected(tmp_path):
+    tree = {"w": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(tmp_path, 1, tree)
+    template = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    _, restored = load_checkpoint(tmp_path, template)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_per_step():
+    ds = SyntheticLMDataset(vocab=512, seq_len=64, global_batch=8, seed=3)
+    a = ds.batch_at(17)
+    b = ds.batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch_at(18)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_shards_disjoint_and_partition():
+    full = SyntheticLMDataset(vocab=512, seq_len=32, global_batch=8, seed=1)
+    s0 = SyntheticLMDataset(vocab=512, seq_len=32, global_batch=8, seed=1,
+                            shard_index=0, shard_count=2)
+    s1 = SyntheticLMDataset(vocab=512, seq_len=32, global_batch=8, seed=1,
+                            shard_index=1, shard_count=2)
+    assert s0.local_batch == s1.local_batch == 4
+    a, b = s0.batch_at(0)["tokens"], s1.batch_at(0)["tokens"]
+    assert not np.array_equal(a, b)  # different streams per shard
+
+
+def test_data_labels_shifted():
+    ds = SyntheticLMDataset(vocab=512, seq_len=32, global_batch=2, seed=0)
+    batch = ds.batch_at(0)
+    np.testing.assert_array_equal(batch["labels"][:, :-1], batch["tokens"][:, 1:])
+    assert np.all(batch["labels"][:, -1] == -1)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    q, scale = int8_compress(x)
+    y = int8_decompress(q, scale)
+    max_err = float(jnp.max(jnp.abs(x - y)))
+    assert max_err <= float(scale) * 0.5 + 1e-7
+    assert q.dtype == jnp.int8
+
+
+def test_int8_preserves_zero_and_extremes():
+    x = jnp.asarray([0.0, 1.0, -1.0, 0.5])
+    q, scale = int8_compress(x)
+    y = int8_decompress(q, scale)
+    assert float(y[0]) == 0.0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=float(scale))
