@@ -11,10 +11,16 @@ System benches beyond the paper:
     jax locks the device count at init, so it gets its own process)
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract.
+
+``--smoke`` runs a small hdiff/vadv matrix comparing the unoptimized IR
+(``opt_level=0``) against the default pass pipeline and writes
+``BENCH_smoke.json`` (the CI artifact that records the perf trajectory and
+IR-size deltas from PR 1 onward).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -213,7 +219,90 @@ def bench_distributed_stencil() -> None:
         row("hdiff_distributed_8dev_256x128x16", float("nan"), f"failed: {e}")
 
 
+# ---------------------------------------------------------------------------
+# CI smoke: opt_level=0 vs default pass pipeline on hdiff / vadv
+# ---------------------------------------------------------------------------
+
+
+def _ir_stats(st) -> dict:
+    from repro.core import passes
+
+    stats = passes.impl_stats(st.implementation_ir)
+    stats["pass_report"] = [
+        {"pass": r["pass"], "seconds": r["seconds"], "changed": r["changed"]}
+        for r in st.pass_report
+    ]
+    return stats
+
+
+def bench_smoke(out_path: Path) -> None:
+    """Small hdiff/vadv matrix: unoptimized vs default pipeline, per backend."""
+    H = 3
+    ni = nj = 48
+    nk = 16
+    results: dict = {"domain": [ni, nj, nk], "cases": {}}
+
+    def run_case(name, build, make_fields):
+        case: dict = {}
+        for backend in ("numpy", "jax"):
+            per_backend = {}
+            for label, opts in (("opt0", {"opt_level": 0}), ("default", {})):
+                st = build(backend, **opts)
+                fields, scalars = make_fields(backend)
+
+                def call():
+                    st(*fields, **scalars, domain=(ni, nj, nk))
+                    fields[-1].synchronize()
+
+                us = _time(call, warmup=2, iters=10)
+                per_backend[label] = {"us_per_call": us, "ir": _ir_stats(st)}
+                row(f"{name}_{backend}_{label}_{ni}x{nj}x{nk}", us)
+            per_backend["speedup_default_vs_opt0"] = (
+                per_backend["opt0"]["us_per_call"] / per_backend["default"]["us_per_call"]
+            )
+            case[backend] = per_backend
+        results["cases"][name] = case
+
+    from repro.stencils.hdiff import build_hdiff
+
+    def hdiff_fields(backend):
+        rng = np.random.default_rng(0)
+        data = rng.normal(size=(ni + 2 * H, nj + 2 * H, nk))
+        i = storage.from_array(data, backend=backend, default_origin=(H, H, 0))
+        o = storage.zeros(data.shape, backend=backend, default_origin=(H, H, 0))
+        return [i, o], {"alpha": np.float64(0.05)}
+
+    run_case("hdiff", build_hdiff, hdiff_fields)
+
+    from repro.stencils.vadv import build_vadv
+
+    def vadv_fields(backend):
+        rng = np.random.default_rng(1)
+        fs = [
+            storage.from_array(rng.normal(size=(ni, nj, nk)) * 0.1, backend=backend),
+            storage.from_array(2.0 + rng.random((ni, nj, nk)), backend=backend),
+            storage.from_array(rng.normal(size=(ni, nj, nk)) * 0.1, backend=backend),
+            storage.from_array(rng.normal(size=(ni, nj, nk)), backend=backend),
+            storage.zeros((ni, nj, nk), backend=backend),
+        ]
+        return fs, {}
+
+    run_case("vadv", build_vadv, vadv_fields)
+
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"wrote {out_path}")
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--smoke", action="store_true",
+                        help="hdiff/vadv opt_level=0 vs default pipeline → BENCH_smoke.json")
+    args = parser.parse_args()
+
+    if args.smoke:
+        bench_smoke(Path.cwd() / "BENCH_smoke.json")
+        return
+
     bench_hdiff()
     bench_vadv()
     bench_call_overhead()

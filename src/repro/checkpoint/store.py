@@ -1,10 +1,16 @@
-"""Checkpoint store: zstd-compressed npz shards with atomic commit + async IO.
+"""Checkpoint store: compressed npz shards with atomic commit + async IO.
+
+Shards are zstd-compressed when the optional ``zstandard`` package is
+installed (the ``[compression]`` extra) and fall back to stdlib ``zlib``
+otherwise; the codec is recorded in ``meta.json`` and in the shard suffix.
+Reading a zstd-compressed checkpoint without ``zstandard`` raises an
+explicit error at load time — importing this module never requires it.
 
 Layout::
 
     <dir>/step_000042/
-        meta.json            # step, pytree structure, leaf manifest
-        shard_00000.npz.zst  # leaf arrays (host-local shard)
+        meta.json            # step, pytree structure, leaf manifest, codec
+        shard_00000.npz.zst  # leaf arrays (host-local shard; .zlib fallback)
         COMMIT               # written last — partial checkpoints are ignored
 
 Elastic restore: leaves are stored whole (gathered) keyed by pytree path, so
@@ -25,9 +31,35 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional: the [compression] extra
+    zstandard = None
+
+import zlib
 
 _COMMIT = "COMMIT"
+
+
+def _compress(data: bytes) -> Tuple[bytes, str]:
+    """Returns (payload, codec name)."""
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(data), "zst"
+    return zlib.compress(data, level=6), "zlib"
+
+
+def _decompress(payload: bytes, codec: str, src: Path) -> bytes:
+    if codec == "zst":
+        if zstandard is None:
+            raise RuntimeError(
+                f"checkpoint {src} is zstd-compressed but the 'zstandard' package is not "
+                "installed — install the [compression] extra to read it"
+            )
+        return zstandard.ZstdDecompressor().decompress(payload)
+    if codec == "zlib":
+        return zlib.decompress(payload)
+    raise ValueError(f"checkpoint {src} uses unknown codec {codec!r}")
 
 
 def _path_str(path) -> str:
@@ -50,8 +82,6 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any, *, keep: int = 
 
     leaves = _flatten_with_paths(tree)
     manifest = []
-    cctx = zstandard.ZstdCompressor(level=3)
-    buf_path = tmp / "shard_00000.npz.zst"
     import io
 
     raw = io.BytesIO()
@@ -63,11 +93,13 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any, *, keep: int = 
         manifest.append({"path": path, "key": key, "shape": list(arr.shape),
                          "dtype": str(arr.dtype)})
     np.savez(raw, **arrays)
-    buf_path.write_bytes(cctx.compress(raw.getvalue()))
+    payload, codec = _compress(raw.getvalue())
+    (tmp / f"shard_00000.npz.{codec}").write_bytes(payload)
 
     meta = {
         "step": step,
         "format": 1,
+        "codec": codec,
         "leaves": manifest,
         "written_at": time.time(),
     }
@@ -112,10 +144,12 @@ def load_checkpoint(directory: str | Path, template: Any, step: Optional[int] = 
     if not (src / _COMMIT).exists():
         raise FileNotFoundError(f"checkpoint {src} is not committed")
     meta = json.loads((src / "meta.json").read_text())
-    dctx = zstandard.ZstdDecompressor()
+    # codec recorded since format 1+codec; older checkpoints are zstd-only
+    codec = meta.get("codec", "zst")
+    shard = src / f"shard_00000.npz.{codec}"
     import io
 
-    raw = io.BytesIO(dctx.decompress((src / "shard_00000.npz.zst").read_bytes()))
+    raw = io.BytesIO(_decompress(shard.read_bytes(), codec, src))
     arrays = np.load(raw)
     by_path = {m["path"]: arrays[m["key"]] for m in meta["leaves"]}
 

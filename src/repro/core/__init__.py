@@ -3,7 +3,7 @@ stencil DSL with an IR-based analysis pipeline and code-generating backends
 (debug | numpy | jax | pallas), re-targeted from GridTools/CUDA to JAX/TPU.
 """
 
-from . import gtscript, storage
+from . import gtscript, passes, storage
 from .gtscript import (
     BACKWARD,
     FORWARD,
@@ -24,6 +24,7 @@ from .stencil import StencilObject, build_stencil_object
 
 __all__ = [
     "gtscript",
+    "passes",
     "storage",
     "Field",
     "IJK",

@@ -18,13 +18,19 @@ Mirrors the paper's §2.3 pipeline.  Passes, in order:
    (halo for API inputs, compute extent for temporaries); dead temporaries
    and the statements that only feed them are pruned.
 5. **stage scheduling** — one stage per statement, grouped into
-   multi-stages (one per computation block); adjacent PARALLEL multi-stages
-   with identical interval structure are fused (the GridTools fusion that
-   lets the Pallas backend emit a single VMEM-resident kernel).
+   multi-stages (one per computation block).
+
+The result is the *unoptimized* Implementation IR — a verbatim lowering of
+the definition.  Architecture-independent optimizations (multi-stage fusion,
+temporary demotion, interval merging, constant folding) live in the
+composable pass pipeline of ``passes.py``, which runs between this module
+and the codegen backends.  ``recompute_implementation`` is the shared
+fixpoint the passes use to refresh extents/liveness after IR rewrites.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from . import ir
@@ -165,38 +171,35 @@ def _definition_checks(definition: ir.StencilDefinition) -> Tuple[str, ...]:
 
 _MAX_FIXPOINT_ITERS = 64
 
+# A fixpoint "unit" is anything with an iteration order, writes, and reads:
+# a Definition-IR statement during the initial lowering, an Implementation-IR
+# stage when the pass pipeline re-analyzes after a rewrite.
+_FixpointUnit = Tuple[ir.IterationOrder, int, List[str], List[Tuple[str, Tuple[int, int, int]]]]
 
-def _compute_extents(
-    definition: ir.StencilDefinition,
+
+def _extent_fixpoint(
+    units: List[_FixpointUnit],
+    api: set,
+    error: str,
 ) -> Tuple[Dict[str, Optional[ir.Extent]], Dict[int, ir.Extent]]:
-    """Returns (required extent per field | None if dead, compute extent per stmt id)."""
-    api = {f.name for f in definition.api_fields if f.is_api}
+    """Demand-driven reverse fixpoint over ``units`` in program order.
 
-    # flatten statements in program order, remembering identity + block order
-    flat: List[ir.Stmt] = []
-    stmt_order: Dict[int, ir.IterationOrder] = {}
-    for block in definition.computations:
-        for ib in block.intervals:
-            for s in ib.body:
-                flat.append(s)
-                stmt_order[id(s)] = block.order
-
+    Returns (required extent per field | absent if dead, compute extent per
+    unit key; units that never become live stay absent).  Shared by the
+    statement-level lowering and the pass pipeline's stage-level re-analysis
+    so the two can never drift apart.
+    """
     required: Dict[str, Optional[ir.Extent]] = {}
-    for block in definition.computations:
-        for ib in block.intervals:
-            for s in ib.body:
-                for w in ir.stmt_writes(s):
-                    if w in api:
-                        required[w] = ir.Extent.zero()
+    for _order, _key, writes, _reads in units:
+        for w in writes:
+            if w in api:
+                required[w] = ir.Extent.zero()
 
-    stmt_extent: Dict[int, ir.Extent] = {}
-
-    for it in range(_MAX_FIXPOINT_ITERS):
+    unit_extent: Dict[int, ir.Extent] = {}
+    for _it in range(_MAX_FIXPOINT_ITERS):
         changed = False
-        for stmt in reversed(flat):
-            writes = list(ir.stmt_writes(stmt))
-            live = any(required.get(w) is not None for w in writes)
-            if not live:
+        for order, key, writes, reads in reversed(units):
+            if not any(required.get(w) is not None for w in writes):
                 continue
             ext = ir.Extent.zero()
             for w in writes:
@@ -207,14 +210,14 @@ def _compute_extents(
                 # (writes never touch the halo); temporaries are computed on
                 # their full required extent.
                 ext = ext.union(ir.Extent.zero() if w in api else r)
-            prev = stmt_extent.get(id(stmt))
-            if prev is None or prev != ext:
-                stmt_extent[id(stmt)] = ext if prev is None else prev.union(ext)
-                ext = stmt_extent[id(stmt)]
-                changed = changed or (prev != ext)
-            ext = stmt_extent[id(stmt)]
-            sequential = stmt_order[id(stmt)] != ir.IterationOrder.PARALLEL
-            for rname, off in ir.stmt_reads(stmt):
+            prev = unit_extent.get(key)
+            new_ext = ext if prev is None else prev.union(ext)
+            if prev != new_ext:
+                unit_extent[key] = new_ext
+                changed = True
+            ext = unit_extent[key]
+            sequential = order != ir.IterationOrder.PARALLEL
+            for rname, off in reads:
                 if sequential:
                     # vertical offsets in FORWARD/BACKWARD sweeps read levels
                     # already computed inside the domain — they are loop-carried
@@ -227,14 +230,29 @@ def _compute_extents(
                     required[rname] = new
                     changed = True
         if not changed:
-            break
-    else:
-        raise GTScriptSemanticError(
-            f"stencil {definition.name}: extent analysis did not converge — a field's halo "
-            "grows with every vertical level (vertically-propagating horizontal dependency); "
-            "this pattern is not supported"
-        )
+            return required, unit_extent
+    raise GTScriptSemanticError(error)
 
+
+def _compute_extents(
+    definition: ir.StencilDefinition,
+) -> Tuple[Dict[str, Optional[ir.Extent]], Dict[int, ir.Extent]]:
+    """Returns (required extent per field | None if dead, compute extent per stmt id)."""
+    api = {f.name for f in definition.api_fields if f.is_api}
+
+    units: List[_FixpointUnit] = []
+    for block in definition.computations:
+        for ib in block.intervals:
+            for s in ib.body:
+                units.append((block.order, id(s), list(ir.stmt_writes(s)), list(ir.stmt_reads(s))))
+
+    required, stmt_extent = _extent_fixpoint(
+        units,
+        api,
+        f"stencil {definition.name}: extent analysis did not converge — a field's halo "
+        "grows with every vertical level (vertically-propagating horizontal dependency); "
+        "this pattern is not supported",
+    )
     for name in api:
         required.setdefault(name, None)
     return required, stmt_extent
@@ -271,31 +289,6 @@ def _build_stages(
         if ms_intervals:
             multi_stages.append(ir.MultiStage(order=block.order, intervals=tuple(ms_intervals)))
     return multi_stages
-
-
-def _fuse_parallel_multistages(multi_stages: List[ir.MultiStage]) -> List[ir.MultiStage]:
-    """Fuse adjacent PARALLEL multi-stages with identical interval structure.
-
-    This is the GridTools multi-stage fusion that lets a backend keep all
-    intermediate stages resident in fast memory (VMEM on TPU).
-    """
-    fused: List[ir.MultiStage] = []
-    for ms in multi_stages:
-        if (
-            fused
-            and ms.order == ir.IterationOrder.PARALLEL
-            and fused[-1].order == ir.IterationOrder.PARALLEL
-            and tuple(i.interval for i in fused[-1].intervals) == tuple(i.interval for i in ms.intervals)
-        ):
-            prev = fused.pop()
-            merged = tuple(
-                ir.MultiStageInterval(interval=a.interval, stages=tuple(a.stages) + tuple(b.stages))
-                for a, b in zip(prev.intervals, ms.intervals)
-            )
-            fused.append(ir.MultiStage(order=ir.IterationOrder.PARALLEL, intervals=merged))
-        else:
-            fused.append(ms)
-    return fused
 
 
 # ---------------------------------------------------------------------------
@@ -356,7 +349,12 @@ def _k_extents(definition: ir.StencilDefinition) -> Dict[str, Tuple[int, int]]:
 # ---------------------------------------------------------------------------
 
 
-def analyze(definition: ir.StencilDefinition, fuse: bool = True) -> ir.StencilImplementation:
+def analyze(definition: ir.StencilDefinition, fuse: bool = False) -> ir.StencilImplementation:
+    """Lower a Definition IR to the (unoptimized) Implementation IR.
+
+    ``fuse=True`` additionally applies the multi-stage fusion pass — kept for
+    back-compatibility with callers that predate ``passes.py``; the build
+    pipeline now runs fusion (and the other passes) itself."""
     # 1. intervals
     blocks = tuple(_validate_and_sort_intervals(b, definition.name) for b in definition.computations)
     definition = ir.StencilDefinition(
@@ -379,8 +377,6 @@ def analyze(definition: ir.StencilDefinition, fuse: bool = True) -> ir.StencilIm
 
     # 5. stages
     multi_stages = _build_stages(definition, stmt_extent)
-    if fuse:
-        multi_stages = _fuse_parallel_multistages(multi_stages)
 
     api_fields = tuple(f for f in definition.api_fields if f.is_api)
     live_temps = tuple(
@@ -398,7 +394,7 @@ def analyze(definition: ir.StencilDefinition, fuse: bool = True) -> ir.StencilIm
         for ib in block.intervals:
             min_k = max(min_k, ib.interval.min_levels())
 
-    return ir.StencilImplementation(
+    impl = ir.StencilImplementation(
         name=definition.name,
         api_fields=api_fields,
         temporaries=live_temps,
@@ -409,4 +405,79 @@ def analyze(definition: ir.StencilDefinition, fuse: bool = True) -> ir.StencilIm
         externals=definition.externals,
         min_k_levels=min_k,
         zero_init_temps=tuple(t for t in zero_init if any(f.name == t for f in live_temps)),
+    )
+    if fuse:
+        from .passes import MultiStageFusion, PassContext
+
+        impl = MultiStageFusion()(impl, PassContext(opt_level=1))
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# Implementation-IR re-analysis (shared fixpoint for the pass pipeline)
+# ---------------------------------------------------------------------------
+
+
+def recompute_implementation(impl: ir.StencilImplementation) -> ir.StencilImplementation:
+    """Recompute liveness, per-stage compute extents, field extents and
+    k-extents of an Implementation IR after a pass rewrote its stages.
+
+    The same demand-driven reverse fixpoint as ``_compute_extents``, run at
+    stage granularity: dead stages (feeding only unread temporaries) are
+    dropped, dead temporaries removed, and extents shrink to what the
+    surviving statements actually require.
+    """
+    api = {f.name for f in impl.api_fields}
+
+    units: List[_FixpointUnit] = []
+    for ms in impl.multi_stages:
+        for itv in ms.intervals:
+            for st in itv.stages:
+                reads = [r for stmt in st.stmts for r in ir.stmt_reads(stmt)]
+                units.append((ms.order, id(st), list(st.writes), reads))
+
+    required, stage_extent = _extent_fixpoint(
+        units,
+        api,
+        f"stencil {impl.name}: extent re-analysis did not converge after an IR rewrite",
+    )
+
+    multi_stages: List[ir.MultiStage] = []
+    for ms in impl.multi_stages:
+        intervals: List[ir.MultiStageInterval] = []
+        for itv in ms.intervals:
+            stages: List[ir.Stage] = []
+            for st in itv.stages:
+                ext = stage_extent.get(id(st))
+                if ext is None:
+                    continue  # dead stage
+                stages.append(ir.make_stage(st.stmts, ext))
+            if stages:
+                intervals.append(ir.MultiStageInterval(itv.interval, tuple(stages)))
+        if intervals:
+            multi_stages.append(ir.MultiStage(ms.order, tuple(intervals)))
+
+    temporaries = tuple(f for f in impl.temporaries if required.get(f.name) is not None)
+    local_decls = tuple(f for f in impl.local_decls if required.get(f.name) is not None)
+    field_extents = tuple(sorted((n, e) for n, e in required.items() if e is not None))
+
+    kext: Dict[str, Tuple[int, int]] = {}
+    for ms in multi_stages:
+        for itv in ms.intervals:
+            for st in itv.stages:
+                for stmt in st.stmts:
+                    for rname, off in ir.stmt_reads(stmt):
+                        lo, hi = kext.get(rname, (0, 0))
+                        kext[rname] = (min(lo, off[2]), max(hi, off[2]))
+    k_extents = tuple(sorted((name, rng) for name, rng in kext.items()))
+
+    live = {f.name for f in temporaries}
+    return dataclasses.replace(
+        impl,
+        multi_stages=tuple(multi_stages),
+        temporaries=temporaries,
+        local_decls=local_decls,
+        field_extents=field_extents,
+        k_extents=k_extents,
+        zero_init_temps=tuple(t for t in impl.zero_init_temps if t in live),
     )

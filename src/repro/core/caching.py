@@ -20,7 +20,7 @@ from typing import Any, Dict, Optional
 
 from . import ir
 
-_CACHE_VERSION = "repro-gt-1"
+_CACHE_VERSION = "repro-gt-2"
 _lock = threading.Lock()
 _memory_cache: Dict[str, ModuleType] = {}
 
@@ -35,13 +35,31 @@ def cache_dir() -> Path:
     return p
 
 
-def fingerprint(definition: ir.StencilDefinition, backend: str, options: Optional[Dict[str, Any]] = None) -> str:
+def fingerprint(
+    definition: ir.StencilDefinition,
+    backend: str,
+    options: Optional[Dict[str, Any]] = None,
+    pass_config: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Cache key for a generated module.
+
+    Keyed on the normalized Definition IR (so reformatting the python source
+    does not re-codegen), the backend, its codegen options, AND the
+    optimization-pass configuration: the same definition at a different
+    ``opt_level`` / pass set is a different generated module.  The names of
+    the registered passes participate too, so adding a pass to the pipeline
+    invalidates stale artifacts.
+    """
+    from . import passes  # local import: passes depends on analysis/ir only
+
     payload = "|".join(
         [
             _CACHE_VERSION,
             backend,
             repr(definition),
             repr(sorted((options or {}).items())),
+            repr(sorted((pass_config or {}).items())),
+            repr(passes.PASS_NAMES),
         ]
     )
     return hashlib.sha256(payload.encode()).hexdigest()[:16]

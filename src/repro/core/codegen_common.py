@@ -86,6 +86,10 @@ class ArrayExprPrinter:
         self.k0 = "_k0"
         self.k1 = "_k1"
         self.used_helpers: set = set()
+        # demoted temporaries (ir.StencilImplementation.local_decls): bound as
+        # plain block/plane variables — reads are the bare name (the demotion
+        # pass guarantees zero offsets and shape-identical stage extents).
+        self.locals_: set = {f.name for f in impl.local_decls}
 
     # -- region slices ---------------------------------------------------------
 
@@ -102,6 +106,8 @@ class ArrayExprPrinter:
 
     def read(self, fa: ir.FieldAccess) -> str:
         name = fa.name
+        if name in self.locals_:
+            return name
         di, dj, dk = fa.offset
         axes = self.axes_of[name]
         if axes == ("I", "J", "K"):
@@ -229,7 +235,10 @@ class ArrayStmtEmitter:
         if mask is not None:
             old = p.read(ir.FieldAccess(name, (0, 0, 0)))
             value = f"{p.lib}.where({mask}, {value}, {old})"
-        if self.functional:
+        if name in p.locals_:
+            # demoted temporary: direct variable binding, no field write
+            self.em.line(f"{name} = {value}")
+        elif self.functional:
             p.used_helpers.add("dus")
             starts, shape = p.write_starts_shape(name)
             self.em.line(f"{name} = _dus({name}, {value}, {starts}, {shape})")
@@ -327,6 +336,19 @@ def emit_helpers(em: Emitter, used: set, lib: str) -> None:
             em.push()
             em.line("return 1.0 - _erf(x)")
             em.pop()
+
+
+def ms_written_fields(ms: ir.MultiStage, exclude: Optional[set] = None) -> List[str]:
+    """Fields written anywhere in ``ms`` in first-write order, minus
+    ``exclude`` (demoted locals don't cross k-levels, so sequential
+    multi-stages must not carry them through the fori_loop)."""
+    written: List[str] = []
+    for itv in ms.intervals:
+        for st in itv.stages:
+            for w in st.writes:
+                if w not in written and (exclude is None or w not in exclude):
+                    written.append(w)
+    return written
 
 
 def multistage_plan(ms: ir.MultiStage) -> str:

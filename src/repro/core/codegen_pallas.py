@@ -33,6 +33,7 @@ from .codegen_common import (
     _c,
     bound_expr,
     emit_helpers,
+    ms_written_fields,
     multistage_plan,
 )
 from .gtscript import GTScriptSemanticError
@@ -182,18 +183,9 @@ def generate_pallas_source(
                         emitter.stmt(stmt)
             else:
                 printer.mode = "plane"
-                carried: List[str] = []
-                for st in itv.stages:
-                    for w in st.writes:
-                        if w not in carried:
-                            carried.append(w)
                 # carry every field written anywhere in this multi-stage so
                 # intervals of the same sweep chain state consistently
-                for st_itv in ms.intervals:
-                    for st in st_itv.stages:
-                        for w in st.writes:
-                            if w not in carried:
-                                carried.append(w)
+                carried = ms_written_fields(ms, exclude=printer.locals_)
                 carry = ", ".join(carried)
                 trailing = "," if len(carried) == 1 else ""
                 kb.line(f"def _body_{mi}_{ii}(_it, _carry):")

@@ -10,11 +10,13 @@ with additive offset composition.
 from __future__ import annotations
 
 import ast
+import collections
 import inspect
 import numbers
 import textwrap
+import weakref
 from dataclasses import dataclass, field as dc_field
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -84,18 +86,25 @@ def _dtype_name(dtype: Any) -> str:
     return np.dtype(dtype).name
 
 
-def _function_namespace(func) -> Dict[str, Any]:
+def _function_namespace(func) -> Mapping[str, Any]:
     """Module globals + closure cells of ``func`` (so gtscript.functions and
-    constants defined in enclosing local scopes resolve, e.g. in tests)."""
-    ns = dict(func.__globals__)
+    constants defined in enclosing local scopes resolve, e.g. in tests).
+
+    Returns a *live view* over the module dict rather than a copy: a snapshot
+    would strongly capture every module global — including the parsed
+    function object itself, which keeps ``_function_cache``'s weak keys alive
+    forever (value → key cycle)."""
     closure = getattr(func, "__closure__", None)
+    extras: Dict[str, Any] = {}
     if closure:
         for name, cell in zip(func.__code__.co_freevars, closure):
             try:
-                ns[name] = cell.cell_contents
+                extras[name] = cell.cell_contents
             except ValueError:  # unfilled cell
                 pass
-    return ns
+    if not extras:
+        return func.__globals__
+    return collections.ChainMap(extras, func.__globals__)
 
 
 def _syntax_error(node: ast.AST, msg: str, source_name: str = "<stencil>") -> GTScriptSyntaxError:
@@ -114,15 +123,18 @@ class ParsedFunction:
     params: List[str]
     body: List[Tuple[str, ast.expr]]  # sequential local assignments (name, rhs AST)
     returns: List[ast.expr]  # one or more return expressions (AST)
-    globals: Dict[str, Any]
+    globals: Mapping[str, Any]
     source_name: str
 
 
-_function_cache: Dict[int, ParsedFunction] = {}
+# keyed weakly by the function object itself (identity hash): an id()-keyed
+# cache collides when the interpreter reuses the address of a collected
+# function, and a strong-ref dict would pin every parsed function forever
+_function_cache = weakref.WeakKeyDictionary()
 
 
 def parse_gts_function(func: GTScriptFunction) -> ParsedFunction:
-    key = id(func)
+    key = func
     if key in _function_cache:
         return _function_cache[key]
     tree = ast.parse(func.source)

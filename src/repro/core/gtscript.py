@@ -163,6 +163,10 @@ def stencil(
     compile-time constants, and ``rebuild`` bypasses the fingerprint cache.
     ``validate_args`` reproduces the run-time storage checks whose cost is
     the dashed-vs-solid gap in the paper's Fig. 3; pass ``False`` to skip.
+
+    Extra ``backend_opts`` configure the optimization pass pipeline
+    (``opt_level=0..3``, ``disable_passes=(...)``, ``enable_passes=(...)`` —
+    see ``repro.core.passes``) and backend codegen (Pallas ``block=(bi, bj)``).
     """
 
     def _impl(func: Callable):

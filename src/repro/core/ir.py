@@ -359,6 +359,12 @@ class StencilImplementation:
     min_k_levels: int = 1
     # temporaries whose first write is conditional → zero-initialized
     zero_init_temps: Tuple[str, ...] = ()
+    # temporaries demoted by the pass pipeline to stage-local values: every
+    # access is zero-offset inside one multi-stage interval, so the vectorized
+    # backends bind them as plain block/plane variables (no field allocation).
+    # The debug backend may still allocate them as arrays (it is the oracle,
+    # not an optimization target) — their extents stay in ``field_extents``.
+    local_decls: Tuple[FieldDecl, ...] = ()
 
     def extent_of(self, name: str) -> Extent:
         for n, e in self.field_extents:
@@ -368,7 +374,7 @@ class StencilImplementation:
 
     @property
     def all_fields(self) -> Tuple[FieldDecl, ...]:
-        return tuple(self.api_fields) + tuple(self.temporaries)
+        return tuple(self.api_fields) + tuple(self.temporaries) + tuple(self.local_decls)
 
     def field(self, name: str) -> FieldDecl:
         for f in self.all_fields:
@@ -513,3 +519,71 @@ def shift_accesses(node, offset: Tuple[int, int, int], only: Optional[set] = Non
         return FieldAccess(fa.name, off)
 
     return map_field_accesses(node, _fn)
+
+
+# ---------------------------------------------------------------------------
+# IR rewrite helpers (used by the optimization pass pipeline, passes.py)
+# ---------------------------------------------------------------------------
+
+
+def map_exprs_bottom_up(expr: Expr, fn) -> Expr:
+    """Rebuild ``expr`` applying ``fn(Expr) -> Expr`` to every node, children
+    first — the workhorse of expression-level rewrites (constant folding)."""
+    if isinstance(expr, UnaryOp):
+        expr = UnaryOp(expr.op, map_exprs_bottom_up(expr.operand, fn))
+    elif isinstance(expr, BinOp):
+        expr = BinOp(expr.op, map_exprs_bottom_up(expr.left, fn), map_exprs_bottom_up(expr.right, fn))
+    elif isinstance(expr, TernaryOp):
+        expr = TernaryOp(
+            map_exprs_bottom_up(expr.cond, fn),
+            map_exprs_bottom_up(expr.true_expr, fn),
+            map_exprs_bottom_up(expr.false_expr, fn),
+        )
+    elif isinstance(expr, NativeCall):
+        expr = NativeCall(expr.func, tuple(map_exprs_bottom_up(a, fn) for a in expr.args))
+    elif isinstance(expr, Cast):
+        expr = Cast(expr.dtype, map_exprs_bottom_up(expr.expr, fn))
+    return fn(expr)
+
+
+def make_stage(stmts: Tuple[Stmt, ...], compute_extent: Extent) -> Stage:
+    """Build a Stage with writes/reads recomputed from ``stmts``."""
+    writes: list = []
+    reads: set = set()
+    for s in stmts:
+        for w in stmt_writes(s):
+            if w not in writes:
+                writes.append(w)
+        for r, _off in stmt_reads(s):
+            reads.add(r)
+    return Stage(
+        stmts=tuple(stmts),
+        compute_extent=compute_extent,
+        writes=tuple(sorted(writes)),
+        reads=tuple(sorted(reads)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Structural equality / adjacency utilities (frozen dataclasses give deep
+# ``==`` for free; these express the pass-pipeline legality questions)
+# ---------------------------------------------------------------------------
+
+
+def stages_structurally_equal(a: Tuple[Stage, ...], b: Tuple[Stage, ...]) -> bool:
+    """True when two stage sequences perform identical computations (same
+    statements, same compute extents) — the k-interval-merging condition."""
+    return len(a) == len(b) and all(
+        sa.stmts == sb.stmts and sa.compute_extent == sb.compute_extent for sa, sb in zip(a, b)
+    )
+
+
+def intervals_adjacent(first: VerticalInterval, second: VerticalInterval) -> bool:
+    """True when ``second`` starts exactly where ``first`` ends (same axis
+    bound representation, so adjacency is domain-size independent)."""
+    return first.end == second.start
+
+
+def interval_span(first: VerticalInterval, second: VerticalInterval) -> VerticalInterval:
+    """The single interval covering two adjacent intervals (first below)."""
+    return VerticalInterval(first.start, second.end)

@@ -1,0 +1,541 @@
+"""Optimization pass pipeline over the Implementation IR.
+
+This is the analysis/transform layer the paper's toolchain puts between the
+frontend and the code generators (§2.3): the *same* definition IR is
+specialized by composable, individually toggleable passes before any backend
+sees it.  Each pass is a named ``Pass`` with a legality argument documented
+in ``docs/passes.md``; a shared ``PassContext`` records per-pass wall time
+and before/after IR statistics, surfaced to users through
+``exec_info["pass_report"]`` (mirroring the paper's Fig. 3 instrumentation).
+
+Pipeline (in application order; ``min_opt_level`` in parentheses)::
+
+    constant_folding   (3)  literal arithmetic + algebraic identities + dead branches
+    dead_temp_pruning  (2)  liveness fixpoint: drop unread temporaries and the
+                            stages that only feed them, shrink extents
+    interval_merging   (2)  merge adjacent k-intervals with identical stage bodies
+    multistage_fusion  (1)  fuse adjacent PARALLEL multi-stages so the Pallas
+                            backend keeps intermediates VMEM-resident
+    temp_demotion      (2)  demote single-interval, zero-offset temporaries to
+                            stage-local values (no field allocation / DMA)
+
+``opt_level`` semantics: 0 = verbatim lowering (no passes), 1 = fusion only,
+2 = + structural passes, 3 (default) = everything.  Individual passes toggle
+via ``backend_opts={"disable_passes": (...,)}`` / ``{"enable_passes": (...)}``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from . import analysis, ir
+
+DEFAULT_OPT_LEVEL = 3
+
+
+# ---------------------------------------------------------------------------
+# Instrumentation
+# ---------------------------------------------------------------------------
+
+
+def impl_stats(impl: ir.StencilImplementation) -> Dict[str, int]:
+    """Coarse IR size statistics (what the passes are expected to shrink)."""
+    return {
+        "multi_stages": len(impl.multi_stages),
+        "intervals": sum(len(ms.intervals) for ms in impl.multi_stages),
+        "stages": sum(len(itv.stages) for ms in impl.multi_stages for itv in ms.intervals),
+        "temporaries": len(impl.temporaries),
+        "locals": len(impl.local_decls),
+    }
+
+
+@dataclass
+class PassContext:
+    """Shared state of one pipeline run: configuration + per-pass records."""
+
+    opt_level: int = DEFAULT_OPT_LEVEL
+    records: List[Dict[str, Any]] = field(default_factory=list)
+
+    def record(
+        self,
+        name: str,
+        seconds: float,
+        before: Dict[str, int],
+        after: Dict[str, int],
+        changed: bool,
+    ) -> None:
+        self.records.append(
+            {
+                "pass": name,
+                "seconds": seconds,
+                "before": before,
+                "after": after,
+                "changed": changed,
+            }
+        )
+
+
+class Pass:
+    """A named, toggleable IR → IR transform."""
+
+    name: str = "pass"
+    min_opt_level: int = 1
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        raise NotImplementedError
+
+    def __call__(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        before = impl_stats(impl)
+        t0 = time.perf_counter()
+        out = self.apply(impl, ctx)
+        seconds = time.perf_counter() - t0
+        # structural (deep) inequality: passes may rewrite expressions without
+        # moving any of the coarse stats
+        ctx.record(self.name, seconds, before, impl_stats(out), out != impl)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: constant / scalar folding
+# ---------------------------------------------------------------------------
+
+_BINOP_FOLD = {
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+    "//": lambda a, b: a // b,
+    "%": lambda a, b: a % b,
+    "**": lambda a, b: a ** b,
+    "and": lambda a, b: bool(a and b),
+    "or": lambda a, b: bool(a or b),
+    "<": lambda a, b: a < b,
+    ">": lambda a, b: a > b,
+    "<=": lambda a, b: a <= b,
+    ">=": lambda a, b: a >= b,
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+}
+
+# Pure math builtins safe to evaluate at compile time (python floats are IEEE
+# doubles, exactly what the generated code computes on literal operands).
+_NATIVE_FOLD = {
+    "abs": abs,
+    "min": min,
+    "max": max,
+    # floored modulo, matching np.mod/jnp.mod (and python %) — NOT math.fmod
+    "mod": lambda a, b: a % b,
+    "sqrt": math.sqrt,
+    "exp": math.exp,
+    "log": math.log,
+    "log2": math.log2,
+    "pow": pow,
+    "sin": math.sin,
+    "cos": math.cos,
+    "tan": math.tan,
+    "arcsin": math.asin,
+    "arccos": math.acos,
+    "arctan": math.atan,
+    "sinh": math.sinh,
+    "cosh": math.cosh,
+    "tanh": math.tanh,
+    "erf": math.erf,
+    "erfc": math.erfc,
+    "floor": math.floor,
+    "ceil": math.ceil,
+    "trunc": math.trunc,
+    "isfinite": math.isfinite,
+    "isnan": math.isnan,
+}
+
+
+def _literal(value: Any) -> ir.Literal:
+    if isinstance(value, bool):
+        return ir.Literal(value, "bool")
+    if isinstance(value, int):
+        return ir.Literal(value, "int")
+    return ir.Literal(float(value), "float")
+
+
+def _is_float_lit(e: ir.Expr, value: float) -> bool:
+    return isinstance(e, ir.Literal) and e.dtype == "float" and e.value == value
+
+
+def _fold_expr_node(e: ir.Expr) -> ir.Expr:
+    """Fold one node whose children are already folded.  Anything that could
+    raise (division by zero, domain errors) is left for the runtime."""
+    if isinstance(e, ir.UnaryOp) and isinstance(e.operand, ir.Literal):
+        if e.op == "-" and e.operand.dtype in ("int", "float"):
+            return ir.Literal(-e.operand.value, e.operand.dtype)
+        if e.op == "not":
+            return ir.Literal(not e.operand.value, "bool")
+    if isinstance(e, ir.BinOp):
+        left, right = e.left, e.right
+        if isinstance(left, ir.Literal) and isinstance(right, ir.Literal):
+            fn = _BINOP_FOLD.get(e.op)
+            if fn is not None:
+                try:
+                    return _literal(fn(left.value, right.value))
+                except Exception:
+                    return e
+        # value-preserving identities (IEEE-exact: x·1, x/1, x−0 preserve every
+        # input bit-for-bit; x+0 does NOT — it flips −0.0 to +0.0 — so it is
+        # deliberately absent)
+        if e.op == "*" and _is_float_lit(right, 1.0):
+            return left
+        if e.op == "*" and _is_float_lit(left, 1.0):
+            return right
+        if e.op == "/" and _is_float_lit(right, 1.0):
+            return left
+        if e.op == "-" and _is_float_lit(right, 0.0):
+            return left
+    if isinstance(e, ir.TernaryOp) and isinstance(e.cond, ir.Literal):
+        return e.true_expr if e.cond.value else e.false_expr
+    if isinstance(e, ir.NativeCall) and all(isinstance(a, ir.Literal) for a in e.args):
+        fn = _NATIVE_FOLD.get(e.func)
+        if fn is not None:
+            try:
+                return _literal(fn(*[a.value for a in e.args]))
+            except Exception:
+                return e
+    if isinstance(e, ir.Cast) and isinstance(e.expr, ir.Literal):
+        # only value-exact casts fold: narrowing (float32/bfloat16, or an
+        # int literal outside the target's range, which wraps at runtime)
+        # would change the value the runtime computes.
+        _INT_BITS = {"int32": 32, "int64": 64}
+        if (
+            e.dtype in _INT_BITS
+            and e.expr.dtype == "int"
+            and -(2 ** (_INT_BITS[e.dtype] - 1)) <= e.expr.value < 2 ** (_INT_BITS[e.dtype] - 1)
+        ):
+            return e.expr
+        if e.dtype == "float64" and e.expr.dtype in ("int", "float", "bool"):
+            return ir.Literal(float(e.expr.value), "float")
+    return e
+
+
+def _fold_stmt(s: ir.Stmt) -> List[ir.Stmt]:
+    if isinstance(s, ir.Assign):
+        return [ir.Assign(s.target, ir.map_exprs_bottom_up(s.value, _fold_expr_node))]
+    if isinstance(s, ir.If):
+        cond = ir.map_exprs_bottom_up(s.cond, _fold_expr_node)
+        body = [f for b in s.body for f in _fold_stmt(b)]
+        orelse = [f for b in s.orelse for f in _fold_stmt(b)]
+        if isinstance(cond, ir.Literal):
+            return body if cond.value else orelse
+        if not body and not orelse:
+            return []
+        if not body:  # folded-away then-branch: invert so no backend emits an empty block
+            return [ir.If(ir.UnaryOp("not", cond), tuple(orelse))]
+        return [ir.If(cond, tuple(body), tuple(orelse))]
+    if isinstance(s, ir.While):
+        cond = ir.map_exprs_bottom_up(s.cond, _fold_expr_node)
+        if isinstance(cond, ir.Literal) and not cond.value:
+            return []
+        return [ir.While(cond, tuple(f for b in s.body for f in _fold_stmt(b)))]
+    return [s]
+
+
+class ConstantFolding(Pass):
+    """Fold literal arithmetic, prune dead conditional branches, and apply
+    value-preserving algebraic identities in stage expressions.
+
+    Legality: folding mirrors exactly what the generated code would compute —
+    python-float (IEEE double) arithmetic on literal operands; anything that
+    could raise or change a value (narrowing casts, division by zero) is left
+    in place.
+    """
+
+    name = "constant_folding"
+    min_opt_level = 3
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        changed = False
+        multi_stages: List[ir.MultiStage] = []
+        for ms in impl.multi_stages:
+            intervals: List[ir.MultiStageInterval] = []
+            for itv in ms.intervals:
+                stages: List[ir.Stage] = []
+                for st in itv.stages:
+                    stmts = tuple(f for s in st.stmts for f in _fold_stmt(s))
+                    if stmts != st.stmts:
+                        changed = True
+                    if stmts:
+                        stages.append(ir.make_stage(stmts, st.compute_extent))
+                if stages:
+                    intervals.append(ir.MultiStageInterval(itv.interval, tuple(stages)))
+            if intervals:
+                multi_stages.append(ir.MultiStage(ms.order, tuple(intervals)))
+        if not changed:
+            return impl
+        impl = dataclasses.replace(impl, multi_stages=tuple(multi_stages))
+        # folding may have killed reads → temporaries can die, extents shrink
+        return analysis.recompute_implementation(impl)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: dead-temporary pruning
+# ---------------------------------------------------------------------------
+
+
+class DeadTempPruning(Pass):
+    """Drop temporaries that are never read (and the stages that only feed
+    them) and shrink all extents to what the surviving statements require.
+
+    Legality: temporaries are never observable outside the stencil (paper
+    §2.2), so removing unread ones cannot change any output.
+    """
+
+    name = "dead_temp_pruning"
+    min_opt_level = 2
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        return analysis.recompute_implementation(impl)
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: k-interval merging
+# ---------------------------------------------------------------------------
+
+
+class IntervalMerging(Pass):
+    """Merge adjacent vertical intervals whose stage bodies are structurally
+    identical into a single interval (fewer loop bounds, larger fused blocks).
+
+    Legality: the merged interval executes the same statements over the union
+    k-range; bodies are compared with structural equality (same statements
+    AND same compute extents), and only representation-adjacent bounds merge,
+    so the rewrite is domain-size independent.  For BACKWARD multi-stages the
+    interval list is stored in execution (descending) order, so adjacency is
+    checked in the reversed direction.
+    """
+
+    name = "interval_merging"
+    min_opt_level = 2
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        multi_stages: List[ir.MultiStage] = []
+        for ms in impl.multi_stages:
+            backward = ms.order == ir.IterationOrder.BACKWARD
+            merged: List[ir.MultiStageInterval] = []
+            for itv in ms.intervals:
+                if merged and ir.stages_structurally_equal(merged[-1].stages, itv.stages):
+                    prev = merged[-1]
+                    if not backward and ir.intervals_adjacent(prev.interval, itv.interval):
+                        merged[-1] = ir.MultiStageInterval(
+                            ir.interval_span(prev.interval, itv.interval), prev.stages
+                        )
+                        continue
+                    if backward and ir.intervals_adjacent(itv.interval, prev.interval):
+                        merged[-1] = ir.MultiStageInterval(
+                            ir.interval_span(itv.interval, prev.interval), prev.stages
+                        )
+                        continue
+                merged.append(itv)
+            multi_stages.append(ir.MultiStage(ms.order, tuple(merged)))
+        return dataclasses.replace(impl, multi_stages=tuple(multi_stages))
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: multi-stage fusion
+# ---------------------------------------------------------------------------
+
+
+class MultiStageFusion(Pass):
+    """Fuse adjacent PARALLEL multi-stages into one — the GridTools fusion
+    that lets the Pallas backend keep all intermediate stages VMEM-resident
+    instead of round-tripping through HBM between kernels.
+
+    Two compatible shapes:
+
+    * identical single-interval structure → stages are concatenated into the
+      shared interval (enables cross-computation temporary demotion);
+    * anything else → the interval lists are concatenated *in order*.  Our
+      backends execute a PARALLEL multi-stage interval-by-interval,
+      stage-by-stage, each statement fully vectorized over its region, so
+      concatenation preserves the original statement order exactly — which
+      makes it unconditionally legal.  Sequential (FORWARD/BACKWARD)
+      multi-stages never fuse: their k-sweep ordering is semantic.
+    """
+
+    name = "multistage_fusion"
+    min_opt_level = 1
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        fused: List[ir.MultiStage] = []
+        for ms in impl.multi_stages:
+            if (
+                fused
+                and ms.order == ir.IterationOrder.PARALLEL
+                and fused[-1].order == ir.IterationOrder.PARALLEL
+            ):
+                prev = fused.pop()
+                if (
+                    len(prev.intervals) == 1
+                    and len(ms.intervals) == 1
+                    and prev.intervals[0].interval == ms.intervals[0].interval
+                ):
+                    intervals = (
+                        ir.MultiStageInterval(
+                            prev.intervals[0].interval,
+                            tuple(prev.intervals[0].stages) + tuple(ms.intervals[0].stages),
+                        ),
+                    )
+                else:
+                    intervals = tuple(prev.intervals) + tuple(ms.intervals)
+                fused.append(ir.MultiStage(ir.IterationOrder.PARALLEL, intervals))
+            else:
+                fused.append(ms)
+        return dataclasses.replace(impl, multi_stages=tuple(fused))
+
+
+# ---------------------------------------------------------------------------
+# Pass 5: temporary demotion
+# ---------------------------------------------------------------------------
+
+
+class TempDemotion(Pass):
+    """Demote temporaries to stage-local values: no field allocation, no
+    zero-init, no functional slice updates — the vectorized backends bind the
+    computed block/plane directly to a variable.
+
+    A temporary demotes when (all conditions checked structurally):
+
+    * every access (read or write) happens inside one multi-stage interval,
+      so one bound variable covers its whole live range;
+    * every read is at zero offset — the value never crosses the horizontal
+      plane or the k-sweep, so no neighborhood/history is needed;
+    * every touching stage has the same compute extent — the writer's block
+      is shape-identical to every reader's region;
+    * its first access is an unconditional top-level write (never in
+      ``zero_init_temps``), so the variable is always defined before use;
+    * it spans all of I, J, K (frontend default for temporaries).
+    """
+
+    name = "temp_demotion"
+    min_opt_level = 2
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        temps = {f.name: f for f in impl.temporaries}
+        if not temps:
+            return impl
+
+        sites: Dict[str, set] = {n: set() for n in temps}
+        read_offsets: Dict[str, set] = {n: set() for n in temps}
+        extents: Dict[str, List[ir.Extent]] = {n: [] for n in temps}
+        first_access: Dict[str, str] = {}  # name -> 'uncond_write' | 'other'
+
+        for mi, ms in enumerate(impl.multi_stages):
+            for ii, itv in enumerate(ms.intervals):
+                for st in itv.stages:
+                    touched: List[str] = []
+                    for stmt in st.stmts:
+                        for rname, off in ir.stmt_reads(stmt):
+                            if rname in temps:
+                                read_offsets[rname].add(off)
+                                touched.append(rname)
+                        uncond = {stmt.target.name} if isinstance(stmt, ir.Assign) else set()
+                        for w in ir.stmt_writes(stmt):
+                            if w in temps:
+                                touched.append(w)
+                                first_access.setdefault(
+                                    w, "uncond_write" if w in uncond else "other"
+                                )
+                    for n in touched:
+                        sites[n].add((mi, ii))
+                        extents[n].append(st.compute_extent)
+
+        zero_init = set(impl.zero_init_temps)
+        demoted: List[ir.FieldDecl] = []
+        for name, decl in temps.items():
+            if decl.axes != ir.AXES_IJK or name in zero_init:
+                continue
+            if len(sites[name]) != 1:
+                continue
+            if any(off != (0, 0, 0) for off in read_offsets[name]):
+                continue
+            if first_access.get(name) != "uncond_write":
+                continue
+            exts = extents[name]
+            if not exts or any(e != exts[0] for e in exts):
+                continue
+            demoted.append(decl)
+
+        if not demoted:
+            return impl
+        names = {d.name for d in demoted}
+        return dataclasses.replace(
+            impl,
+            temporaries=tuple(f for f in impl.temporaries if f.name not in names),
+            local_decls=tuple(impl.local_decls) + tuple(demoted),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pipeline assembly
+# ---------------------------------------------------------------------------
+
+PIPELINE: Tuple[Pass, ...] = (
+    ConstantFolding(),
+    DeadTempPruning(),
+    IntervalMerging(),
+    MultiStageFusion(),
+    TempDemotion(),
+)
+
+PASS_NAMES: Tuple[str, ...] = tuple(p.name for p in PIPELINE)
+
+
+def build_pipeline(
+    opt_level: int = DEFAULT_OPT_LEVEL,
+    disable: Iterable[str] = (),
+    enable: Iterable[str] = (),
+) -> List[Pass]:
+    disable = set(disable)
+    enable = set(enable)
+    unknown = (disable | enable) - set(PASS_NAMES)
+    if unknown:
+        raise ValueError(f"unknown pass name(s) {sorted(unknown)}; available: {list(PASS_NAMES)}")
+    selected = []
+    for p in PIPELINE:
+        on = opt_level >= p.min_opt_level
+        if p.name in disable:
+            on = False
+        if p.name in enable:
+            on = True
+        if on:
+            selected.append(p)
+    return selected
+
+
+def run_pipeline(
+    impl: ir.StencilImplementation,
+    opt_level: int = DEFAULT_OPT_LEVEL,
+    disable: Iterable[str] = (),
+    enable: Iterable[str] = (),
+) -> Tuple[ir.StencilImplementation, List[Dict[str, Any]]]:
+    """Apply the configured passes; returns (optimized IR, pass report)."""
+    ctx = PassContext(opt_level=int(opt_level))
+    for p in build_pipeline(ctx.opt_level, disable, enable):
+        impl = p(impl, ctx)
+    return impl, ctx.records
+
+
+def split_backend_opts(backend_opts: Optional[Dict[str, Any]]) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Split ``backend_opts`` into (pass configuration, codegen options).
+
+    Pass configuration keys: ``opt_level`` (int), ``disable_passes`` /
+    ``enable_passes`` (iterables of pass names).  Everything else goes to the
+    backend's source generator (e.g. the Pallas ``block`` shape).
+    """
+    opts = dict(backend_opts or {})
+    cfg = {
+        "opt_level": int(opts.pop("opt_level", DEFAULT_OPT_LEVEL)),
+        "disable": tuple(sorted(opts.pop("disable_passes", ()))),
+        "enable": tuple(sorted(opts.pop("enable_passes", ()))),
+    }
+    return cfg, opts

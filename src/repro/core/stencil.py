@@ -16,7 +16,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from . import analysis, caching, frontend, ir
+from . import analysis, caching, frontend, ir, passes
 from .gtscript import GTScriptSemanticError
 from .storage import Storage
 
@@ -58,6 +58,7 @@ class StencilObject:
         run_fn: Callable,
         validate_args: bool = True,
         fingerprint: str = "",
+        pass_report: Optional[list] = None,
     ):
         self.name = name
         self.backend = backend
@@ -67,6 +68,8 @@ class StencilObject:
         self._run = run_fn
         self.validate_args_default = validate_args
         self.fingerprint = fingerprint
+        # per-pass compile-time instrumentation (passes.PassContext.records)
+        self.pass_report = list(pass_report or [])
 
         impl = implementation_ir
         kext = dict(impl.k_extents)
@@ -219,6 +222,7 @@ class StencilObject:
     ):
         if exec_info is not None:
             exec_info["call_start_time"] = time.perf_counter()
+            exec_info["pass_report"] = list(self.pass_report)
         fields, scalars = self._bind(args, kwargs)
         origins = self._resolve_origins(fields, origin)
         if domain is None:
@@ -323,11 +327,16 @@ def build_from_definition(
     backend_opts: Optional[Dict[str, Any]] = None,
 ) -> StencilObject:
     """Build directly from a Definition IR (used by property tests and any
-    alternative frontends — the IR is the toolchain interface, paper §2.3)."""
-    backend_opts = backend_opts or {}
+    alternative frontends — the IR is the toolchain interface, paper §2.3).
+
+    ``backend_opts`` carries the pass-pipeline configuration (``opt_level``,
+    ``disable_passes``, ``enable_passes`` — see ``passes.py``) alongside any
+    codegen options (e.g. the Pallas ``block`` shape)."""
+    pass_cfg, codegen_opts = passes.split_backend_opts(backend_opts)
     name = definition_ir.name
     impl = analysis.analyze(definition_ir)
-    fp = caching.fingerprint(definition_ir, backend, backend_opts)
+    impl, pass_report = passes.run_pipeline(impl, **pass_cfg)
+    fp = caching.fingerprint(definition_ir, backend, codegen_opts, pass_config=pass_cfg)
 
     if backend == "numpy":
         from .codegen_array import generate_numpy_source
@@ -344,7 +353,7 @@ def build_from_definition(
     elif backend == "pallas":
         from .codegen_pallas import generate_pallas_source
 
-        source = generate_pallas_source(impl, **backend_opts)
+        source = generate_pallas_source(impl, **codegen_opts)
     else:
         raise ValueError(f"unknown backend {backend!r} (expected debug|numpy|jax|pallas)")
 
@@ -358,4 +367,5 @@ def build_from_definition(
         run_fn=module.run,
         validate_args=validate_args,
         fingerprint=fp,
+        pass_report=pass_report,
     )

@@ -1,0 +1,11 @@
+"""jax version compatibility helpers shared by the hand-written kernels."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (jax >= 0.5) / ``TPUCompilerParams`` (jax 0.4)."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -27,6 +27,18 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(body, *, mesh, in_specs, out_specs):
+    try:  # jax >= 0.5 spells the replication check 'check_vma'
+        return _shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
 from repro.core.stencil import StencilObject
 from repro.parallel.halo import exchange_halo_2d
 
@@ -110,12 +122,11 @@ class DistributedStencil:
             }
             written = [n for n in fields if n in self._written()]
             specs_out = {n: specs_in[n] for n in written}
-            shard_fn = jax.shard_map(
+            shard_fn = shard_map(
                 body,
                 mesh=self.mesh,
                 in_specs=(specs_in, P()),
                 out_specs=specs_out,
-                check_vma=False,
             )
             self._jitted[key] = jax.jit(shard_fn)
         return self._jitted[key](fields, scalars)
@@ -140,6 +151,6 @@ class DistributedStencil:
         specs_in = {n: P(self.i_axis, self.j_axis, None) for n in fields_specs}
         written = [n for n in fields_specs if n in self._written()]
         specs_out = {n: specs_in[n] for n in written}
-        shard_fn = jax.shard_map(body, mesh=self.mesh, in_specs=(specs_in, P()),
-                                 out_specs=specs_out, check_vma=False)
+        shard_fn = shard_map(body, mesh=self.mesh, in_specs=(specs_in, P()),
+                             out_specs=specs_out)
         return jax.jit(shard_fn).lower(fields_specs, scalars)

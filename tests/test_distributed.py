@@ -8,6 +8,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import textwrap
 from pathlib import Path
 
@@ -30,8 +31,16 @@ def _run_subprocess(body: str) -> dict:
         """
     ).format(src=SRC) + textwrap.dedent(body)
     env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
-    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                         text=True, timeout=600, env=env)
+    # run from a real file (not ``python -c``) so inspect.getsource works on
+    # stencil definitions in the script — the frontend parses their source
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(script)
+        path = f.name
+    try:
+        res = subprocess.run([sys.executable, path], capture_output=True,
+                             text=True, timeout=600, env=env)
+    finally:
+        os.unlink(path)
     if res.returncode != 0:
         raise AssertionError(f"subprocess failed:\n{res.stderr[-3000:]}")
     return json.loads(res.stdout.strip().splitlines()[-1])
@@ -124,11 +133,16 @@ def test_compressed_dp_allreduce_close_to_exact():
         from functools import partial
         from repro.runtime.compression import dp_allreduce_compressed
 
+        try:
+            shard_map = jax.shard_map
+        except AttributeError:
+            from jax.experimental.shard_map import shard_map
+
         mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         g = rng.normal(size=(8, 64, 32)).astype(np.float32)
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=jax.sharding.PartitionSpec("data"),
                  out_specs=jax.sharding.PartitionSpec())
         def reduce_compressed(x):

@@ -6,7 +6,9 @@ through the IR).
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis", reason="property tests need the optional 'hypothesis' dependency")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ir
 from repro.core.stencil import build_from_definition
