@@ -1,0 +1,97 @@
+"""Benchmark regression gate: compare a fresh BENCH_smoke.json to the
+committed baseline and fail CI on per-case slowdowns.
+
+Usage::
+
+    python benchmarks/compare.py BASELINE.json FRESH.json [--threshold 1.5]
+
+CI runners and developer machines differ in absolute speed, so raw ratios
+would gate on hardware, not code.  The gate therefore normalizes every
+per-case ratio by the *median* ratio across all cases (the machine-speed
+factor): a >``--threshold`` *relative* slowdown of any case fails.  A raw
+ratio above ``--abs-threshold`` fails regardless, so a regression that slows
+every case uniformly (which normalization would cancel) is still caught.
+
+Only wall-clock ``us_per_call`` entries are compared; cases or labels present
+on one side only are reported and skipped (new benchmarks don't fail the
+gate the PR that introduces them).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from pathlib import Path
+from typing import Dict, Tuple
+
+
+def collect(results: dict) -> Dict[Tuple[str, str, str], float]:
+    """Flatten {case: {backend: {label: {us_per_call}}}} to keyed wall times."""
+    out: Dict[Tuple[str, str, str], float] = {}
+    for case, backends in results.get("cases", {}).items():
+        for backend, labels in backends.items():
+            if not isinstance(labels, dict):
+                continue
+            for label, entry in labels.items():
+                if isinstance(entry, dict) and "us_per_call" in entry:
+                    out[(case, backend, label)] = float(entry["us_per_call"])
+    return out
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("baseline", type=Path)
+    parser.add_argument("fresh", type=Path)
+    parser.add_argument("--threshold", type=float, default=1.5,
+                        help="max allowed machine-normalized slowdown per case")
+    parser.add_argument("--abs-threshold", type=float, default=4.0,
+                        help="max allowed raw slowdown per case (uniform-regression backstop)")
+    parser.add_argument("--no-normalize", action="store_true",
+                        help="gate on raw ratios only (same-machine comparisons)")
+    args = parser.parse_args()
+
+    base = collect(json.loads(args.baseline.read_text()))
+    fresh = collect(json.loads(args.fresh.read_text()))
+
+    shared = sorted(set(base) & set(fresh))
+    only_base = sorted(set(base) - set(fresh))
+    only_fresh = sorted(set(fresh) - set(base))
+    for key in only_base:
+        print(f"note: {'/'.join(key)} only in baseline (skipped)")
+    for key in only_fresh:
+        print(f"note: {'/'.join(key)} only in fresh run (skipped)")
+    if not shared:
+        print("error: no comparable benchmark entries", file=sys.stderr)
+        return 2
+
+    ratios = {key: fresh[key] / base[key] for key in shared}
+    machine = 1.0 if args.no_normalize else statistics.median(ratios.values())
+    print(f"{len(shared)} comparable cases; machine-speed factor (median ratio): {machine:.3f}")
+
+    failures = []
+    for key in shared:
+        raw = ratios[key]
+        norm = raw / machine
+        flag = ""
+        if norm > args.threshold:
+            flag = f"REGRESSION (>{args.threshold:.2f}x normalized)"
+        elif raw > args.abs_threshold:
+            flag = f"REGRESSION (>{args.abs_threshold:.2f}x raw)"
+        if flag:
+            failures.append(key)
+        print(f"  {'/'.join(key):48s} {base[key]:10.1f}us -> {fresh[key]:10.1f}us  "
+              f"raw {raw:5.2f}x  norm {norm:5.2f}x  {flag}")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} case(s) regressed:", file=sys.stderr)
+        for key in failures:
+            print(f"  {'/'.join(key)}", file=sys.stderr)
+        return 1
+    print("\nOK: no benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -220,23 +220,38 @@ def bench_distributed_stencil() -> None:
 
 
 # ---------------------------------------------------------------------------
-# CI smoke: opt_level=0 vs default pass pipeline on hdiff / vadv
+# CI smoke: opt_level=0 vs default pass pipeline on the stencil suite
 # ---------------------------------------------------------------------------
 
 
-def _ir_stats(st) -> dict:
-    from repro.core import passes
+def _ir_stats(st, nk: int) -> dict:
+    """IR-quality metrics for the perf trajectory: size stats, CSE
+    eliminations, and the sequential-sweep carried-plane plan."""
+    from repro.core import analysis, passes
 
     stats = passes.impl_stats(st.implementation_ir)
     stats["pass_report"] = [
         {"pass": r["pass"], "seconds": r["seconds"], "changed": r["changed"]}
         for r in st.pass_report
     ]
+    cse = next((r.get("detail") for r in st.pass_report if r["pass"] == "cross_stage_cse"), None)
+    stats["cse_hoisted"] = (cse or {}).get("hoisted", 0)
+    stats["cse_eliminated"] = (cse or {}).get("eliminated", 0)
+    plans = analysis.sequential_carry_plan(st.implementation_ir)
+    stats["carry"] = {
+        "full_fields": sum(len(p.full) for p in plans.values()),
+        "window_fields": sum(len(p.window) for p in plans.values()),
+        "window_planes": sum(d for p in plans.values() for _, d in p.window),
+        "carried_planes": sum(p.carried_planes(nk) for p in plans.values()),
+        "baseline_planes": sum(p.baseline_planes(nk) for p in plans.values()),
+    }
     return stats
 
 
 def bench_smoke(out_path: Path) -> None:
-    """Small hdiff/vadv matrix: unoptimized vs default pipeline, per backend."""
+    """Small stencil-suite matrix: unoptimized vs default pipeline on
+    numpy/jax, plus the autotuned pallas schedule — records wall time AND the
+    IR-quality deltas (autotuned tile, CSE eliminations, carried planes)."""
     H = 3
     ni = nj = 48
     nk = 16
@@ -255,15 +270,35 @@ def bench_smoke(out_path: Path) -> None:
                     fields[-1].synchronize()
 
                 us = _time(call, warmup=2, iters=10)
-                per_backend[label] = {"us_per_call": us, "ir": _ir_stats(st)}
+                per_backend[label] = {"us_per_call": us, "ir": _ir_stats(st, nk)}
                 row(f"{name}_{backend}_{label}_{ni}x{nj}x{nk}", us)
             per_backend["speedup_default_vs_opt0"] = (
                 per_backend["opt0"]["us_per_call"] / per_backend["default"]["us_per_call"]
             )
             case[backend] = per_backend
+
+        # pallas: default pipeline with the tile autotuner (interpret mode on
+        # CPU CI — the schedule/IR metrics are the durable signal there)
+        st = build("pallas", autotune=True, autotune_iters=3)
+        fields, scalars = make_fields("pallas")
+        info: dict = {}
+        st(*fields, **scalars, domain=(ni, nj, nk), exec_info=info)
+
+        def call():
+            st(*fields, **scalars, domain=(ni, nj, nk))
+            fields[-1].synchronize()
+
+        us = _time(call, warmup=1, iters=5)
+        case["pallas"] = {
+            "default": {"us_per_call": us, "ir": _ir_stats(st, nk)},
+            "autotune": info.get("autotune"),
+            "schedule": info.get("schedule"),
+        }
+        row(f"{name}_pallas_default_{ni}x{nj}x{nk}", us,
+            f"tile={'x'.join(map(str, (info.get('autotune') or {}).get('block', [])))}")
         results["cases"][name] = case
 
-    from repro.stencils.hdiff import build_hdiff
+    from repro.stencils.hdiff import build_hdiff, build_hdiff_smag
 
     def hdiff_fields(backend):
         rng = np.random.default_rng(0)
@@ -274,7 +309,20 @@ def bench_smoke(out_path: Path) -> None:
 
     run_case("hdiff", build_hdiff, hdiff_fields)
 
-    from repro.stencils.vadv import build_vadv
+    def hdiff_smag_fields(backend):
+        rng = np.random.default_rng(2)
+        shape = (ni + 2, nj + 2, nk)  # halo 1
+        fs = [
+            storage.from_array(rng.normal(size=shape), backend=backend, default_origin=(1, 1, 0)),
+            storage.from_array(rng.normal(size=shape), backend=backend, default_origin=(1, 1, 0)),
+            storage.zeros(shape, backend=backend, default_origin=(1, 1, 0)),
+            storage.zeros(shape, backend=backend, default_origin=(1, 1, 0)),
+        ]
+        return fs, {"dt": np.float64(0.1)}
+
+    run_case("hdiff_smag", build_hdiff_smag, hdiff_smag_fields)
+
+    from repro.stencils.vadv import build_vadv, build_vadv_system
 
     def vadv_fields(backend):
         rng = np.random.default_rng(1)
@@ -288,6 +336,30 @@ def bench_smoke(out_path: Path) -> None:
         return fs, {}
 
     run_case("vadv", build_vadv, vadv_fields)
+
+    def vadv_system_fields(backend):
+        rng = np.random.default_rng(3)
+        fs = [
+            storage.from_array(rng.normal(size=(ni, nj, nk)), backend=backend),
+            storage.from_array(rng.normal(size=(ni, nj, nk)), backend=backend),
+        ] + [storage.zeros((ni, nj, nk), backend=backend) for _ in range(4)]
+        return fs, {"dt": np.float64(0.5), "dz": np.float64(1.5)}
+
+    run_case("vadv_system", build_vadv_system, vadv_system_fields)
+
+    from repro.stencils.vintg import build_vintg
+
+    def vintg_fields(backend):
+        rng = np.random.default_rng(4)
+        fs = [
+            storage.from_array(0.5 + rng.random((ni, nj, nk)), backend=backend),
+            storage.from_array(0.5 + rng.random((ni, nj, nk)), backend=backend),
+            storage.zeros((ni, nj, nk), backend=backend),
+            storage.zeros((ni, nj, nk), backend=backend),
+        ]
+        return fs, {"decay": np.float64(0.9)}
+
+    run_case("vintg", build_vintg, vintg_fields)
 
     out_path.write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {out_path}")

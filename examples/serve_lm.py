@@ -4,7 +4,6 @@ hybrid (RecurrentGemma-style) arch shows the O(1)-state decode path.
     PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --gen 48
 """
 
-import argparse
 import sys
 from pathlib import Path
 

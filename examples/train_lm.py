@@ -14,9 +14,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro  # noqa: F401
 from repro.configs.base import ArchConfig

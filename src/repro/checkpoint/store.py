@@ -22,12 +22,11 @@ checkpoint (DESIGN.md §5).  Async saves overlap serialization with training.
 from __future__ import annotations
 
 import json
-import os
 import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import numpy as np

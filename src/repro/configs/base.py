@@ -8,8 +8,7 @@ declared in :mod:`repro.configs.shapes`.
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 

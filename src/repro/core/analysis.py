@@ -414,6 +414,97 @@ def analyze(definition: ir.StencilDefinition, fuse: bool = False) -> ir.StencilI
 
 
 # ---------------------------------------------------------------------------
+# Sequential-sweep carry liveness (k-blocking plan for the jax/pallas loops)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCarryPlan:
+    """Which state one FORWARD/BACKWARD multi-stage must materialize.
+
+    ``full``   — fields whose every written plane stays live: API outputs, and
+                 temporaries some *other* multi-stage reads.  The loop carries
+                 the whole (ni, nj, nk) array, as before.
+    ``window`` — temporaries written only in this multi-stage and read only in
+                 this multi-stage, at trailing vertical offsets.  Only the last
+                 ``depth`` planes are live at any point of the sweep, so the
+                 loop carries a rolling window of ``depth`` 2-D planes instead
+                 of a full 3-D array (depth = max trailing-offset distance;
+                 0 means the value never crosses an iteration).
+    """
+
+    full: Tuple[str, ...]
+    window: Tuple[Tuple[str, int], ...]  # (name, depth), first-write order
+
+    def carried_planes(self, nk: int) -> int:
+        return len(self.full) * nk + sum(d for _, d in self.window)
+
+    def baseline_planes(self, nk: int) -> int:
+        return (len(self.full) + len(self.window)) * nk
+
+
+def sequential_carry_plan(impl: ir.StencilImplementation) -> Dict[int, SweepCarryPlan]:
+    """Per sequential multi-stage (by index), the liveness-proven carry plan.
+
+    Legality of the window classification: a temporary written *only* inside
+    multi-stage ``mi`` and read *only* inside ``mi`` can never be observed at
+    a plane more than ``depth`` iterations behind the sweep — the race checks
+    (`_check_stmt_offsets`) already reject reads ahead of the sweep, so every
+    in-sweep read is a trailing read.  Planes the sweep never wrote read as
+    the zero initialization either way (the rolling window starts zeroed and
+    each iteration's plane starts zeroed, exactly like the zero-initialized
+    3-D temporary it replaces).
+    """
+    api = {f.name for f in impl.api_fields}
+    locals_ = {f.name for f in impl.local_decls}
+
+    reads_by_ms: Dict[int, Dict[str, set]] = {}
+    writes_by_ms: Dict[int, set] = {}
+    for mi, ms in enumerate(impl.multi_stages):
+        reads: Dict[str, set] = {}
+        writes: set = set()
+        for itv in ms.intervals:
+            for st in itv.stages:
+                for stmt in st.stmts:
+                    for rname, off in ir.stmt_reads(stmt):
+                        reads.setdefault(rname, set()).add(off)
+                    writes.update(ir.stmt_writes(stmt))
+        reads_by_ms[mi] = reads
+        writes_by_ms[mi] = writes
+
+    plans: Dict[int, SweepCarryPlan] = {}
+    for mi, ms in enumerate(impl.multi_stages):
+        if ms.order == ir.IterationOrder.PARALLEL:
+            continue
+        written: List[str] = []
+        for itv in ms.intervals:
+            for st in itv.stages:
+                for w in st.writes:
+                    if w not in written and w not in locals_:
+                        written.append(w)
+        full: List[str] = []
+        window: List[Tuple[str, int]] = []
+        for name in written:
+            decl = impl.field(name)
+            windowable = (
+                name not in api
+                and decl.axes == ir.AXES_IJK
+                and not any(
+                    name in reads_by_ms[mj] or name in writes_by_ms[mj]
+                    for mj in reads_by_ms
+                    if mj != mi
+                )
+            )
+            if windowable:
+                depth = max((abs(off[2]) for off in reads_by_ms[mi].get(name, ())), default=0)
+                window.append((name, depth))
+            else:
+                full.append(name)
+        plans[mi] = SweepCarryPlan(full=tuple(full), window=tuple(window))
+    return plans
+
+
+# ---------------------------------------------------------------------------
 # Implementation-IR re-analysis (shared fixpoint for the pass pipeline)
 # ---------------------------------------------------------------------------
 

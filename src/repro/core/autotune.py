@@ -1,0 +1,209 @@
+"""Horizontal tile-size autotuning for the Pallas backend.
+
+The Pallas code generator bakes one ``_BLOCK_DEFAULT`` into the module, but
+the best ``(BI, BJ)`` tile depends on the domain, the stencil's VMEM
+footprint, and the DMA/compute balance — exactly the schedule knob the paper
+argues the toolchain (not the user) should turn.  This module times a small
+set of candidate tiles against the stencil's own generated ``run`` (on
+synthetic inputs shaped from the module's field metadata, the
+``benchmarks/run.py`` timing discipline: warmup, then best-of-N) and picks
+the fastest.
+
+Results are **keyed on the pass-aware cache fingerprint** from
+``core/caching.py`` and persisted as ``<name>_<fp>.tune.json`` next to the
+generated module, so a second build of the identical IR + options is a pure
+cache hit — the search never reruns.  A different ``opt_level`` / pass set /
+codegen option is a different fingerprint and tunes (and persists)
+independently.  The chosen tile and per-candidate timings surface through
+``exec_info["autotune"]`` on the stencil call.
+
+Candidates are filtered against the module's per-tile VMEM estimate
+(``_vmem_bytes``) so the search never times a tile that cannot fit.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import caching
+
+# (BI, BJ) candidates: sublane multiples × the 128-lane TPU vector width.
+# Clamped to the domain (and deduplicated) before timing.
+DEFAULT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (8, 128),
+    (16, 128),
+    (32, 128),
+    (8, 256),
+    (16, 256),
+)
+
+# don't time tiles whose estimated footprint exceeds ~3/4 of a 16 MB VMEM core
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+_lock = threading.Lock()
+_memory: Dict[Tuple[str, str, str], Dict[str, Any]] = {}
+
+
+def candidate_blocks(
+    module,
+    domain: Tuple[int, int, int],
+    candidates: Optional[Sequence[Tuple[int, int]]] = None,
+) -> List[Tuple[int, int]]:
+    """Domain-clamped, VMEM-filtered, deduplicated candidate tiles."""
+    ni, nj, nk = domain
+    cands = [tuple(c) for c in (candidates or DEFAULT_CANDIDATES)]
+    default = tuple(getattr(module, "_BLOCK_DEFAULT", (8, 128)))
+    if default not in cands:
+        cands.insert(0, default)
+    vmem_bytes = getattr(module, "_vmem_bytes", None)
+    seen: set = set()
+    out: List[Tuple[int, int]] = []
+    for bi, bj in cands:
+        eff = (min(int(bi), ni), min(int(bj), nj))
+        if eff in seen:
+            continue
+        seen.add(eff)
+        if vmem_bytes is not None and vmem_bytes(eff[0], eff[1], nk) > VMEM_BUDGET_BYTES:
+            continue
+        out.append(eff)
+    if not out:  # every candidate over budget: fall back to the clamped default
+        out.append((min(default[0], ni), min(default[1], nj)))
+    return out
+
+
+def _synthetic_call_args(module, domain: Tuple[int, int, int]):
+    """Fields/scalars/origins for timing, built from the module's metadata.
+
+    Values are uniform in [0.5, 1.5]: away from zero so division-heavy
+    stencils (Thomas solvers) stay finite, with enough variation that no
+    arithmetic folds away.
+    """
+    import jax.numpy as jnp
+
+    ni, nj, nk = domain
+    H = int(getattr(module, "_H", 0))
+    rng = np.random.default_rng(0)
+    fields: Dict[str, Any] = {}
+    origins: Dict[str, Tuple[int, int, int]] = {}
+    for name, axes in module._AXES.items():
+        dtype = module._DTYPES[name]
+        if axes == ("I", "J", "K"):
+            shape: Tuple[int, ...] = (ni + 2 * H, nj + 2 * H, nk)
+            origins[name] = (H, H, 0)
+        elif axes == ("I", "J"):
+            shape = (ni + 2 * H, nj + 2 * H)
+            origins[name] = (H, H, 0)
+        else:
+            shape = (nk,)
+            origins[name] = (0, 0, 0)
+        fields[name] = jnp.asarray(0.5 + rng.random(shape), dtype=dtype)
+    scalars = {s: 0.5 for s in module._SCALARS}
+    return fields, scalars, origins
+
+
+def _time_block(
+    module,
+    fields,
+    scalars,
+    domain: Tuple[int, int, int],
+    origins,
+    block: Tuple[int, int],
+    warmup: int,
+    iters: int,
+) -> float:
+    """Best-of-``iters`` wall time of one tiled call, in microseconds."""
+    import jax
+
+    def call():
+        jax.block_until_ready(module.run(fields, scalars, domain, origins, block=block))
+
+    for _ in range(max(1, warmup)):
+        call()  # compile + cache warm
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        call()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _domain_key(domain: Tuple[int, int, int], candidates) -> str:
+    key = "x".join(str(d) for d in domain)
+    if candidates:
+        key += "|" + ";".join(f"{bi}x{bj}" for bi, bj in candidates)
+    return key
+
+
+def _load_store(path) -> Dict[str, Any]:
+    try:
+        data = json.loads(path.read_text())
+        if isinstance(data, dict) and "domains" in data:
+            return data
+    except (OSError, ValueError):
+        pass
+    return {"version": 1, "domains": {}}
+
+
+def select_block(
+    module,
+    name: str,
+    fingerprint: str,
+    domain: Tuple[int, int, int],
+    *,
+    candidates: Optional[Sequence[Tuple[int, int]]] = None,
+    warmup: int = 1,
+    iters: int = 3,
+) -> Tuple[Tuple[int, int], Dict[str, Any]]:
+    """The tuned ``(BI, BJ)`` for ``domain``, searching at most once.
+
+    Returns ``(block, record)`` where ``record`` carries the per-candidate
+    timings (``cache_hit`` marks a persisted result being reused).
+    """
+    domain = tuple(int(d) for d in domain)
+    cands = [tuple(c) for c in candidates] if candidates else None
+    dkey = _domain_key(domain, cands)
+    path = caching.tuning_path(name, fingerprint)
+
+    with _lock:
+        mem = _memory.get((name, fingerprint, dkey))
+        if mem is not None:
+            rec = dict(mem, cache_hit=True)
+            return tuple(rec["block"]), rec
+        store = _load_store(path)
+        entry = store["domains"].get(dkey)
+        if entry is not None:
+            rec = dict(entry, cache_hit=True)
+            _memory[(name, fingerprint, dkey)] = dict(entry)
+            return tuple(rec["block"]), rec
+
+    blocks = candidate_blocks(module, domain, cands)
+    fields, scalars, origins = _synthetic_call_args(module, domain)
+    timings: List[Dict[str, Any]] = []
+    for block in blocks:
+        us = _time_block(module, fields, scalars, domain, origins, block, warmup, iters)
+        timings.append({"block": list(block), "us": us})
+    best = min(timings, key=lambda t: t["us"])
+    record: Dict[str, Any] = {
+        "block": list(best["block"]),
+        "timings": timings,
+        "domain": list(domain),
+        "cache_hit": False,
+    }
+
+    with _lock:
+        persisted = {k: v for k, v in record.items() if k != "cache_hit"}
+        _memory[(name, fingerprint, dkey)] = persisted
+        store = _load_store(path)
+        store["domains"][dkey] = persisted
+        try:
+            tmp = path.with_suffix(".json.tmp")
+            tmp.write_text(json.dumps(store, indent=2) + "\n")
+            tmp.replace(path)
+        except OSError:
+            pass  # read-only cache: in-memory result still serves this process
+    return tuple(record["block"]), record

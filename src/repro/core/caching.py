@@ -65,6 +65,15 @@ def fingerprint(
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
+def tuning_path(name: str, fp: str) -> Path:
+    """Where the Pallas tile autotuner persists its result for a module.
+
+    Lives alongside the generated ``<name>_<fp>.py`` and shares its
+    fingerprint, so a tuning record can never outlive the exact IR + options
+    it was measured for (``core/autotune.py``)."""
+    return cache_dir() / f"{name}_{fp}.tune.json"
+
+
 def load_generated_module(name: str, fp: str, source: str, rebuild: bool = False) -> ModuleType:
     """Write ``source`` to the cache (if needed) and import it as a module."""
     key = f"{name}_{fp}"

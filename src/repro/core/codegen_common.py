@@ -27,7 +27,7 @@ their required extents, with origins shifted accordingly.
 from __future__ import annotations
 
 import io
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from . import ir
 
@@ -90,6 +90,11 @@ class ArrayExprPrinter:
         # plain block/plane variables — reads are the bare name (the demotion
         # pass guarantees zero offsets and shape-identical stage extents).
         self.locals_: set = {f.name for f in impl.local_decls}
+        # k-blocked sweep temporaries (analysis.SweepCarryPlan.window): in
+        # plane mode, dk=0 reads hit the current plane ``_wp_<name>`` and
+        # trailing reads hit the rolling history ``_wh_<name>_<q>`` instead of
+        # a full 3-D array.  Bound by emit_sweep for the active multi-stage.
+        self.window: Dict[str, int] = {}
 
     # -- region slices ---------------------------------------------------------
 
@@ -109,6 +114,11 @@ class ArrayExprPrinter:
         if name in self.locals_:
             return name
         di, dj, dk = fa.offset
+        if self.mode == "plane" and name in self.window:
+            si, sj = self._hslices(name, di, dj)
+            if dk == 0:
+                return f"_wp_{name}[{si}, {sj}]"
+            return f"_wh_{name}_{abs(dk)}[{si}, {sj}]"
         axes = self.axes_of[name]
         if axes == ("I", "J", "K"):
             si, sj = self._hslices(name, di, dj)
@@ -159,6 +169,16 @@ class ArrayExprPrinter:
         if axes == ("K",):
             return f"({sk},)", f"({dk},)"
         raise NotImplementedError(f"axes {axes}")
+
+    def plane_write_starts_shape(self, name: str) -> Tuple[str, str]:
+        """2-D (starts, shape) for writing a windowed temporary's current
+        plane ``_wp_<name>`` in a sequential sweep."""
+        (ilo, ihi), (jlo, jhi), _ = self.extent.as_tuple()
+        si = f"_oi_{name}{_c(ilo)}"
+        sj = f"_oj_{name}{_c(jlo)}"
+        di = f"ni{_c(ihi - ilo)}"
+        dj = f"nj{_c(jhi - jlo)}"
+        return f"({si}, {sj})", f"({di}, {dj})"
 
     # -- expressions -----------------------------------------------------------
 
@@ -238,6 +258,11 @@ class ArrayStmtEmitter:
         if name in p.locals_:
             # demoted temporary: direct variable binding, no field write
             self.em.line(f"{name} = {value}")
+        elif p.mode == "plane" and name in p.window:
+            # k-blocked sweep temporary: write the current 2-D plane
+            p.used_helpers.add("dus")
+            starts, shape = p.plane_write_starts_shape(name)
+            self.em.line(f"_wp_{name} = _dus(_wp_{name}, {value}, {starts}, {shape})")
         elif self.functional:
             p.used_helpers.add("dus")
             starts, shape = p.write_starts_shape(name)
@@ -313,7 +338,7 @@ def emit_helpers(em: Emitter, used: set, lib: str) -> None:
         em.line("return lax.dynamic_update_slice(arr, val, starts)")
         em.pop()
     if "cast" in used:
-        em.line(f"def _cast(x, dt):")
+        em.line("def _cast(x, dt):")
         em.push()
         em.line(f"return {lib}.asarray(x).astype(dt)")
         em.pop()
@@ -338,17 +363,98 @@ def emit_helpers(em: Emitter, used: set, lib: str) -> None:
             em.pop()
 
 
-def ms_written_fields(ms: ir.MultiStage, exclude: Optional[set] = None) -> List[str]:
-    """Fields written anywhere in ``ms`` in first-write order, minus
-    ``exclude`` (demoted locals don't cross k-levels, so sequential
-    multi-stages must not carry them through the fori_loop)."""
-    written: List[str] = []
-    for itv in ms.intervals:
+def emit_parallel_block(
+    impl: ir.StencilImplementation,
+    printer: ArrayExprPrinter,
+    em: Emitter,
+    ms: ir.MultiStage,
+    mi: int,
+    functional: bool,
+) -> None:
+    """Emit a PARALLEL multi-stage: every statement fully vectorized over its
+    3-D region, interval by interval (shared by numpy / jax / pallas)."""
+    for ii, itv in enumerate(ms.intervals):
+        k0, k1 = f"_k0_{mi}_{ii}", f"_k1_{mi}_{ii}"
+        em.line(f"{k0} = {bound_expr(itv.interval.start)}")
+        em.line(f"{k1} = {bound_expr(itv.interval.end)}")
+        printer.mode = "block"
+        printer.k0, printer.k1 = k0, k1
+        emitter = ArrayStmtEmitter(printer, em, functional)
         for st in itv.stages:
-            for w in st.writes:
-                if w not in written and (exclude is None or w not in exclude):
-                    written.append(w)
-    return written
+            printer.extent = st.compute_extent
+            for stmt in st.stmts:
+                emitter.stmt(stmt)
+
+
+def emit_sweep(
+    impl: ir.StencilImplementation,
+    printer: ArrayExprPrinter,
+    em: Emitter,
+    ms: ir.MultiStage,
+    mi: int,
+    plan,  # analysis.SweepCarryPlan
+    lib: str,
+) -> None:
+    """Emit a FORWARD/BACKWARD multi-stage as ``lax.fori_loop``s carrying only
+    the liveness-proven state (shared by the jax and pallas backends).
+
+    Full fields are carried as whole arrays, exactly as before.  Window
+    fields carry ``depth`` rolling 2-D history planes (``_wh_<name>_<q>`` is
+    the plane ``q`` iterations behind the sweep) plus a per-iteration current
+    plane ``_wp_<name>`` — the k-blocking that keeps a sweep's VMEM live set
+    bounded by its true vertical dependency depth instead of nk.
+
+    The history planes thread through *every* interval of the multi-stage so
+    state chains across interval boundaries; planes the sweep never wrote
+    read as zeros, matching the zero-initialized 3-D temporary they replace.
+    """
+    backward = ms.order == ir.IterationOrder.BACKWARD
+
+    def plane_shape(name: str) -> str:
+        (ilo, ihi), (jlo, jhi), _ = impl.extent_of(name).as_tuple()
+        return f"(ni{_c(ihi - ilo)}, nj{_c(jhi - jlo)})"
+
+    for name, depth in plan.window:
+        (ilo, ihi), (jlo, jhi), _ = impl.extent_of(name).as_tuple()
+        em.line(f"_oi_{name}, _oj_{name}, _ok_{name} = ({-ilo}, {-jlo}, 0)")
+        dt = impl.field(name).dtype
+        for q in range(1, depth + 1):
+            em.line(f"_wh_{name}_{q} = {lib}.zeros({plane_shape(name)}, dtype='{dt}')")
+    printer.window = dict(plan.window)
+    carried = list(plan.full) + [
+        f"_wh_{n}_{q}" for n, d in plan.window for q in range(1, d + 1)
+    ]
+    carry = ", ".join(carried)
+    trailing = "," if len(carried) == 1 else ""
+
+    for ii, itv in enumerate(ms.intervals):
+        k0, k1 = f"_k0_{mi}_{ii}", f"_k1_{mi}_{ii}"
+        em.line(f"{k0} = {bound_expr(itv.interval.start)}")
+        em.line(f"{k1} = {bound_expr(itv.interval.end)}")
+        printer.mode = "plane"
+        em.line(f"def _body_{mi}_{ii}(_it, _carry):")
+        em.push()
+        if carried:
+            em.line(f"({carry}{trailing}) = _carry")
+        em.line(f"k = {k1} - 1 - _it" if backward else f"k = {k0} + _it")
+        for name, _depth in plan.window:
+            dt = impl.field(name).dtype
+            em.line(f"_wp_{name} = {lib}.zeros({plane_shape(name)}, dtype='{dt}')")
+        emitter = ArrayStmtEmitter(printer, em, functional=True)
+        for st in itv.stages:
+            printer.extent = st.compute_extent
+            for stmt in st.stmts:
+                emitter.stmt(stmt)
+        for name, depth in plan.window:
+            for q in range(depth, 1, -1):
+                em.line(f"_wh_{name}_{q} = _wh_{name}_{q - 1}")
+            if depth >= 1:
+                em.line(f"_wh_{name}_1 = _wp_{name}")
+        em.line(f"return ({carry}{trailing})" if carried else "return ()")
+        em.pop()
+        loop = f"lax.fori_loop(0, {k1} - {k0}, _body_{mi}_{ii}, ({carry}{trailing}))"
+        em.line(f"({carry}{trailing}) = {loop}" if carried else loop)
+    printer.window = {}
 
 
 def multistage_plan(ms: ir.MultiStage) -> str:

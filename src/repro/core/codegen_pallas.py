@@ -6,15 +6,26 @@ TPU adaptation of the GridTools GPU schedule (see DESIGN.md §2):
   DMAs its *tile + halo* from HBM (inputs live in ``ANY`` memory space) into
   VMEM scratch with ``pltpu.make_async_copy`` — TPU blocks cannot overlap, so
   the CUDA shared-memory halo load becomes an explicit strided DMA.
+* **Software-prefetched halo DMAs**: every input tile's copy is issued up
+  front on its own semaphore, and the ``wait`` is deferred to the first
+  multi-stage that touches the field — inputs consumed by later multi-stages
+  stream in *while earlier multi-stages compute* instead of serializing
+  behind a start-all/wait-all barrier.
 * All multi-stages of the stencil execute **fused** inside one kernel while
   the tile is VMEM-resident: intermediate stages (temporaries) never touch
   HBM.  This is the GridTools fusion argument restated for the TPU memory
   hierarchy — the memory-roofline win of the backend.
 * PARALLEL multi-stages vectorize over the whole (tile_i, tile_j, k) block;
-  FORWARD/BACKWARD multi-stages run a ``lax.fori_loop`` over k carrying the
-  written planes (thread-per-column on GPUs → plane-per-level on the 8×128
-  VPU).
+  FORWARD/BACKWARD multi-stages run **k-blocked** ``lax.fori_loop``s that
+  carry only the liveness-proven state (``analysis.sequential_carry_plan``):
+  API outputs and cross-multi-stage temporaries stay full 3-D, sweep-local
+  recurrence temporaries collapse to a rolling window of 2-D planes — which
+  is what frees VMEM headroom for larger tiles.
 * Outputs are written back through regular non-overlapping BlockSpecs.
+* The generated module exports ``SCHEDULE`` (DMA waits, carried planes,
+  window depths) and ``_vmem_bytes`` (per-tile VMEM estimate) so the
+  autotuner (``core/autotune.py``) can filter and time ``(BI, BJ)``
+  candidates; ``run`` accepts ``block=`` to override ``_BLOCK_DEFAULT``.
 
 Limitations (documented): written API fields may not be read at nonzero
 horizontal offsets (allocate a temporary instead); TPU hardware wants
@@ -25,15 +36,16 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-from . import ir
+import numpy as np
+
+from . import analysis, ir
 from .codegen_common import (
     ArrayExprPrinter,
-    ArrayStmtEmitter,
     Emitter,
     _c,
-    bound_expr,
     emit_helpers,
-    ms_written_fields,
+    emit_parallel_block,
+    emit_sweep,
     multistage_plan,
 )
 from .gtscript import GTScriptSemanticError
@@ -59,6 +71,15 @@ def _writes_of(impl: ir.StencilImplementation) -> List[str]:
                     if w not in out:
                         out.append(w)
     return out
+
+
+def _ms_touched(ms: ir.MultiStage) -> set:
+    touched: set = set()
+    for itv in ms.intervals:
+        for st in itv.stages:
+            touched.update(st.reads)
+            touched.update(st.writes)
+    return touched
 
 
 def generate_pallas_source(
@@ -89,9 +110,29 @@ def generate_pallas_source(
 
     axes_of = {f.name: f.axes for f in impl.all_fields}
     dtype_of = {f.name: f.dtype for f in impl.all_fields}
-    for n in list(api_names) :
+    for n in api_names:
         if axes_of[n] not in (("I", "J", "K"), ("I", "J"), ("K",)):
             raise GTScriptSemanticError(f"pallas backend: unsupported axes {axes_of[n]} for {n!r}")
+
+    # the fields that arrive via an explicit halo DMA (K fields ride whole in VMEM)
+    dma_inputs = [n for n in input_api if axes_of[n] != ("K",)]
+    k_inputs = [n for n in input_api if axes_of[n] == ("K",)]
+
+    # first multi-stage that touches each DMA'd input — the wait point
+    first_use: Dict[str, int] = {}
+    for mi, ms in enumerate(impl.multi_stages):
+        touched = _ms_touched(ms)
+        for n in dma_inputs:
+            if n in touched:
+                first_use.setdefault(n, mi)
+    for n in dma_inputs:
+        first_use.setdefault(n, 0)
+
+    # k-blocked sweep plan: which sequential state is carried full vs windowed
+    carry_plans = analysis.sequential_carry_plan(impl)
+    windowed: Dict[str, int] = {}
+    for plan in carry_plans.values():
+        windowed.update(dict(plan.window))
 
     printer = ArrayExprPrinter(impl, "jnp", axes_of, dtype_of)
 
@@ -103,53 +144,39 @@ def generate_pallas_source(
     kb.line("nk = _NK")
     kb.line("gi = pl.program_id(0)")
     kb.line("gj = pl.program_id(1)")
-    # DMA input tiles (tile + halo) HBM→VMEM
-    for n in input_api:
-        axes = axes_of[n]
-        if axes == ("K",):
-            continue  # K fields arrive whole in VMEM
-        if axes == ("I", "J"):
+    # issue every halo DMA up front, each on its own semaphore; waits are
+    # deferred to each field's first-use multi-stage (software prefetch)
+    for i, n in enumerate(dma_inputs):
+        if axes_of[n] == ("I", "J"):
             src = f"{n}_hbm.at[pl.ds(gi * _BI, _BI + 2 * _H), pl.ds(gj * _BJ, _BJ + 2 * _H)]"
         else:
             src = f"{n}_hbm.at[pl.ds(gi * _BI, _BI + 2 * _H), pl.ds(gj * _BJ, _BJ + 2 * _H), :]"
-        kb.line(f"_cp_{n} = pltpu.make_async_copy({src}, _s_{n}, _dma_sem)")
+        kb.line(f"_cp_{n} = pltpu.make_async_copy({src}, _s_{n}, _dma_sems.at[{i}])")
         kb.line(f"_cp_{n}.start()")
-    for n in input_api:
-        if axes_of[n] == ("K",):
-            continue
-        kb.line(f"_cp_{n}.wait()")
-    # bind in-kernel arrays + origins
-    for n in read_api + written_api:
-        axes = axes_of[n]
-        if n in written_api:
-            if axes == ("I", "J", "K"):
-                shape, origin = "(ni, nj, nk)", (0, 0, 0)
-            elif axes == ("I", "J"):
-                shape, origin = "(ni, nj)", (0, 0, 0)
-            else:
-                shape, origin = "(nk,)", (0, 0, 0)
-            if n in inout_api:
-                if axes == ("I", "J", "K"):
-                    kb.line(f"{n} = _s_{n}[_H:_H + ni, _H:_H + nj, :]")
-                elif axes == ("I", "J"):
-                    kb.line(f"{n} = _s_{n}[_H:_H + ni, _H:_H + nj]")
-                else:
-                    kb.line(f"{n} = {n}_vmem[...]")
-            else:
-                kb.line(f"{n} = jnp.zeros({shape}, dtype='{dtype_of[n]}')")
-            kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = {origin}")
-        else:
-            axes = axes_of[n]
-            if axes == ("K",):
-                kb.line(f"{n} = {n}_vmem[...]")
-                kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = (0, 0, 0)")
-            else:
-                kb.line(f"{n} = _s_{n}[...]")
-                kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = (_H, _H, 0)")
     for s in impl.scalars:
         kb.line(f"{s.name} = {s.name}_smem[0]")
-    # temporaries (in-tile, VMEM-resident — the fusion payoff)
+    # K fields arrive whole in VMEM — no DMA to wait on
+    for n in k_inputs:
+        kb.line(f"{n} = {n}_vmem[...]")
+        kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = (0, 0, 0)")
+    # pure outputs start as zeros (functional in-kernel arrays)
+    for n in written_api:
+        if n in inout_api:
+            continue  # bound from the DMA'd scratch at first use
+        axes = axes_of[n]
+        if axes == ("I", "J", "K"):
+            shape = "(ni, nj, nk)"
+        elif axes == ("I", "J"):
+            shape = "(ni, nj)"
+        else:
+            shape = "(nk,)"
+        kb.line(f"{n} = jnp.zeros({shape}, dtype='{dtype_of[n]}')")
+        kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = (0, 0, 0)")
+    # temporaries (in-tile, VMEM-resident — the fusion payoff); sweep-window
+    # temporaries materialize as rolling planes inside their sweep instead
     for t in impl.temporaries:
+        if t.name in windowed:
+            continue
         ext = impl.extent_of(t.name)
         (ilo, ihi), (jlo, jhi), (klo, khi) = ext.as_tuple()
         axes = axes_of[t.name]
@@ -165,47 +192,67 @@ def generate_pallas_source(
         kb.line(f"{t.name} = jnp.zeros({shape}, dtype='{t.dtype}')")
         kb.line(f"_oi_{t.name}, _oj_{t.name}, _ok_{t.name} = {origin}")
 
-    # ----- fused multi-stages
+    # ----- fused multi-stages, with DMA waits at each input's first use
     for mi, ms in enumerate(impl.multi_stages):
         kb.line(f"# === multi-stage {mi}: {multistage_plan(ms)}")
-        backward = ms.order == ir.IterationOrder.BACKWARD
-        for ii, itv in enumerate(ms.intervals):
-            k0, k1 = f"_k0_{mi}_{ii}", f"_k1_{mi}_{ii}"
-            kb.line(f"{k0} = {bound_expr(itv.interval.start)}")
-            kb.line(f"{k1} = {bound_expr(itv.interval.end)}")
-            if ms.order == ir.IterationOrder.PARALLEL:
-                printer.mode = "block"
-                printer.k0, printer.k1 = k0, k1
-                emitter = ArrayStmtEmitter(printer, kb, functional=True)
-                for st in itv.stages:
-                    printer.extent = st.compute_extent
-                    for stmt in st.stmts:
-                        emitter.stmt(stmt)
+        for n in dma_inputs:
+            if first_use[n] != mi:
+                continue
+            kb.line(f"_cp_{n}.wait()")
+            if n in inout_api:
+                if axes_of[n] == ("I", "J"):
+                    kb.line(f"{n} = _s_{n}[_H:_H + ni, _H:_H + nj]")
+                else:
+                    kb.line(f"{n} = _s_{n}[_H:_H + ni, _H:_H + nj, :]")
+                kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = (0, 0, 0)")
             else:
-                printer.mode = "plane"
-                # carry every field written anywhere in this multi-stage so
-                # intervals of the same sweep chain state consistently
-                carried = ms_written_fields(ms, exclude=printer.locals_)
-                carry = ", ".join(carried)
-                trailing = "," if len(carried) == 1 else ""
-                kb.line(f"def _body_{mi}_{ii}(_it, _carry):")
-                kb.push()
-                kb.line(f"({carry}{trailing}) = _carry")
-                kb.line(f"k = {k1} - 1 - _it" if backward else f"k = {k0} + _it")
-                emitter = ArrayStmtEmitter(printer, kb, functional=True)
-                for st in itv.stages:
-                    printer.extent = st.compute_extent
-                    for stmt in st.stmts:
-                        emitter.stmt(stmt)
-                kb.line(f"return ({carry}{trailing})")
-                kb.pop()
-                kb.line(
-                    f"({carry}{trailing}) = lax.fori_loop(0, {k1} - {k0}, _body_{mi}_{ii}, "
-                    f"({carry}{trailing}))"
-                )
+                kb.line(f"{n} = _s_{n}[...]")
+                kb.line(f"_oi_{n}, _oj_{n}, _ok_{n} = (_H, _H, 0)")
+        if ms.order == ir.IterationOrder.PARALLEL:
+            emit_parallel_block(impl, printer, kb, ms, mi, functional=True)
+        else:
+            emit_sweep(impl, printer, kb, ms, mi, carry_plans[mi], "jnp")
 
     for n in written_api:
         kb.line(f"{n}_out_ref[...] = {n}")
+
+    # ---------------- static schedule / VMEM metadata ----------------
+    schedule = {
+        "halo": H,
+        "block_default": tuple(block),
+        "dma_inputs": list(dma_inputs),
+        "dma_first_use_ms": dict(sorted(first_use.items())),
+        "sweeps": {
+            mi: {"full": list(plan.full), "window": dict(plan.window)}
+            for mi, plan in sorted(carry_plans.items())
+        },
+        "full_carry_fields": sum(len(p.full) for p in carry_plans.values()),
+        "window_fields": len(windowed),
+        "window_planes": sum(windowed.values()),
+    }
+
+    # per-tile VMEM estimate terms: (extra_i, extra_j, k_planes | -1 for nk, itemsize)
+    vmem_terms: List[Tuple[int, int, int, int]] = []
+    k_bytes = 0
+    for n in dma_inputs:
+        isz = np.dtype(dtype_of[n]).itemsize
+        vmem_terms.append((2 * H, 2 * H, -1 if axes_of[n] == ("I", "J", "K") else 1, isz))
+    for n in k_inputs:
+        k_bytes += np.dtype(dtype_of[n]).itemsize
+    for n in written_api:
+        isz = np.dtype(dtype_of[n]).itemsize
+        vmem_terms.append((0, 0, -1 if axes_of[n] == ("I", "J", "K") else 1, isz))
+    for t in impl.temporaries:
+        isz = np.dtype(t.dtype).itemsize
+        (ilo, ihi), (jlo, jhi), (klo, khi) = impl.extent_of(t.name).as_tuple()
+        if t.name in windowed:
+            vmem_terms.append((ihi - ilo, jhi - jlo, windowed[t.name] + 1, isz))
+        elif axes_of[t.name] == ("I", "J", "K"):
+            vmem_terms.append((ihi - ilo, jhi - jlo, -1, isz))
+        elif axes_of[t.name] == ("I", "J"):
+            vmem_terms.append((ihi - ilo, jhi - jlo, 1, isz))
+        else:
+            k_bytes += isz
 
     # ---------------- module assembly ----------------
     em = Emitter()
@@ -225,9 +272,23 @@ def generate_pallas_source(
     em.line(f"_SCALARS = {[s.name for s in impl.scalars]!r}")
     em.line(f"_INPUT_API = {input_api!r}")
     em.line(f"_WRITTEN_API = {written_api!r}")
-    em.line(f"_K_FIELDS = {[n for n in read_api if axes_of[n] == ('K',)]!r}")
+    em.line(f"_K_FIELDS = {k_inputs!r}")
     em.line(f"_AXES = {dict(sorted((n, axes_of[n]) for n in api_names))!r}")
     em.line(f"_DTYPES = {dict(sorted((n, dtype_of[n]) for n in api_names))!r}")
+    em.line(f"SCHEDULE = {schedule!r}")
+    em.line(f"_VMEM_TERMS = {vmem_terms!r}")
+    em.line(f"_VMEM_K_BYTES = {k_bytes!r}")
+    em.line()
+    em.line("def _vmem_bytes(bi, bj, nk):")
+    em.push()
+    em.line('"""Per-tile VMEM footprint estimate for (bi, bj) at nk levels."""')
+    em.line("total = nk * _VMEM_K_BYTES")
+    em.line("for di, dj, kfac, isz in _VMEM_TERMS:")
+    em.push()
+    em.line("total += (bi + di) * (bj + dj) * (nk if kfac < 0 else kfac) * isz")
+    em.pop()
+    em.line("return total")
+    em.pop()
     em.line()
     em.line("def _make_kernel(_BI, _BJ, _NK):")
     em.push()
@@ -235,8 +296,8 @@ def generate_pallas_source(
         [f"{s.name}_smem" for s in impl.scalars]
         + [f"{n}_vmem" if axes_of[n] == ("K",) else f"{n}_hbm" for n in input_api]
         + [f"{n}_out_ref" for n in written_api]
-        + [f"_s_{n}" for n in input_api if axes_of[n] != ("K",)]
-        + ["_dma_sem"]
+        + [f"_s_{n}" for n in dma_inputs]
+        + (["_dma_sems"] if dma_inputs else [])
     ) + "):")
     em.pop()
     source = em.source() + kb.source()
@@ -291,12 +352,14 @@ def generate_pallas_source(
     tail.pop()
     tail.pop()
     tail.line("scratch = []")
+    tail.line("n_dma = 0")
     tail.line("for n in _INPUT_API:")
     tail.push()
     tail.line("if n in _K_FIELDS:")
     tail.push()
     tail.line("continue")
     tail.pop()
+    tail.line("n_dma += 1")
     tail.line("if _AXES[n] == ('I', 'J'):")
     tail.push()
     tail.line("scratch.append(pltpu.VMEM((bi + 2 * _H, bj + 2 * _H), _DTYPES[n]))")
@@ -306,7 +369,11 @@ def generate_pallas_source(
     tail.line("scratch.append(pltpu.VMEM((bi + 2 * _H, bj + 2 * _H, nk), _DTYPES[n]))")
     tail.pop()
     tail.pop()
-    tail.line("scratch.append(pltpu.SemaphoreType.DMA)")
+    tail.line("if n_dma:")
+    tail.push()
+    tail.line("# one DMA semaphore per prefetched input tile")
+    tail.line("scratch.append(pltpu.SemaphoreType.DMA((n_dma,)))")
+    tail.pop()
     tail.line("call = pl.pallas_call(kernel, grid=(nti, ntj), in_specs=in_specs, out_specs=out_specs,")
     tail.line("                      out_shape=out_shapes, scratch_shapes=scratch, interpret=INTERPRET)")
     tail.line("return jax.jit(call), (bi, bj, nti, ntj)")

@@ -15,8 +15,8 @@ import inspect
 import numbers
 import textwrap
 import weakref
-from dataclasses import dataclass, field as dc_field
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 

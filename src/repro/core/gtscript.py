@@ -166,7 +166,14 @@ def stencil(
 
     Extra ``backend_opts`` configure the optimization pass pipeline
     (``opt_level=0..3``, ``disable_passes=(...)``, ``enable_passes=(...)`` —
-    see ``repro.core.passes``) and backend codegen (Pallas ``block=(bi, bj)``).
+    see ``repro.core.passes``) and backend codegen.  Pallas only:
+    ``block=(bi, bj)`` pins the horizontal tile, while ``autotune=True``
+    searches candidate tiles at first call per domain and persists the
+    winner keyed on the cache fingerprint (``repro.core.autotune``; optional
+    ``autotune_candidates`` / ``autotune_iters`` / ``autotune_warmup``).  A
+    pinned ``block`` always wins over the autotuner.  The chosen tile,
+    per-candidate timings, and the backend's DMA/k-blocking schedule surface
+    through ``exec_info["autotune"]`` / ``exec_info["schedule"]``.
     """
 
     def _impl(func: Callable):

@@ -15,9 +15,8 @@ structural fingerprint (``caching.py``) can be derived from ``repr``.
 
 from __future__ import annotations
 
-import dataclasses
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple, Union
 
 

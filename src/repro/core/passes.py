@@ -16,6 +16,9 @@ Pipeline (in application order; ``min_opt_level`` in parentheses)::
     interval_merging   (2)  merge adjacent k-intervals with identical stage bodies
     multistage_fusion  (1)  fuse adjacent PARALLEL multi-stages so the Pallas
                             backend keeps intermediates VMEM-resident
+    cross_stage_cse    (3)  hash subexpressions across the fused stages (modulo
+                            a uniform offset shift) and hoist repeats into new
+                            temporaries computed once
     temp_demotion      (2)  demote single-interval, zero-offset temporaries to
                             stage-local values (no field allocation / DMA)
 
@@ -59,6 +62,16 @@ class PassContext:
 
     opt_level: int = DEFAULT_OPT_LEVEL
     records: List[Dict[str, Any]] = field(default_factory=list)
+    # per-pass structured detail (e.g. CSE's eliminated-occurrence count),
+    # stashed by Pass.apply and folded into the next record
+    _detail: Optional[Dict[str, Any]] = None
+
+    def set_detail(self, detail: Dict[str, Any]) -> None:
+        self._detail = dict(detail)
+
+    def pop_detail(self) -> Optional[Dict[str, Any]]:
+        d, self._detail = self._detail, None
+        return d
 
     def record(
         self,
@@ -68,15 +81,17 @@ class PassContext:
         after: Dict[str, int],
         changed: bool,
     ) -> None:
-        self.records.append(
-            {
-                "pass": name,
-                "seconds": seconds,
-                "before": before,
-                "after": after,
-                "changed": changed,
-            }
-        )
+        rec = {
+            "pass": name,
+            "seconds": seconds,
+            "before": before,
+            "after": after,
+            "changed": changed,
+        }
+        detail = self.pop_detail()
+        if detail is not None:
+            rec["detail"] = detail
+        self.records.append(rec)
 
 
 class Pass:
@@ -394,7 +409,328 @@ class MultiStageFusion(Pass):
 
 
 # ---------------------------------------------------------------------------
-# Pass 5: temporary demotion
+# Pass 5: cross-stage common-subexpression elimination
+# ---------------------------------------------------------------------------
+
+
+_BOOL_BINOPS = {"<", ">", "<=", ">=", "==", "!=", "and", "or"}
+_BOOL_NATIVES = {"isnan", "isfinite"}
+
+
+class _DtypeConflict(Exception):
+    """Raised when a subexpression mixes distinct concrete dtypes."""
+
+
+def _infer_expr_dtype(
+    e: ir.Expr,
+    field_dtype: Dict[str, str],
+    scalar_dtype: Dict[str, str],
+) -> Optional[str]:
+    """Concrete dtype of ``e``, None when only weak literals constrain it.
+
+    Raises :class:`_DtypeConflict` on mixed concrete dtypes — the CSE pass
+    skips such expressions rather than guess a promotion rule.
+    """
+
+    def unify(a: Optional[str], b: Optional[str]) -> Optional[str]:
+        if a is None:
+            return b
+        if b is None or a == b:
+            return a
+        raise _DtypeConflict(f"{a} vs {b}")
+
+    if isinstance(e, ir.Literal):
+        return "bool" if e.dtype == "bool" else None
+    if isinstance(e, ir.ScalarRef):
+        return scalar_dtype.get(e.name)
+    if isinstance(e, ir.FieldAccess):
+        return field_dtype.get(e.name)
+    if isinstance(e, ir.UnaryOp):
+        inner = _infer_expr_dtype(e.operand, field_dtype, scalar_dtype)
+        return "bool" if e.op == "not" else inner
+    if isinstance(e, ir.BinOp):
+        left = _infer_expr_dtype(e.left, field_dtype, scalar_dtype)
+        right = _infer_expr_dtype(e.right, field_dtype, scalar_dtype)
+        if e.op in _BOOL_BINOPS:
+            return "bool"
+        return unify(left, right)
+    if isinstance(e, ir.TernaryOp):
+        return unify(
+            _infer_expr_dtype(e.true_expr, field_dtype, scalar_dtype),
+            _infer_expr_dtype(e.false_expr, field_dtype, scalar_dtype),
+        )
+    if isinstance(e, ir.NativeCall):
+        if e.func in _BOOL_NATIVES:
+            return "bool"
+        out: Optional[str] = None
+        for a in e.args:
+            out = unify(out, _infer_expr_dtype(a, field_dtype, scalar_dtype))
+        return out
+    if isinstance(e, ir.Cast):
+        return e.dtype
+    return None
+
+
+def _expr_weight(e: ir.Expr) -> Tuple[int, int]:
+    """(op_count, field_access_count) of ``e`` — the hoisting-worthiness metric."""
+    ops = accesses = 0
+    for node in ir.walk_exprs(e):
+        if isinstance(node, ir.FieldAccess):
+            accesses += 1
+        elif isinstance(node, (ir.BinOp, ir.UnaryOp, ir.TernaryOp, ir.NativeCall, ir.Cast)):
+            ops += 1
+    return ops, accesses
+
+
+def _cse_worthwhile(e: ir.Expr) -> bool:
+    """Worth a temporary: compound, and either touches >= 2 field values or
+    performs >= 2 operations on at least one (single accesses / bare
+    negations are cheaper re-done than materialized)."""
+    if not isinstance(e, (ir.BinOp, ir.UnaryOp, ir.TernaryOp, ir.NativeCall, ir.Cast)):
+        return False
+    ops, accesses = _expr_weight(e)
+    return accesses >= 2 or (ops >= 2 and accesses >= 1)
+
+
+def _canonicalize(e: ir.Expr) -> Tuple[Optional[ir.Expr], Tuple[int, int, int]]:
+    """Shift ``e`` so its first field access sits at zero offset.
+
+    Two subexpressions that differ only by a uniform offset shift (the
+    ``gcv`` / ``gcv(k-1)`` motif of tridiagonal assembly) share a canonical
+    form and can be computed once.  Returns (canonical expr, shift) where
+    ``e == shift_accesses(canonical, shift)``; (None, 0-shift) when ``e``
+    contains no field access.
+    """
+    for node in ir.walk_exprs(e):
+        if isinstance(node, ir.FieldAccess):
+            shift = node.offset
+            if shift == (0, 0, 0):
+                return e, shift
+            neg = (-shift[0], -shift[1], -shift[2])
+            return ir.shift_accesses(e, neg), shift
+    return None, (0, 0, 0)
+
+
+def _shifted_interval(
+    itv: ir.VerticalInterval, lo: int, hi: int
+) -> Optional[ir.VerticalInterval]:
+    """The interval covering ``itv`` shifted by every k in [lo, hi] — where a
+    k-shifted hoist must evaluate.  None when not representable as axis
+    bounds (the hoist is then rejected)."""
+    try:
+        return ir.VerticalInterval(
+            ir.AxisBound(itv.start.level, itv.start.offset + lo),
+            ir.AxisBound(itv.end.level, itv.end.offset + hi),
+        )
+    except ValueError:
+        return None
+
+
+class CrossStageCSE(Pass):
+    """Hoist subexpressions repeated across the stages of a PARALLEL
+    multi-stage interval (modulo a uniform offset shift) into a temporary
+    computed once — typical wins are the shifted neighbor-sum / coefficient
+    chains of tridiagonal assembly, which otherwise recompute per stage.
+
+    Legality:
+
+    * Only PARALLEL multi-stages participate: sequential sweeps carry
+      loop-order semantics where a k-shifted occurrence reads a *different
+      iteration's* value of any field written in the sweep.
+    * A repeat is only hoisted when no stage between (and including) its
+      first and last occurrence writes any field the expression reads, so
+      every occurrence provably sees identical operand values.
+    * Occurrences whose shifts agree on k insert the defining stage right
+      before the first use, inside the same interval.  Occurrences that
+      differ by a *vertical* shift evaluate the expression at k-planes
+      outside the source interval, so the defining stage is emitted in its
+      own vertical interval spanning the union of evaluation planes — which
+      is exactly the set of planes some occurrence already evaluated the
+      expression at, so every operand read stays in-domain.  (Such hoists
+      additionally require that *no* stage up to the last occurrence writes
+      an operand, since the defining interval runs before the whole source
+      interval.)  Unrepresentable unions reject the hoist.
+    * Occurrences are collected from top-level assignment expressions only;
+      statements nested in conditionals keep their expressions (the masked
+      write machinery stays untouched).
+    * The hoisted temporary's dtype is structurally inferred; expressions
+      mixing concrete dtypes are skipped rather than promoted.
+
+    The vectorized backends evaluate the hoisted statement over the union of
+    its readers' extents — exactly the regions the occurrences covered.
+    Eliminated-occurrence counts are reported via the pass record's
+    ``detail`` (surfaced in ``exec_info["pass_report"]``).
+    """
+
+    name = "cross_stage_cse"
+    min_opt_level = 3
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        field_dtype = {f.name: f.dtype for f in impl.all_fields}
+        scalar_dtype = {s.name: s.dtype for s in impl.scalars}
+        taken = set(field_dtype) | set(scalar_dtype)
+        new_temps: List[ir.FieldDecl] = []
+        eliminated = 0
+        counter = 0
+
+        def fresh_name() -> str:
+            nonlocal counter
+            while True:
+                name = f"_cse{counter}"
+                counter += 1
+                if name not in taken:
+                    taken.add(name)
+                    return name
+
+        multi_stages: List[ir.MultiStage] = []
+        for ms in impl.multi_stages:
+            if ms.order != ir.IterationOrder.PARALLEL:
+                multi_stages.append(ms)
+                continue
+            intervals: List[ir.MultiStageInterval] = []
+            for itv in ms.intervals:
+                stages = list(itv.stages)
+                defines: List[ir.MultiStageInterval] = []
+                rejected: set = set()
+                while True:
+                    hoist = self._pick_hoist(stages, rejected)
+                    if hoist is None:
+                        break
+                    key, occurrences = hoist
+                    try:
+                        dtype = _infer_expr_dtype(key, field_dtype, scalar_dtype)
+                    except _DtypeConflict:
+                        dtype = None
+                    if dtype is None:
+                        rejected.add(key)  # untypeable: leave it in place
+                        continue
+                    # Re-base the canonical so the occurrence-shift hull
+                    # contains zero on every axis: the Extent model pads
+                    # regions to include the origin, so any other base would
+                    # over-approximate the operands' halos (and can demand
+                    # halo the user never allocated).
+                    base = tuple(min(s[ax] for _, s in occurrences) for ax in range(3))
+                    shifts = [
+                        (s[0] - base[0], s[1] - base[1], s[2] - base[2])
+                        for _, s in occurrences
+                    ]
+                    k_shifts = sorted(s[2] for s in shifts)
+                    define_itv = itv.interval
+                    if k_shifts[0] != 0 or k_shifts[-1] != 0:
+                        define_itv = _shifted_interval(itv.interval, k_shifts[0], k_shifts[-1])
+                        if define_itv is None:
+                            rejected.add(key)  # evaluation range unrepresentable
+                            continue
+                    temp = fresh_name()
+                    first = min(idx for idx, _ in occurrences)
+                    stages = self._rewrite(stages, key, temp, base)
+                    define = ir.make_stage(
+                        (ir.Assign(ir.FieldAccess(temp, (0, 0, 0)), ir.shift_accesses(key, base)),),
+                        ir.Extent.zero(),
+                    )
+                    if define_itv is itv.interval:
+                        stages.insert(first, define)
+                    else:
+                        defines.append(ir.MultiStageInterval(define_itv, (define,)))
+                    new_temps.append(ir.FieldDecl(temp, dtype, ir.AXES_IJK, is_api=False))
+                    field_dtype[temp] = dtype
+                    eliminated += len(occurrences) - 1
+                intervals.extend(defines)
+                intervals.append(ir.MultiStageInterval(itv.interval, tuple(stages)))
+            multi_stages.append(ir.MultiStage(ms.order, tuple(intervals)))
+
+        ctx.set_detail({"hoisted": len(new_temps), "eliminated": eliminated})
+        if not new_temps:
+            return impl
+        impl = dataclasses.replace(
+            impl,
+            multi_stages=tuple(multi_stages),
+            temporaries=tuple(impl.temporaries) + tuple(new_temps),
+        )
+        # new defining stages need compute extents; reader extents may grow
+        return analysis.recompute_implementation(impl)
+
+    # -- helpers -----------------------------------------------------------
+
+    @staticmethod
+    def _collect(
+        stages: List[ir.Stage], rejected: set
+    ) -> Dict[ir.Expr, List[Tuple[int, Tuple[int, int, int]]]]:
+        occ: Dict[ir.Expr, List[Tuple[int, Tuple[int, int, int]]]] = {}
+        for idx, st in enumerate(stages):
+            for stmt in st.stmts:
+                if not isinstance(stmt, ir.Assign):
+                    continue  # conditionals keep their expressions
+                for node in ir.walk_exprs(stmt.value):
+                    if not _cse_worthwhile(node):
+                        continue
+                    key, shift = _canonicalize(node)
+                    if key is None or key in rejected:
+                        continue
+                    occ.setdefault(key, []).append((idx, shift))
+        return occ
+
+    def _pick_hoist(
+        self, stages: List[ir.Stage], rejected: set
+    ) -> Optional[Tuple[ir.Expr, List[Tuple[int, Tuple[int, int, int]]]]]:
+        """The biggest legal repeated subexpression, or None."""
+        candidates = []
+        for key, occurrences in self._collect(stages, rejected).items():
+            if len(occurrences) < 2:
+                continue
+            reads = {e.name for e in ir.walk_exprs(key) if isinstance(e, ir.FieldAccess)}
+            lo = min(idx for idx, _ in occurrences)
+            hi = max(idx for idx, _ in occurrences)
+            if any(shift[2] != 0 for _, shift in occurrences):
+                lo = 0  # defining interval runs before the whole source interval
+            if any(set(stages[i].writes) & reads for i in range(lo, hi + 1)):
+                continue  # an operand is rewritten between occurrences
+            ops, accesses = _expr_weight(key)
+            candidates.append((len(occurrences), ops + accesses, key, occurrences))
+        if not candidates:
+            return None
+        # most occurrences first, then largest expression; repr breaks ties
+        # deterministically so codegen is reproducible
+        candidates.sort(key=lambda c: (-c[0], -c[1], repr(c[2])))
+        _, _, key, occurrences = candidates[0]
+        return key, occurrences
+
+    def _rewrite(
+        self, stages: List[ir.Stage], key: ir.Expr, temp: str, base: Tuple[int, int, int]
+    ) -> List[ir.Stage]:
+        def rewrite_expr(e: ir.Expr) -> ir.Expr:
+            if _cse_worthwhile(e):
+                canon, shift = _canonicalize(e)
+                if canon == key:
+                    return ir.FieldAccess(
+                        temp, (shift[0] - base[0], shift[1] - base[1], shift[2] - base[2])
+                    )
+            if isinstance(e, ir.UnaryOp):
+                return ir.UnaryOp(e.op, rewrite_expr(e.operand))
+            if isinstance(e, ir.BinOp):
+                return ir.BinOp(e.op, rewrite_expr(e.left), rewrite_expr(e.right))
+            if isinstance(e, ir.TernaryOp):
+                return ir.TernaryOp(
+                    rewrite_expr(e.cond), rewrite_expr(e.true_expr), rewrite_expr(e.false_expr)
+                )
+            if isinstance(e, ir.NativeCall):
+                return ir.NativeCall(e.func, tuple(rewrite_expr(a) for a in e.args))
+            if isinstance(e, ir.Cast):
+                return ir.Cast(e.dtype, rewrite_expr(e.expr))
+            return e
+
+        out: List[ir.Stage] = []
+        for st in stages:
+            stmts = tuple(
+                ir.Assign(s.target, rewrite_expr(s.value)) if isinstance(s, ir.Assign) else s
+                for s in st.stmts
+            )
+            out.append(ir.make_stage(stmts, st.compute_extent) if stmts != st.stmts else st)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Pass 6: temporary demotion
 # ---------------------------------------------------------------------------
 
 
@@ -484,6 +820,7 @@ PIPELINE: Tuple[Pass, ...] = (
     DeadTempPruning(),
     IntervalMerging(),
     MultiStageFusion(),
+    CrossStageCSE(),
     TempDemotion(),
 )
 

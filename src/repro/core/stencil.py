@@ -17,7 +17,6 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import numpy as np
 
 from . import analysis, caching, frontend, ir, passes
-from .gtscript import GTScriptSemanticError
 from .storage import Storage
 
 _AXIS_INDEX = {"I": 0, "J": 1, "K": 2}
@@ -59,6 +58,9 @@ class StencilObject:
         validate_args: bool = True,
         fingerprint: str = "",
         pass_report: Optional[list] = None,
+        module=None,
+        autotune_cfg: Optional[Dict[str, Any]] = None,
+        pinned_block: Optional[Tuple[int, int]] = None,
     ):
         self.name = name
         self.backend = backend
@@ -70,6 +72,13 @@ class StencilObject:
         self.fingerprint = fingerprint
         # per-pass compile-time instrumentation (passes.PassContext.records)
         self.pass_report = list(pass_report or [])
+        # pallas schedule/autotune state: the generated module (for SCHEDULE /
+        # _vmem_bytes metadata), the autotune configuration, and an explicit
+        # user-pinned block (which always wins over the autotuner)
+        self._module = module
+        self._autotune_cfg = dict(autotune_cfg or {})
+        self._pinned_block = tuple(pinned_block) if pinned_block is not None else None
+        self._block_cache: Dict[Tuple[int, int, int], Any] = {}
 
         impl = implementation_ir
         kext = dict(impl.k_extents)
@@ -234,6 +243,16 @@ class StencilObject:
             self._validate(fields, scalars, domain, origins)
 
         raw_fields = {n: self._raw(v) for n, v in fields.items()}
+
+        block = None
+        if self.backend == "pallas":
+            # resolve the tile before tracing: timing cannot happen under jit
+            block, autotune_record = self._resolve_block(domain)
+            if exec_info is not None:
+                exec_info["schedule"] = getattr(self._module, "SCHEDULE", None)
+                if autotune_record is not None:
+                    exec_info["autotune"] = autotune_record
+
         if exec_info is not None:
             exec_info["run_start_time"] = time.perf_counter()
 
@@ -247,7 +266,7 @@ class StencilObject:
             self._run(raw_fields, scalars, domain, origins)
             result = None
         else:  # jax / pallas
-            fn = self._jitted(domain, origins)
+            fn = self._jitted(domain, origins, block)
             updates = fn(raw_fields, dict(scalars))
             for n, new in updates.items():
                 val = fields[n]
@@ -262,8 +281,33 @@ class StencilObject:
             exec_info["run_end_time"] = time.perf_counter()
         return result
 
-    def _jitted(self, domain, origins) -> Callable:
-        key = (tuple(domain), tuple(sorted(origins.items())))
+    def _resolve_block(self, domain) -> Tuple[Optional[Tuple[int, int]], Optional[dict]]:
+        """The pallas tile for this domain: pinned block wins, otherwise the
+        autotuner's (cached) choice, otherwise the generated default."""
+        if self._pinned_block is not None or not self._autotune_cfg.get("autotune"):
+            return self._pinned_block, None
+        if self._module is None:
+            return None, None
+        key = tuple(domain)
+        cached = self._block_cache.get(key)
+        if cached is None:
+            from . import autotune
+
+            kwargs = {}
+            if self._autotune_cfg.get("autotune_candidates") is not None:
+                kwargs["candidates"] = self._autotune_cfg["autotune_candidates"]
+            if self._autotune_cfg.get("autotune_iters") is not None:
+                kwargs["iters"] = int(self._autotune_cfg["autotune_iters"])
+            if self._autotune_cfg.get("autotune_warmup") is not None:
+                kwargs["warmup"] = int(self._autotune_cfg["autotune_warmup"])
+            cached = autotune.select_block(
+                self._module, self.name, self.fingerprint, key, **kwargs
+            )
+            self._block_cache[key] = cached
+        return cached
+
+    def _jitted(self, domain, origins, block=None) -> Callable:
+        key = (tuple(domain), tuple(sorted(origins.items())), block)
         fn = self._jit_cache.get(key)
         if fn is None:
             import jax
@@ -271,6 +315,8 @@ class StencilObject:
             run = self._run
 
             def _pure(fields, scalars):
+                if block is not None:
+                    return run(fields, scalars, tuple(domain), dict(origins), block=tuple(block))
                 return run(fields, scalars, tuple(domain), dict(origins))
 
             fn = jax.jit(_pure)
@@ -331,8 +377,19 @@ def build_from_definition(
 
     ``backend_opts`` carries the pass-pipeline configuration (``opt_level``,
     ``disable_passes``, ``enable_passes`` — see ``passes.py``) alongside any
-    codegen options (e.g. the Pallas ``block`` shape)."""
+    codegen options (e.g. the Pallas ``block`` shape) and the Pallas
+    autotuner configuration (``autotune=True`` plus optional
+    ``autotune_candidates`` / ``autotune_iters`` / ``autotune_warmup`` — see
+    ``autotune.py``).  The autotune keys deliberately stay *out* of the
+    cache fingerprint: they change which tile ``run`` is called with, never
+    the generated module, and the tuning store is keyed on the fingerprint
+    so identical IR + options always share one tuning record."""
     pass_cfg, codegen_opts = passes.split_backend_opts(backend_opts)
+    autotune_cfg = {
+        k: codegen_opts.pop(k)
+        for k in ("autotune", "autotune_candidates", "autotune_iters", "autotune_warmup")
+        if k in codegen_opts
+    }
     name = definition_ir.name
     impl = analysis.analyze(definition_ir)
     impl, pass_report = passes.run_pipeline(impl, **pass_cfg)
@@ -368,4 +425,7 @@ def build_from_definition(
         validate_args=validate_args,
         fingerprint=fp,
         pass_report=pass_report,
+        module=module,
+        autotune_cfg=autotune_cfg,
+        pinned_block=codegen_opts.get("block") if backend == "pallas" else None,
     )

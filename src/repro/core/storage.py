@@ -14,7 +14,7 @@ writes go through a view).
 
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple, Union
+from typing import Any, Tuple
 
 import numpy as np
 

@@ -10,7 +10,7 @@ losses decrease realistically rather than saturating instantly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np

@@ -105,8 +105,8 @@ def _flash_kernel(
 
     @pl.when(kvb == n_kv_blocks - 1)
     def _finalize():
-        l = l_ref[:, :1]
-        o = acc_ref[...] / jnp.maximum(l, 1e-37)
+        lse = l_ref[:, :1]
+        o = acc_ref[...] / jnp.maximum(lse, 1e-37)
         o_ref[0, 0] = o.astype(o_ref.dtype)
 
 

@@ -26,12 +26,10 @@ import re
 import time
 import traceback
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro  # noqa: F401  (x64 flag)
 from repro.configs import get_arch, get_shape, list_archs
@@ -231,7 +229,6 @@ def lower_stencil_cell(multi_pod: bool, *, global_ij: int = 8192, nk: int = 64,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     st = build_hdiff(backend, dtype=dtype)
-    i_axes = ("pod", "data") if multi_pod else ("data",)
     # decompose i over data(+pod), j over model
     dist = DistributedStencil(st, mesh, i_axis="data", j_axis="model", overlap=overlap)
     gi = global_ij * (2 if multi_pod else 1)

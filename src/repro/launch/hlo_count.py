@@ -20,7 +20,6 @@ largest integer constant in the condition.
 
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

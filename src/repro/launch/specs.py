@@ -8,7 +8,7 @@ allocation happens here.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +20,7 @@ from repro.configs.base import ArchConfig
 from repro.data.pipeline import make_batch_specs
 from repro.models import build_model
 from repro.models.layers import ParamSpec
-from repro.optim import adamw_init
-from repro.parallel.sharding import current_rules, logical_spec
+from repro.parallel.sharding import logical_spec
 from repro.runtime.loop import TrainState
 
 
@@ -147,7 +146,7 @@ def cache_shardings(mesh: Mesh, cache_tree: Any) -> Any:
         return NamedSharding(mesh, logical_spec(logical, mesh, leaf.shape))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
-    return jax.tree_util.tree_unflatten(treedef, [walk(p, l) for p, l in flat])
+    return jax.tree_util.tree_unflatten(treedef, [walk(p, leaf) for p, leaf in flat])
 
 
 def serve_batch_shardings(mesh: Mesh, batch_specs: Dict[str, Any]) -> Dict[str, Any]:
@@ -165,7 +164,7 @@ def serve_batch_shardings(mesh: Mesh, batch_specs: Dict[str, Any]) -> Dict[str, 
         return NamedSharding(mesh, logical_spec(logical, mesh, s.shape))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(batch_specs)
-    return jax.tree_util.tree_unflatten(treedef, [shard_one(p, l) for p, l in flat])
+    return jax.tree_util.tree_unflatten(treedef, [shard_one(p, leaf) for p, leaf in flat])
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,6 @@ import logging
 import time
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
@@ -76,7 +75,6 @@ def main() -> None:
         t0 = time.time()
         state = trainer.restore_or_init()
         start_step = int(state.step)
-        n_logged = 0
         for step in range(start_step, args.steps):
             batch = {k: jnp.asarray(v) for k, v in dataset.batch_at(step).items()}
             state, metrics = trainer._step(state, batch)

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.parallel.sharding import with_logical_constraint
 
-from .layers import ParamSpec, dense, dense_spec, rope, softcap
+from .layers import ParamSpec, rope, softcap
 
 NEG_INF = -1e30
 
@@ -135,7 +135,7 @@ def attend_chunked(
     vc = v.reshape(b, nchunks, chunk, kh, dh)
 
     def body(carry, inputs):
-        acc, m, l = carry  # acc (B,Sq,Kh,G,Dh) f32; m,l (B,Sq,Kh,G)
+        acc, m, lsum = carry  # acc (B,Sq,Kh,G,Dh) f32; m,lsum (B,Sq,Kh,G)
         kb, vb, c_idx = inputs  # kb/vb (B, C, Kh, Dh)
         kpos = c_idx * chunk + jnp.arange(chunk, dtype=jnp.int32)
         s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb.astype(jnp.float32)) * scale
@@ -149,7 +149,7 @@ def attend_chunked(
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p, axis=-1)
+        l_new = lsum * alpha + jnp.sum(p, axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum("bqkgc,bckd->bqkgd", p, vb.astype(jnp.float32))
         return (acc_new, m_new, l_new), None
 
@@ -161,8 +161,8 @@ def attend_chunked(
         jnp.moveaxis(vc, 1, 0),
         jnp.arange(nchunks, dtype=jnp.int32),
     )
-    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), xs)
-    o = acc / jnp.maximum(l[..., None], 1e-37)
+    (acc, m, lsum), _ = jax.lax.scan(body, (acc0, m0, l0), xs)
+    o = acc / jnp.maximum(lsum[..., None], 1e-37)
     return o.reshape(b, sq, h, dh).astype(q.dtype)
 
 

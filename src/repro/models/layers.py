@@ -4,9 +4,8 @@ parallel ParamSpec tree carrying logical sharding axes (see parallel/sharding).
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,9 +6,8 @@ of (params, batch/cache) — ready for jit / shard_map / the dry-run.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -166,7 +165,6 @@ class LM:
         if cfg.family == "hybrid":
             pat = cfg.rglru.pattern
             n_groups, rem = divmod(cfg.n_layers, len(pat))
-            win = min(cfg.sliding_window or max_len, max_len)
 
             def layer_cache(kind, stacked_n=None):
                 if kind == "rglru":

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.configs.base import MoEConfig
 from repro.parallel.sharding import with_logical_constraint
 
-from .layers import ParamSpec, dense, mlp, mlp_spec
+from .layers import ParamSpec, mlp, mlp_spec
 
 
 def moe_spec(d: int, cfg: MoEConfig, activation: str, use_bias: bool) -> Dict[str, Any]:
@@ -73,7 +73,6 @@ def moe_layer(
     """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
-    tk = s * k
 
     # ---- routing (fp32 for numerics)
     logits = x.astype(jnp.float32) @ params["router"]["kernel"]  # (B, S, E)

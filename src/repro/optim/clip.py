@@ -8,11 +8,11 @@ import jax.numpy as jnp
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in leaves))
 
 
 def clip_by_global_norm(tree, max_norm: float):
     """Returns (clipped tree, pre-clip norm)."""
     norm = global_norm(tree)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
-    return jax.tree_util.tree_map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), norm
+    return jax.tree_util.tree_map(lambda leaf: (leaf.astype(jnp.float32) * scale).astype(leaf.dtype), tree), norm

@@ -11,8 +11,7 @@ with no sender receive zeros.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

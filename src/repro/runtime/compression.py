@@ -10,7 +10,6 @@ reduction by default (compression is opt-in, benchmarked in EXPERIMENTS.md).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax

@@ -18,14 +18,10 @@ interior work with the permutes).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.5 exports it at top level
     _shard_map = jax.shard_map
@@ -39,8 +35,8 @@ def shard_map(body, *, mesh, in_specs, out_specs):
     except TypeError:
         return _shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
-from repro.core.stencil import StencilObject
-from repro.parallel.halo import exchange_halo_2d
+from repro.core.stencil import StencilObject  # noqa: E402  (after the shard_map compat shim)
+from repro.parallel.halo import exchange_halo_2d  # noqa: E402
 
 
 class DistributedStencil:

@@ -15,7 +15,7 @@ import numpy as np
 from repro.core import gtscript
 from repro.core.gtscript import Field, PARALLEL, computation, interval
 
-from .library import gradx, grady, laplacian
+from .library import gradx, grady, laplacian, smagorinsky_factor
 
 DEFAULT_LIM = 0.01
 
@@ -58,7 +58,39 @@ def hdiff_f32_defs(in_phi: Field[np.float32], out_phi: Field[np.float32], *, alp
 HALO = 3  # compile-time known read extent of in_phi
 
 
+def hdiff_smag_defs(
+    u: Field[np.float64],
+    v: Field[np.float64],
+    out_u: Field[np.float64],
+    out_v: Field[np.float64],
+    *,
+    dt: np.float64,
+):
+    """Horizontal diffusion with a Smagorinsky coefficient (COSMO motif).
+
+    The deformation factor inlines with its ``stretch`` / ``shear`` chains
+    each appearing twice (``stretch * stretch + shear * shear``) — the
+    repeated-subexpression shape the ``cross_stage_cse`` pass eliminates.
+    """
+    from __externals__ import CS
+
+    with computation(PARALLEL), interval(...):
+        smag = CS * smagorinsky_factor(u, v)
+        lap_u = laplacian(u)
+        lap_v = laplacian(v)
+        out_u = u + dt * smag * lap_u
+        out_v = v + dt * smag * lap_v
+
+
+DEFAULT_CS = 0.15
+
+
 @functools.lru_cache(maxsize=None)
 def build_hdiff(backend: str = "numpy", lim: float = DEFAULT_LIM, dtype: str = "float64", **opts):
     defs = hdiff_defs if dtype == "float64" else hdiff_f32_defs
     return gtscript.stencil(backend=backend, externals={"LIM": lim}, **opts)(defs)
+
+
+@functools.lru_cache(maxsize=None)
+def build_hdiff_smag(backend: str = "numpy", cs: float = DEFAULT_CS, **opts):
+    return gtscript.stencil(backend=backend, externals={"CS": cs}, **opts)(hdiff_smag_defs)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch, get_shape, list_archs
+from repro.configs import get_arch, list_archs
 from repro.models import build_model
 
 ARCHS = list(list_archs())

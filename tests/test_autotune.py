@@ -1,0 +1,123 @@
+"""Pallas tile-size autotuner tests (repro.core.autotune).
+
+The tuning store is isolated per test via REPRO_GT_CACHE so persisted
+records from one test (or a developer cache) never leak into another.
+"""
+
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import autotune, caching, gtscript, storage
+
+NI, NJ, NK = 12, 10, 6
+CANDS = ((4, 4), (8, 8))
+
+
+@pytest.fixture()
+def isolated_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_GT_CACHE", str(tmp_path))
+    saved = dict(autotune._memory)
+    autotune._memory.clear()
+    yield tmp_path
+    autotune._memory.clear()
+    autotune._memory.update(saved)
+
+
+def _defs_source():
+    from repro.stencils.vintg import vintg_defs
+
+    return vintg_defs
+
+
+def _call(st, exec_info=None):
+    rng = np.random.default_rng(0)
+    fs = {
+        n: storage.from_array(v, backend="pallas")
+        for n, v in {
+            "rho": rng.random((NI, NJ, NK)) + 0.5,
+            "w": rng.random((NI, NJ, NK)) + 0.5,
+            "out_dn": np.zeros((NI, NJ, NK)),
+            "out_up": np.zeros((NI, NJ, NK)),
+        }.items()
+    }
+    st(**fs, decay=np.float64(0.9), domain=(NI, NJ, NK), exec_info=exec_info)
+
+
+def _build(**opts):
+    return gtscript.stencil(
+        backend="pallas", autotune=True, autotune_candidates=CANDS,
+        autotune_iters=1, autotune_warmup=1, rebuild=True, **opts,
+    )(_defs_source())
+
+
+def test_autotuner_times_candidates_and_persists(isolated_cache):
+    st = _build()
+    info = {}
+    _call(st, info)
+    rec = info["autotune"]
+    assert rec["cache_hit"] is False
+    timed = {tuple(t["block"]) for t in rec["timings"]}
+    # the clamped default block (8, 10) is timed alongside the candidates
+    assert timed == {(4, 4), (8, 8), (8, 10)}
+    assert tuple(rec["block"]) in timed
+    assert all(t["us"] > 0 for t in rec["timings"])
+
+    path = caching.tuning_path(st.name, st.fingerprint)
+    store = json.loads(path.read_text())
+    (entry,) = store["domains"].values()
+    assert entry["block"] == rec["block"]
+
+
+def test_second_build_identical_ir_is_pure_cache_hit(isolated_cache):
+    st1 = _build()
+    info1 = {}
+    _call(st1, info1)
+    assert info1["autotune"]["cache_hit"] is False
+
+    # a fresh StencilObject for the identical IR + opts shares the
+    # fingerprint, so its first call reuses the persisted tile untimed
+    st2 = _build()
+    assert st2 is not st1 and st2.fingerprint == st1.fingerprint
+    info2 = {}
+    _call(st2, info2)
+    assert info2["autotune"]["cache_hit"] is True
+    assert info2["autotune"]["block"] == info1["autotune"]["block"]
+
+    # ... including across a cold in-memory cache (disk only)
+    autotune._memory.clear()
+    st3 = _build()
+    info3 = {}
+    _call(st3, info3)
+    assert info3["autotune"]["cache_hit"] is True
+
+
+def test_distinct_opt_levels_key_distinct_tiles(isolated_cache):
+    st_lo = _build(opt_level=1)
+    st_hi = _build(opt_level=3)
+    assert st_lo.fingerprint != st_hi.fingerprint
+    for st in (st_lo, st_hi):
+        info = {}
+        _call(st, info)
+        assert info["autotune"]["cache_hit"] is False  # tuned independently
+    stores = glob.glob(os.path.join(str(isolated_cache), "*.tune.json"))
+    assert len(stores) == 2
+
+
+def test_pinned_block_wins_over_autotuner(isolated_cache):
+    st = _build(block=(4, 8))
+    info = {}
+    _call(st, info)
+    assert "autotune" not in info  # no search ran
+    assert glob.glob(os.path.join(str(isolated_cache), "*.tune.json")) == []
+
+
+def test_vmem_filter_drops_oversized_candidates(isolated_cache):
+    st = _build()
+    module = st._module
+    blocks = autotune.candidate_blocks(module, (4096, 4096, 128), candidates=((8, 128), (2048, 2048)))
+    assert (8, 128) in blocks
+    assert (2048, 2048) not in blocks  # far past the VMEM budget

@@ -12,8 +12,6 @@ import tempfile
 import textwrap
 from pathlib import Path
 
-import numpy as np
-import pytest
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 

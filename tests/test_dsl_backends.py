@@ -10,7 +10,6 @@ import pytest
 
 from repro.core import gtscript, storage
 from repro.core.gtscript import (
-    BACKWARD,
     FORWARD,
     PARALLEL,
     Field,

@@ -88,7 +88,7 @@ def test_externals_resolved_and_required():
     d = _parse(st, externals={"C": 2.5})
     stmt = d.computations[0].intervals[0].body[0]
     lits = [e for e in ir.walk_exprs(stmt.value) if isinstance(e, ir.Literal)]
-    assert any(l.value == 2.5 for l in lits)
+    assert any(lit.value == 2.5 for lit in lits)
 
     with pytest.raises(GTScriptSemanticError, match="external"):
         _parse(st, externals={})

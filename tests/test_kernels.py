@@ -2,7 +2,6 @@
 each kernel asserted allclose against its pure-jnp ref.py oracle
 (Pallas interpret mode on CPU)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

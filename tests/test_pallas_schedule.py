@@ -1,0 +1,220 @@
+"""Pallas backend schedule tests: double-buffered halo DMAs, k-blocked
+sweeps (rolling plane windows), and the exported SCHEDULE metadata.
+
+Correctness is locked differentially: every scheduling decision must be
+bit-identical (float64) to the debug oracle on numpy, jax and pallas, at
+``opt_level=0`` and at the default pipeline.
+"""
+
+import numpy as np
+
+from repro.core import analysis, frontend, gtscript, passes, storage
+from repro.core.gtscript import FORWARD, PARALLEL, Field, computation, interval
+from repro.stencils.vintg import vintg_defs
+
+from test_passes import run_differential
+
+NI, NJ, NK = 7, 6, 5
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape)
+
+
+def _impl(defs, externals=None, name=None):
+    impl = analysis.analyze(
+        frontend.parse_stencil_definition(defs, externals=externals or {}, name=name or defs.__name__)
+    )
+    opt, _ = passes.run_pipeline(impl)
+    return opt
+
+
+# ---------------------------------------------------------------------------
+# carry-plan analysis
+# ---------------------------------------------------------------------------
+
+
+def test_vintg_carry_plan_windows_accumulators():
+    plans = analysis.sequential_carry_plan(_impl(vintg_defs))
+    assert len(plans) == 2
+    fwd, bwd = plans[0], plans[1]
+    assert fwd.full == ("out_dn",) and fwd.window == (("acc_dn", 1),)
+    assert bwd.full == ("out_up",) and bwd.window == (("acc_up", 1),)
+    # the k-blocking payoff: 1 full field + 1 plane instead of 2 full fields
+    assert fwd.carried_planes(NK) == NK + 1
+    assert fwd.baseline_planes(NK) == 2 * NK
+
+
+def test_vadv_carry_plan_keeps_cross_sweep_temps_full():
+    from repro.stencils.vadv import vadv_defs
+
+    plans = analysis.sequential_carry_plan(_impl(vadv_defs, name="vadv"))
+    # cp/dp are read by the BACKWARD substitution sweep → must stay full 3-D
+    assert set(plans[0].full) == {"cp", "dp"} and plans[0].window == ()
+    assert plans[1].full == ("out",) and plans[1].window == ()
+
+
+def test_sweep_local_temp_written_in_two_sweeps_stays_full():
+    def defs(a: Field[np.float64], o: Field[np.float64]):
+        with computation(FORWARD), interval(...):
+            t = a * 2.0
+            o = t
+        with computation(FORWARD), interval(...):
+            t = a * 3.0
+            o = o[0, 0, 0] + t
+
+    plans = analysis.sequential_carry_plan(_impl(defs))
+    # t is written by two multi-stages — the rolling window may not be split
+    assert all("t" not in dict(p.window) for p in plans.values())
+
+
+# ---------------------------------------------------------------------------
+# windowed sweep codegen (jax + pallas)
+# ---------------------------------------------------------------------------
+
+
+def test_vintg_differential_all_backends():
+    shape = (NI, NJ, NK)
+    fields = {
+        "rho": (_rand(shape, seed=1) * 0.5 + 1.0, (0, 0, 0)),
+        "w": (_rand(shape, seed=2) * 0.5 + 1.0, (0, 0, 0)),
+        "out_dn": (np.zeros(shape), (0, 0, 0)),
+        "out_up": (np.zeros(shape), (0, 0, 0)),
+    }
+    run_differential(vintg_defs, fields, {"decay": np.float64(0.9)}, shape)
+
+
+def test_vintg_generated_code_carries_planes_not_arrays():
+    for backend in ("jax", "pallas"):
+        st = gtscript.stencil(backend=backend)(vintg_defs)
+        src = st.generated_source
+        assert "_wh_acc_dn_1" in src and "_wp_acc_dn" in src
+        assert "_wh_acc_up_1" in src and "_wp_acc_up" in src
+        # the accumulators must not be materialized as (ni, nj, nk) arrays
+        assert "acc_dn = jnp.zeros((ni, nj, nk" not in src
+        assert "acc_up = jnp.zeros((ni, nj, nk" not in src
+
+
+def test_window_depth_two_recurrence():
+    def defs(a: Field[np.float64], o: Field[np.float64]):
+        with computation(FORWARD):
+            with interval(0, 2):
+                acc = a
+                o = acc
+            with interval(2, None):
+                acc = 0.5 * acc[0, 0, -1] + 0.25 * acc[0, 0, -2] + a
+                o = acc
+
+    plans = analysis.sequential_carry_plan(_impl(defs))
+    assert plans[0].window == (("acc", 2),)
+
+    x = _rand((NI, NJ, NK), seed=3)
+    run_differential(
+        defs,
+        {"a": (x, (0, 0, 0)), "o": (np.zeros_like(x), (0, 0, 0))},
+        {},
+        (NI, NJ, NK),
+    )
+
+
+def test_windowed_temp_with_horizontal_halo():
+    def defs(a: Field[np.float64], o: Field[np.float64]):
+        with computation(FORWARD):
+            with interval(0, 1):
+                s = a
+                acc = a
+                o = acc
+            with interval(1, None):
+                s = a * 2.0
+                acc = 0.5 * (s[1, 0, -1] + s[-1, 0, -1]) + a
+                o = acc
+
+    impl = _impl(defs)
+    plans = analysis.sequential_carry_plan(impl)
+    # s carries one trailing plane (read horizontally off-center a level
+    # behind); acc never crosses an iteration → depth-0 window, no carry
+    assert dict(plans[0].window) == {"s": 1, "acc": 0}
+    assert impl.extent_of("s").i == (-1, 1)  # plane windows keep their halo
+
+    H = 1
+    shape = (NI + 2 * H, NJ + 2 * H, NK)
+    x = _rand(shape, seed=4)
+    run_differential(
+        defs,
+        {"a": (x, (H, H, 0)), "o": (np.zeros(shape), (H, H, 0))},
+        {},
+        (NI, NJ, NK),
+    )
+
+
+# ---------------------------------------------------------------------------
+# DMA schedule
+# ---------------------------------------------------------------------------
+
+
+def _two_ms_defs(a: Field[np.float64], b: Field[np.float64],
+                 o1: Field[np.float64], o2: Field[np.float64]):
+    with computation(PARALLEL), interval(...):
+        t = (a[1, 0, 0] + a[-1, 0, 0]) * 0.5
+        o1 = t + a
+    with computation(FORWARD):
+        with interval(0, 1):
+            o2 = b + o1
+        with interval(1, None):
+            o2 = b + o2[0, 0, -1]
+
+
+def test_dma_waits_deferred_to_first_use():
+    st = gtscript.stencil(backend="pallas", block=(4, 4))(_two_ms_defs)
+    src = st.generated_source
+    # per-field semaphores, all copies started before any compute
+    assert "_dma_sems.at[0]" in src and "_dma_sems.at[1]" in src
+    i_start_a = src.index("_cp_a.start()")
+    i_start_b = src.index("_cp_b.start()")
+    i_ms0 = src.index("# === multi-stage 0")
+    i_ms1 = src.index("# === multi-stage 1")
+    assert max(i_start_a, i_start_b) < i_ms0
+    # a is consumed by multi-stage 0, b only by multi-stage 1: its wait (and
+    # binding) overlap multi-stage 0's compute
+    assert i_ms0 < src.index("_cp_a.wait()") < i_ms1
+    assert src.index("_cp_b.wait()") > i_ms1
+    sched = st._module.SCHEDULE
+    # o1/o2 are written-and-read (inout): their tiles DMA in too, each
+    # waiting at its own first-touching multi-stage
+    assert sched["dma_first_use_ms"] == {"a": 0, "b": 1, "o1": 0, "o2": 1}
+
+
+def test_dma_deferred_schedule_differential():
+    H = 1
+    shape = (NI + 2 * H, NJ + 2 * H, NK)
+    a, b = _rand(shape, seed=5), _rand(shape, seed=6)
+    run_differential(
+        _two_ms_defs,
+        {
+            "a": (a, (H, H, 0)),
+            "b": (b, (H, H, 0)),
+            "o1": (np.zeros(shape), (H, H, 0)),
+            "o2": (np.zeros(shape), (H, H, 0)),
+        },
+        {},
+        (NI, NJ, NK),
+    )
+
+
+def test_schedule_surfaces_in_exec_info():
+    st = gtscript.stencil(backend="pallas", block=(4, 4))(vintg_defs)
+    fs = {
+        n: storage.from_array(v, backend="pallas")
+        for n, v in {
+            "rho": _rand((NI, NJ, NK), seed=7) + 2.0,
+            "w": _rand((NI, NJ, NK), seed=8) + 2.0,
+            "out_dn": np.zeros((NI, NJ, NK)),
+            "out_up": np.zeros((NI, NJ, NK)),
+        }.items()
+    }
+    info = {}
+    st(**fs, decay=np.float64(0.9), domain=(NI, NJ, NK), exec_info=info)
+    sched = info["schedule"]
+    assert sched["dma_inputs"] == ["rho", "w"]
+    assert sched["window_fields"] == 2 and sched["window_planes"] == 2
+    assert sched["full_carry_fields"] == 2

@@ -525,6 +525,151 @@ def test_dead_temp_pruning_shrinks_extents():
 
 
 # ---------------------------------------------------------------------------
+# cross-stage CSE
+# ---------------------------------------------------------------------------
+
+
+def _cse_detail(report):
+    for r in report:
+        if r["pass"] == "cross_stage_cse":
+            return r.get("detail", {})
+    return {}
+
+
+def test_cse_hoists_shift_equivalent_neighbor_sums():
+    def defs(a: Field[np.float64], o: Field[np.float64]):
+        with computation(PARALLEL), interval(...):
+            o = (a[1, 0, 0] + a[0, 0, 0]) + (a[0, 0, 0] + a[-1, 0, 0])
+
+    impl0 = _analyze(defs)
+    opt, report = passes.run_pipeline(impl0)
+    detail = _cse_detail(report)
+    assert detail == {"hoisted": 1, "eliminated": 1}
+    assert [f.name for f in opt.temporaries if f.name.startswith("_cse")] == ["_cse0"]
+    # the two occurrences read the shared temp at shifts (1,0,0) / (0,0,0)
+    # and halos stay exactly what the original reads demanded
+    assert opt.extent_of("a").i == (-1, 1)
+
+    x = _rand((NI, NJ, NK), seed=20)
+    H = 1
+    xp = np.pad(x, ((H, H), (H, H), (0, 0)))
+    run_differential(
+        defs,
+        {"a": (xp, (H, H, 0)), "o": (np.zeros_like(xp), (H, H, 0))},
+        {},
+        (NI, NJ, NK),
+    )
+
+
+def test_cse_vadv_system_eliminates_gcv_chain():
+    from repro.stencils.vadv import vadv_system_defs
+
+    impl0 = _analyze(vadv_system_defs, name="vadv_system")
+    opt, report = passes.run_pipeline(impl0)
+    detail = _cse_detail(report)
+    # the 0.25*(w_k + w_k±1)*dt/dz chain and the phi-difference chain each
+    # repeat (k-shifted) in the interior interval
+    assert detail["hoisted"] == 2 and detail["eliminated"] == 2
+    # the k-shifted hoists evaluate in their own vertical interval
+    cse_intervals = [
+        itv
+        for ms in opt.multi_stages
+        for itv in ms.intervals
+        if any(st.writes[0].startswith("_cse") for st in itv.stages if st.writes)
+    ]
+    assert cse_intervals, "expected dedicated defining intervals for k-shifted hoists"
+
+
+def test_cse_hdiff_smag_eliminates_stretch_and_shear():
+    from repro.stencils.hdiff import hdiff_smag_defs
+
+    impl0 = _analyze(hdiff_smag_defs, externals={"CS": 0.15}, name="hdiff_smag")
+    opt, report = passes.run_pipeline(impl0)
+    detail = _cse_detail(report)
+    assert detail["hoisted"] == 2 and detail["eliminated"] == 2
+    assert opt.extent_of("u").i == (-1, 1)  # CSE must not grow the halo
+
+    H = 1
+    shape = (NI + 2 * H, NJ + 2 * H, NK)
+    u, v = _rand(shape, seed=21), _rand(shape, seed=22)
+    run_differential(
+        hdiff_smag_defs,
+        {
+            "u": (u, (H, H, 0)),
+            "v": (v, (H, H, 0)),
+            "out_u": (np.zeros(shape), (H, H, 0)),
+            "out_v": (np.zeros(shape), (H, H, 0)),
+        },
+        {"dt": np.float64(0.4)},
+        (NI, NJ, NK),
+        externals={"CS": 0.15},
+    )
+
+
+def test_cse_respects_intervening_writes():
+    def defs(a: Field[np.float64], b: Field[np.float64], o: Field[np.float64]):
+        with computation(PARALLEL), interval(...):
+            t1 = a * a + b
+            b = t1 * 2.0
+            t2 = a * a + b
+            o = t1 + t2
+
+    impl0 = _analyze(defs)
+    opt, report = passes.run_pipeline(impl0)
+    # `a * a` repeats with no interference and hoists; `a * a + b` repeats
+    # too but b is rewritten between the occurrences — it must NOT merge
+    detail = _cse_detail(report)
+    assert detail["hoisted"] == 1 and detail["eliminated"] == 1
+    # zero-offset single-interval hoists demote to stage-locals downstream —
+    # the "hoist into stage-local values" endgame
+    (cse,) = [f for f in tuple(opt.temporaries) + tuple(opt.local_decls)
+              if f.name.startswith("_cse")]
+    for ms in opt.multi_stages:
+        for itv in ms.intervals:
+            for st in itv.stages:
+                for stmt in st.stmts:
+                    if stmt.target.name == cse.name:
+                        assert stmt.value == ir.BinOp(
+                            "*", ir.FieldAccess("a", (0, 0, 0)), ir.FieldAccess("a", (0, 0, 0))
+                        )
+
+    x = _rand((NI, NJ, NK), seed=23)
+    y = _rand((NI, NJ, NK), seed=24)
+    run_differential(
+        defs,
+        {
+            "a": (x, (0, 0, 0)),
+            "b": (y, (0, 0, 0)),
+            "o": (np.zeros_like(x), (0, 0, 0)),
+        },
+        {},
+        (NI, NJ, NK),
+    )
+
+
+def test_cse_skips_sequential_sweeps():
+    def defs(a: Field[np.float64], o: Field[np.float64]):
+        with computation(FORWARD):
+            with interval(0, 1):
+                o = a * a + a
+            with interval(1, None):
+                o = a * a + o[0, 0, -1]
+
+    impl0 = _analyze(defs)
+    _opt, report = passes.run_pipeline(impl0)
+    assert _cse_detail(report) == {"hoisted": 0, "eliminated": 0}
+
+
+def test_cse_disable_toggle():
+    from repro.stencils.vadv import vadv_system_defs
+
+    impl0 = _analyze(vadv_system_defs, name="vadv_system")
+    opt, report = passes.run_pipeline(impl0, disable=("cross_stage_cse",))
+    assert not any(r["pass"] == "cross_stage_cse" for r in report)
+    assert not any(f.name.startswith("_cse") for f in opt.temporaries)
+
+
+# ---------------------------------------------------------------------------
 # configuration / plumbing
 # ---------------------------------------------------------------------------
 

@@ -91,7 +91,10 @@ def test_too_many_faults_raises(tmp_path):
 def test_straggler_watchdog_flags_slow_steps():
     wd = StragglerWatchdog(factor=3.0)
     flagged = []
-    wd.on_straggler = lambda step, dt, med: flagged.append(step)
+    def _on_straggler(step, dt, med):
+        flagged.append(step)
+
+    wd.on_straggler = _on_straggler
     for s in range(20):
         wd.record(s, 0.01)
     wd.record(20, 0.5)  # 50× median

@@ -2,13 +2,10 @@
 gradient compression."""
 
 import json
-import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.checkpoint.store import latest_step
@@ -57,7 +54,7 @@ def test_schedule_warmup_and_decay():
     lrs = [float(linear_warmup_cosine(jnp.asarray(s), 1e-3, 10, 100)) for s in range(100)]
     assert lrs[0] < lrs[9] <= 1e-3 + 1e-9
     assert lrs[-1] < lrs[20]
-    assert all(l > 0 for l in lrs)
+    assert all(lr > 0 for lr in lrs)
 
 
 def test_clip_by_global_norm():
