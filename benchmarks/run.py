@@ -59,6 +59,14 @@ def _time(fn, warmup=2, iters=10) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _timed_pair(call, warmup, iters):
+    """(us, repeat us): the same measurement taken twice — their ratio is
+    the observed same-process noise floor recorded for the gate threshold."""
+    us = _time(call, warmup=warmup, iters=iters)
+    us_repeat = _time(call, warmup=0, iters=iters)
+    return us, us_repeat
+
+
 # ---------------------------------------------------------------------------
 # paper Fig. 3 left: horizontal diffusion
 # ---------------------------------------------------------------------------
@@ -250,27 +258,35 @@ def _ir_stats(st, nk: int) -> dict:
 
 def bench_smoke(out_path: Path) -> None:
     """Small stencil-suite matrix: unoptimized vs default pipeline on
-    numpy/jax, plus the autotuned pallas schedule — records wall time AND the
-    IR-quality deltas (autotuned tile, CSE eliminations, carried planes)."""
+    numpy/jax (float64 AND float32), plus the autotuned pallas schedule and
+    the orchestrated multi-stencil program step — records wall time, the
+    IR-quality deltas (autotuned tile, CSE eliminations, carried planes),
+    program fusion/DSE/exchange metrics, and a per-measurement repeat so the
+    run-to-run noise floor is visible in the artifact."""
     H = 3
     ni = nj = 48
     nk = 16
     results: dict = {"domain": [ni, nj, nk], "cases": {}}
 
-    def run_case(name, build, make_fields):
+    def run_case(name, build, make_fields, dtype="float64"):
         case: dict = {}
+        dt_opts = {} if dtype == "float64" else {"dtype": dtype}
         for backend in ("numpy", "jax"):
             per_backend = {}
             for label, opts in (("opt0", {"opt_level": 0}), ("default", {})):
-                st = build(backend, **opts)
+                st = build(backend, **dt_opts, **opts)
                 fields, scalars = make_fields(backend)
 
                 def call():
                     st(*fields, **scalars, domain=(ni, nj, nk))
                     fields[-1].synchronize()
 
-                us = _time(call, warmup=2, iters=10)
-                per_backend[label] = {"us_per_call": us, "ir": _ir_stats(st, nk)}
+                us, us_repeat = _timed_pair(call, 2, 10)
+                per_backend[label] = {
+                    "us_per_call": us,
+                    "us_repeat": us_repeat,
+                    "ir": _ir_stats(st, nk),
+                }
                 row(f"{name}_{backend}_{label}_{ni}x{nj}x{nk}", us)
             per_backend["speedup_default_vs_opt0"] = (
                 per_backend["opt0"]["us_per_call"] / per_backend["default"]["us_per_call"]
@@ -279,7 +295,7 @@ def bench_smoke(out_path: Path) -> None:
 
         # pallas: default pipeline with the tile autotuner (interpret mode on
         # CPU CI — the schedule/IR metrics are the durable signal there)
-        st = build("pallas", autotune=True, autotune_iters=3)
+        st = build("pallas", autotune=True, autotune_iters=3, **dt_opts)
         fields, scalars = make_fields("pallas")
         info: dict = {}
         st(*fields, **scalars, domain=(ni, nj, nk), exec_info=info)
@@ -288,9 +304,9 @@ def bench_smoke(out_path: Path) -> None:
             st(*fields, **scalars, domain=(ni, nj, nk))
             fields[-1].synchronize()
 
-        us = _time(call, warmup=1, iters=5)
+        us, us_repeat = _timed_pair(call, 1, 5)
         case["pallas"] = {
-            "default": {"us_per_call": us, "ir": _ir_stats(st, nk)},
+            "default": {"us_per_call": us, "us_repeat": us_repeat, "ir": _ir_stats(st, nk)},
             "autotune": info.get("autotune"),
             "schedule": info.get("schedule"),
         }
@@ -300,6 +316,26 @@ def bench_smoke(out_path: Path) -> None:
 
     from repro.stencils.hdiff import build_hdiff, build_hdiff_smag
 
+    def with_dtype(maker, dtype):
+        """Cast a float64 field/scalar maker to ``dtype``."""
+
+        def make(backend):
+            fields, scalars = maker(backend)
+            fields = [
+                storage.from_array(
+                    np.asarray(f).astype(dtype), backend=backend, default_origin=f.default_origin
+                )
+                for f in fields
+            ]
+            scalars = {k: np.dtype(dtype).type(v) for k, v in scalars.items()}
+            return fields, scalars
+
+        return make
+
+    def run_case_both_dtypes(name, build, maker):
+        run_case(name, build, maker)
+        run_case(f"{name}_f32", build, with_dtype(maker, "float32"), dtype="float32")
+
     def hdiff_fields(backend):
         rng = np.random.default_rng(0)
         data = rng.normal(size=(ni + 2 * H, nj + 2 * H, nk))
@@ -307,7 +343,7 @@ def bench_smoke(out_path: Path) -> None:
         o = storage.zeros(data.shape, backend=backend, default_origin=(H, H, 0))
         return [i, o], {"alpha": np.float64(0.05)}
 
-    run_case("hdiff", build_hdiff, hdiff_fields)
+    run_case_both_dtypes("hdiff", build_hdiff, hdiff_fields)
 
     def hdiff_smag_fields(backend):
         rng = np.random.default_rng(2)
@@ -320,7 +356,7 @@ def bench_smoke(out_path: Path) -> None:
         ]
         return fs, {"dt": np.float64(0.1)}
 
-    run_case("hdiff_smag", build_hdiff_smag, hdiff_smag_fields)
+    run_case_both_dtypes("hdiff_smag", build_hdiff_smag, hdiff_smag_fields)
 
     from repro.stencils.vadv import build_vadv, build_vadv_system
 
@@ -335,7 +371,7 @@ def bench_smoke(out_path: Path) -> None:
         ]
         return fs, {}
 
-    run_case("vadv", build_vadv, vadv_fields)
+    run_case_both_dtypes("vadv", build_vadv, vadv_fields)
 
     def vadv_system_fields(backend):
         rng = np.random.default_rng(3)
@@ -345,7 +381,7 @@ def bench_smoke(out_path: Path) -> None:
         ] + [storage.zeros((ni, nj, nk), backend=backend) for _ in range(4)]
         return fs, {"dt": np.float64(0.5), "dz": np.float64(1.5)}
 
-    run_case("vadv_system", build_vadv_system, vadv_system_fields)
+    run_case_both_dtypes("vadv_system", build_vadv_system, vadv_system_fields)
 
     from repro.stencils.vintg import build_vintg
 
@@ -359,10 +395,112 @@ def bench_smoke(out_path: Path) -> None:
         ]
         return fs, {"decay": np.float64(0.9)}
 
-    run_case("vintg", build_vintg, vintg_fields)
+    run_case_both_dtypes("vintg", build_vintg, vintg_fields)
+
+    results["cases"]["program_step"] = bench_program_step(ni, nj, nk)
+
+    noise = {}
+    for cname, backends in results["cases"].items():
+        for bname, labels in backends.items():
+            if not isinstance(labels, dict):
+                continue
+            for lname, entry in labels.items():
+                if isinstance(entry, dict) and "us_repeat" in entry:
+                    a, b = entry["us_per_call"], entry["us_repeat"]
+                    noise[f"{cname}/{bname}/{lname}"] = max(a, b) / min(a, b)
+    results["noise_ratios"] = noise
+    results["noise_summary"] = {
+        "max": max(noise.values()),
+        "median": sorted(noise.values())[len(noise) // 2],
+    }
 
     out_path.write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {out_path}")
+
+
+def bench_program_step(ni, nj, nk) -> dict:
+    """The orchestration-layer case: the climate-model step as a traced
+    ``@program`` vs the eager per-stencil dispatch sequence (jax backend),
+    recording fusion/DSE metrics and the would-be distributed halo plan."""
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "examples"))
+    import climate_model as cm
+
+    dom = (ni, nj, nk)
+    scalars = dict(
+        dt=np.float64(0.1), dx=np.float64(1.0), dy=np.float64(1.0),
+        dtdz=np.float64(0.1), alpha=np.float64(0.05),
+    )
+    stencils = cm.build_stencils("jax")
+    step = cm.make_program(stencils, "jax", dom)
+
+    fields = cm.make_fields("jax", ni, nj, nk)
+    args = [fields[n] for n in cm.FIELD_NAMES]
+    info: dict = {}
+    step(*args, **scalars, exec_info=info)
+    rep = info["program_report"]
+
+    def program_call():
+        step(*args, **scalars)
+        fields["phi"].synchronize()
+
+    us_program, us_repeat = _timed_pair(program_call, 2, 10)
+
+    e_fields = cm.make_fields("jax", ni, nj, nk)
+
+    def eager_call():
+        cm.run_eager(stencils, e_fields, dom, 1, scalars)
+        e_fields["phi"].synchronize()
+
+    us_eager, us_eager_repeat = _timed_pair(eager_call, 2, 10)
+
+    n_iter = 10
+    it_fields = cm.make_fields("jax", ni, nj, nk)
+    it_args = [it_fields[n] for n in cm.FIELD_NAMES]
+    step.iterate(n_iter, *it_args, **scalars)  # compile
+
+    def iterate_call():
+        step.iterate(n_iter, *it_args, **scalars)
+        it_fields["phi"].synchronize()
+
+    us_iterate, us_iterate_repeat = _timed_pair(iterate_call, 1, 5)
+    us_iterate, us_iterate_repeat = us_iterate / n_iter, us_iterate_repeat / n_iter
+
+    # the minimal halo-exchange plan a mesh decomposition would run (computed
+    # statically from the same graph — no devices needed)
+    from repro.program.graph import ProgramGraph
+    from repro.program.halo import plan_halo_exchanges
+    from repro.program.passes import eliminate_dead_stores, plan_groups
+
+    graph = ProgramGraph(step.trace(fields, scalars))
+    live, _dropped = eliminate_dead_stores(graph)
+    graph.nodes = live
+    d_groups, markers = plan_groups(graph, live, distributed=True)
+    plan = plan_halo_exchanges(graph, d_groups, markers)
+
+    row(f"program_step_jax_program_{ni}x{nj}x{nk}", us_program,
+        f"{rep['fused_stencils']}fused/{len(rep['eliminated_temporaries'])}elim")
+    row(f"program_step_jax_eager_{ni}x{nj}x{nk}", us_eager)
+    row(f"program_step_jax_iterate_{ni}x{nj}x{nk}", us_iterate, f"fori_loop/{n_iter}")
+    return {
+        "jax": {
+            "program": {"us_per_call": us_program, "us_repeat": us_repeat},
+            "eager": {"us_per_call": us_eager, "us_repeat": us_eager_repeat},
+            "iterate_per_step": {"us_per_call": us_iterate, "us_repeat": us_iterate_repeat},
+        },
+        "program_vs_eager_ratio": us_program / us_eager,
+        "iterate_vs_eager_ratio": us_iterate / us_eager,
+        "nodes": rep["nodes"],
+        "groups": rep["groups"],
+        "fused_stencils": rep["fused_stencils"],
+        "fused_multi_stages": rep["group_multi_stages"],
+        "eliminated_temporaries": rep["eliminated_temporaries"],
+        "dead_stores_eliminated": rep["dead_stores_eliminated"],
+        "distributed_plan": {
+            "groups": len(d_groups),
+            "exchanges_inserted": plan.summary()["inserted"],
+            "eager_baseline_per_step": plan.summary()["baseline_per_step"],
+        },
+    }
 
 
 def main() -> None:

@@ -65,6 +65,34 @@ def fingerprint(
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
+def program_fingerprint(
+    name: str,
+    graph_repr: str,
+    part_fingerprints,
+    backend: str,
+    options: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Cache key for a compiled *program* (``repro.program``).
+
+    Keyed on the structural dataflow-graph hash plus the fingerprints of the
+    constituent (merged) stencils — so a program re-generates exactly when
+    one of its stencils, the graph wiring, or the orchestration options
+    change, and never when the step function is merely reformatted (the
+    graph repr is built from IR-level facts, not source text)."""
+    payload = "|".join(
+        [
+            _CACHE_VERSION,
+            "program",
+            name,
+            backend,
+            hashlib.sha256(graph_repr.encode()).hexdigest(),
+            repr(tuple(part_fingerprints)),
+            repr(sorted((options or {}).items())),
+        ]
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
 def tuning_path(name: str, fp: str) -> Path:
     """Where the Pallas tile autotuner persists its result for a module.
 

@@ -15,6 +15,7 @@ structural fingerprint (``caching.py``) can be derived from ``repr``.
 
 from __future__ import annotations
 
+import dataclasses
 import enum
 from dataclasses import dataclass
 from typing import Optional, Tuple, Union
@@ -381,6 +382,20 @@ class StencilImplementation:
                 return f
         raise KeyError(name)
 
+    def written_api_fields(self) -> Tuple[str, ...]:
+        """API fields written by any stage, in first-write order — the one
+        definition of "what does this stencil produce" shared by the array
+        codegen, ``StencilObject.apply``, and the program tracer/graph."""
+        api = {f.name for f in self.api_fields}
+        written: list = []
+        for ms in self.multi_stages:
+            for itv in ms.intervals:
+                for st in itv.stages:
+                    for w in st.writes:
+                        if w in api and w not in written:
+                            written.append(w)
+        return tuple(written)
+
     @property
     def max_halo(self) -> Tuple[int, int, int]:
         h = (0, 0, 0)
@@ -543,6 +558,60 @@ def map_exprs_bottom_up(expr: Expr, fn) -> Expr:
     elif isinstance(expr, Cast):
         expr = Cast(expr.dtype, map_exprs_bottom_up(expr.expr, fn))
     return fn(expr)
+
+
+def map_stmt_exprs(stmt: Stmt, fn) -> Stmt:
+    """Rebuild ``stmt`` applying ``fn`` bottom-up to every contained
+    expression tree (assignment values, conditions) — assignment *targets*
+    are left alone (they must stay zero-offset FieldAccess nodes)."""
+    if isinstance(stmt, Assign):
+        return Assign(stmt.target, map_exprs_bottom_up(stmt.value, fn))
+    if isinstance(stmt, If):
+        return If(
+            map_exprs_bottom_up(stmt.cond, fn),
+            tuple(map_stmt_exprs(s, fn) for s in stmt.body),
+            tuple(map_stmt_exprs(s, fn) for s in stmt.orelse),
+        )
+    if isinstance(stmt, While):
+        return While(
+            map_exprs_bottom_up(stmt.cond, fn),
+            tuple(map_stmt_exprs(s, fn) for s in stmt.body),
+        )
+    return stmt
+
+
+def retype_definition(defn: StencilDefinition, dtype_map) -> StencilDefinition:
+    """A copy of ``defn`` with field/scalar (and explicit ``Cast``) dtypes
+    rewritten through ``dtype_map`` (e.g. ``{"float64": "float32"}``) —
+    how the float32 variants of the benchmark stencils are derived without
+    duplicating every definition function."""
+
+    def _cast(e: Expr) -> Expr:
+        if isinstance(e, Cast) and e.dtype in dtype_map:
+            return Cast(dtype_map[e.dtype], e.expr)
+        return e
+
+    computations = tuple(
+        ComputationBlock(
+            block.order,
+            tuple(
+                IntervalBlock(ib.interval, tuple(map_stmt_exprs(s, _cast) for s in ib.body))
+                for ib in block.intervals
+            ),
+        )
+        for block in defn.computations
+    )
+    return dataclasses.replace(
+        defn,
+        name=f"{defn.name}_{'_'.join(sorted(set(dtype_map.values())))}",
+        api_fields=tuple(
+            dataclasses.replace(f, dtype=dtype_map.get(f.dtype, f.dtype)) for f in defn.api_fields
+        ),
+        scalars=tuple(
+            dataclasses.replace(s, dtype=dtype_map.get(s.dtype, s.dtype)) for s in defn.scalars
+        ),
+        computations=computations,
+    )
 
 
 def make_stage(stmts: Tuple[Stmt, ...], compute_extent: Extent) -> Stage:

@@ -21,6 +21,19 @@ from .storage import Storage
 
 _AXIS_INDEX = {"I": 0, "J": 1, "K": 2}
 
+# Orchestration-tracing hook (installed by ``repro.program.trace``): called at
+# the top of ``StencilObject.__call__`` so a ``@program`` tracer can intercept
+# calls made on traced field handles and record a dataflow node instead of
+# executing.  Returning :data:`NOT_TRACED` means "not tracing — run eagerly".
+NOT_TRACED = object()
+_trace_hook = None
+
+
+def set_trace_hook(hook) -> None:
+    """Install (or clear, with ``None``) the program-tracer call hook."""
+    global _trace_hook
+    _trace_hook = hook
+
 
 class FieldInfo:
     def __init__(self, decl: ir.FieldDecl, extent: ir.Extent, k_extent: Tuple[int, int]):
@@ -229,6 +242,10 @@ class StencilObject:
         exec_info: Optional[dict] = None,
         **kwargs,
     ):
+        if _trace_hook is not None:
+            traced = _trace_hook(self, args, kwargs, domain=domain, origin=origin)
+            if traced is not NOT_TRACED:
+                return traced
         if exec_info is not None:
             exec_info["call_start_time"] = time.perf_counter()
             exec_info["pass_report"] = list(self.pass_report)
@@ -323,6 +340,53 @@ class StencilObject:
             self._jit_cache[key] = fn
         return fn
 
+    def apply(
+        self,
+        fields: Dict[str, Any],
+        scalars: Optional[Dict[str, Any]] = None,
+        *,
+        domain: Optional[Tuple[int, int, int]] = None,
+        origin=None,
+        validate_args: Optional[bool] = None,
+    ) -> Dict[str, Any]:
+        """Functional protocol: ``fields dict -> updated-fields dict``.
+
+        The pure twin of the mutating ``__call__``, for every backend: the
+        jax family returns device arrays, numpy/debug copy and run in place.
+        This is the same ``fields -> updates`` convention the generated
+        ``repro.program`` orchestrators thread between fused groups (they
+        call the generated ``run`` functions directly for jit composability);
+        ``apply`` is the public single-stencil form of it for composing
+        stencils in user code and tests.
+        """
+        scalars = dict(scalars or {})
+        missing = [n for n in self._field_order if n not in fields]
+        if missing:
+            raise TypeError(f"{self.name}.apply() missing field arguments: {missing}")
+        # a superset dict is fine — programs thread one buffer dict through
+        # many stencils; only this stencil's own fields participate
+        fields = {n: fields[n] for n in self._field_order}
+        missing_s = [n for n in self.scalar_info if n not in scalars]
+        if missing_s:
+            raise TypeError(f"{self.name}.apply() missing scalar arguments: {missing_s}")
+        origins = self._resolve_origins(fields, origin)
+        if domain is None:
+            domain = self._deduce_domain(fields, origins)
+        domain = tuple(int(d) for d in domain)
+        do_validate = self.validate_args_default if validate_args is None else validate_args
+        if do_validate:
+            self._validate(fields, scalars, domain, origins)
+        raw = {n: self._raw(v) for n, v in fields.items()}
+        if self.backend in ("debug", "numpy"):
+            work = {n: np.array(v, copy=True) for n, v in raw.items()}
+            self._run(work, scalars, domain, origins)
+            written = set(self.implementation_ir.written_api_fields())
+            return {n: work[n] for n in self._field_order if n in written}
+        block = None
+        if self.backend == "pallas":
+            block, _ = self._resolve_block(domain)
+        return self._jitted(domain, origins, block)(raw, scalars)
+
     def as_jax_function(
         self,
         domain: Tuple[int, int, int],
@@ -362,6 +426,31 @@ def build_stencil_object(
     definition_ir = frontend.parse_stencil_definition(definition, externals=externals, name=name)
     return build_from_definition(definition_ir, backend, rebuild=rebuild,
                                  validate_args=validate_args, backend_opts=backend_opts)
+
+
+def build_retyped(
+    definition: Callable,
+    backend: str,
+    dtype: str,
+    *,
+    externals: Optional[Dict[str, Any]] = None,
+    name: Optional[str] = None,
+    validate_args: bool = True,
+    **backend_opts: Any,
+) -> StencilObject:
+    """Build a stencil from a float64 definition function with every field,
+    scalar, and explicit cast dtype rewritten to ``dtype``
+    (``ir.retype_definition``) — the shared path the benchmark stencils use
+    to derive float32 variants without duplicating definitions.
+    ``dtype="float64"`` is the identity and builds the definition as-is."""
+    definition_ir = frontend.parse_stencil_definition(
+        definition, externals=dict(externals or {}), name=name
+    )
+    if dtype != "float64":
+        definition_ir = ir.retype_definition(definition_ir, {"float64": dtype})
+    return build_from_definition(
+        definition_ir, backend, validate_args=validate_args, backend_opts=backend_opts
+    )
 
 
 def build_from_definition(

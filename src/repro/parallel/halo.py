@@ -33,6 +33,19 @@ def _perm_down(n: int, periodic: bool):
     return pairs
 
 
+def request_exchange(field, halo: int = None):
+    """Mark a halo-exchange point for ``field`` inside a ``@program`` trace.
+
+    Inside a traced step function this records an explicit exchange the
+    distributed program compiler must honour (``repro.program.halo``); on
+    concrete data / outside a trace it is a no-op returning ``field``, so
+    step functions run unchanged in eager single-device mode.
+    """
+    from repro.program.trace import request_exchange as _impl
+
+    return _impl(field, halo)
+
+
 def exchange_halo_2d(
     x: jax.Array,
     halo: int,

@@ -1,0 +1,45 @@
+"""Program orchestration: trace multi-stencil steps into one fused program.
+
+BEYOND PAPER.  The paper's separation of concerns stops at the stencil
+boundary — a time step composed of several compiled stencils still pays
+Python dispatch, argument handling and device sync per call.  This package
+lifts the toolchain one level: a ``@program``-decorated step function is
+traced once (``trace``), its stencil calls become an inter-stencil dataflow
+graph (``graph``), program-level passes eliminate dead stores, demote
+step-local buffers to stencil temporaries and plan cross-stencil fusion
+(``passes``), mesh-sharded execution gets a minimal halo-exchange schedule
+(``halo``), and the result compiles to a single functionally-pure jitted
+step cached under a graph fingerprint (``compile``)::
+
+    from repro.program import program
+
+    @program(backend="jax")
+    def step(phi, u, v, adv, phi_new, *, dt, dx, dy):
+        advect(phi, u, v, adv, dx=dx, dy=dy)
+        euler(phi, adv, phi_new, dt=dt)
+        return {"phi": phi_new, "phi_new": phi}   # double-buffer rotation
+
+    step(phi, u, v, adv, phi_new, dt=..., dx=..., dy=...)   # one dispatch
+    step.iterate(100, ...)                                   # one dispatch, 100 steps
+    step.distribute(mesh)(global_fields, scalars)            # sharded, fused
+"""
+
+from .compile import (
+    CompiledProgram,
+    DistributedProgram,
+    ProgramCompileError,
+    ProgramObject,
+    program,
+)
+from .trace import ProgramError, ProgramTraceError, request_exchange
+
+__all__ = [
+    "program",
+    "ProgramObject",
+    "CompiledProgram",
+    "DistributedProgram",
+    "ProgramError",
+    "ProgramTraceError",
+    "ProgramCompileError",
+    "request_exchange",
+]

@@ -12,8 +12,8 @@ import functools
 
 import numpy as np
 
-from repro.core import gtscript
 from repro.core.gtscript import Field, PARALLEL, computation, interval
+from repro.core.stencil import build_retyped
 
 from .library import gradx, grady, laplacian, smagorinsky_factor
 
@@ -37,21 +37,6 @@ def hdiff_defs(in_phi: Field[np.float64], out_phi: Field[np.float64], *, alpha: 
         fx = flux_x if flux_x * grad_x > LIM else LIM
         fy = flux_y if flux_y * grad_y > LIM else LIM
         # update
-        out_phi = in_phi + alpha * (gradx(fx[-1, 0, 0]) + grady(fy[0, -1, 0]))
-
-
-def hdiff_f32_defs(in_phi: Field[np.float32], out_phi: Field[np.float32], *, alpha: np.float32):
-    from __externals__ import LIM
-
-    with computation(PARALLEL), interval(...):
-        lap = laplacian(in_phi)
-        bilap = laplacian(lap)
-        flux_x = gradx(bilap)
-        flux_y = grady(bilap)
-        grad_x = gradx(in_phi)
-        grad_y = grady(in_phi)
-        fx = flux_x if flux_x * grad_x > LIM else LIM
-        fy = flux_y if flux_y * grad_y > LIM else LIM
         out_phi = in_phi + alpha * (gradx(fx[-1, 0, 0]) + grady(fy[0, -1, 0]))
 
 
@@ -87,10 +72,9 @@ DEFAULT_CS = 0.15
 
 @functools.lru_cache(maxsize=None)
 def build_hdiff(backend: str = "numpy", lim: float = DEFAULT_LIM, dtype: str = "float64", **opts):
-    defs = hdiff_defs if dtype == "float64" else hdiff_f32_defs
-    return gtscript.stencil(backend=backend, externals={"LIM": lim}, **opts)(defs)
+    return build_retyped(hdiff_defs, backend, dtype, externals={"LIM": lim}, **opts)
 
 
 @functools.lru_cache(maxsize=None)
-def build_hdiff_smag(backend: str = "numpy", cs: float = DEFAULT_CS, **opts):
-    return gtscript.stencil(backend=backend, externals={"CS": cs}, **opts)(hdiff_smag_defs)
+def build_hdiff_smag(backend: str = "numpy", cs: float = DEFAULT_CS, dtype: str = "float64", **opts):
+    return build_retyped(hdiff_smag_defs, backend, dtype, externals={"CS": cs}, **opts)

@@ -12,8 +12,8 @@ import functools
 
 import numpy as np
 
-from repro.core import gtscript
 from repro.core.gtscript import Field, BACKWARD, FORWARD, PARALLEL, computation, interval
+from repro.core.stencil import build_retyped
 
 
 def vadv_defs(
@@ -24,28 +24,6 @@ def vadv_defs(
     out: Field[np.float64],
 ):
     """Solve the tridiagonal system (a, b, c)·out = d along each column."""
-    with computation(FORWARD):
-        with interval(0, 1):
-            cp = c / b
-            dp = d / b
-        with interval(1, None):
-            denom = b - a * cp[0, 0, -1]
-            cp = c / denom
-            dp = (d - a * dp[0, 0, -1]) / denom
-    with computation(BACKWARD):
-        with interval(-1, None):
-            out = dp
-        with interval(0, -1):
-            out = dp - cp * out[0, 0, 1]
-
-
-def vadv_f32_defs(
-    a: Field[np.float32],
-    b: Field[np.float32],
-    c: Field[np.float32],
-    d: Field[np.float32],
-    out: Field[np.float32],
-):
     with computation(FORWARD):
         with interval(0, 1):
             cp = c / b
@@ -98,10 +76,9 @@ def vadv_system_defs(
 
 @functools.lru_cache(maxsize=None)
 def build_vadv(backend: str = "numpy", dtype: str = "float64", **opts):
-    defs = vadv_defs if dtype == "float64" else vadv_f32_defs
-    return gtscript.stencil(backend=backend, **opts)(defs)
+    return build_retyped(vadv_defs, backend, dtype, **opts)
 
 
 @functools.lru_cache(maxsize=None)
-def build_vadv_system(backend: str = "numpy", **opts):
-    return gtscript.stencil(backend=backend, **opts)(vadv_system_defs)
+def build_vadv_system(backend: str = "numpy", dtype: str = "float64", **opts):
+    return build_retyped(vadv_system_defs, backend, dtype, **opts)

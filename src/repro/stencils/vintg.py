@@ -17,8 +17,8 @@ import functools
 
 import numpy as np
 
-from repro.core import gtscript
 from repro.core.gtscript import BACKWARD, FORWARD, Field, computation, interval
+from repro.core.stencil import build_retyped
 
 DEFAULT_DECAY = 0.9
 
@@ -49,5 +49,5 @@ def vintg_defs(
 
 
 @functools.lru_cache(maxsize=None)
-def build_vintg(backend: str = "numpy", **opts):
-    return gtscript.stencil(backend=backend, **opts)(vintg_defs)
+def build_vintg(backend: str = "numpy", dtype: str = "float64", **opts):
+    return build_retyped(vintg_defs, backend, dtype, **opts)

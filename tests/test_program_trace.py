@@ -1,0 +1,306 @@
+"""Tracer-level tests: recording, versioning, edge cases, dead stores."""
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import gtscript, storage
+from repro.core.gtscript import Field, PARALLEL, computation, interval
+from repro.parallel import halo as parallel_halo
+from repro.program import ProgramTraceError, program, request_exchange
+from repro.program.graph import ProgramGraph
+from repro.program.passes import eliminate_dead_stores
+
+
+def scale_defs(a: Field[np.float64], b: Field[np.float64], *, f: np.float64):
+    with computation(PARALLEL), interval(...):
+        b = f * a
+
+
+def diffuse_defs(phi: Field[np.float64], out: Field[np.float64], *, alpha: np.float64):
+    with computation(PARALLEL), interval(...):
+        out = phi + alpha * (
+            -4.0 * phi[0, 0, 0] + phi[-1, 0, 0] + phi[1, 0, 0] + phi[0, -1, 0] + phi[0, 1, 0]
+        )
+
+
+H = 1
+NI = NJ = 8
+NK = 4
+DOM = (NI, NJ, NK)
+SHAPE = (NI + 2 * H, NJ + 2 * H, NK)
+
+
+def _stores(*names):
+    rng = np.random.default_rng(0)
+    return {
+        n: storage.from_array(rng.normal(size=SHAPE), default_origin=(H, H, 0))
+        for n in names
+    }
+
+
+def _scale(backend="numpy"):
+    return gtscript.stencil(backend=backend)(scale_defs)
+
+
+def _diffuse(backend="numpy"):
+    return gtscript.stencil(backend=backend)(diffuse_defs)
+
+
+# ---------------------------------------------------------------------------
+# recording & versions
+# ---------------------------------------------------------------------------
+
+
+def test_trace_records_nodes_and_versions():
+    sc = _scale()
+
+    @program(backend="numpy", name="t_versions")
+    def step(x, y, z, *, f):
+        sc(x, y, f=f, domain=DOM)
+        sc(y, z, f=f, domain=DOM)
+        sc(z, y, f=f, domain=DOM)
+        return {"y": y, "z": z}
+
+    s = _stores("x", "y", "z")
+    t = step.trace(s, {"f": np.float64(2.0)})
+    assert [n.stencil.name for n in t.nodes] == ["scale_defs"] * 3
+    # y written twice (versions 1 then 2), z once
+    assert t.nodes[0].write_versions == {"y": 1}
+    assert t.nodes[1].read_versions["y"] == 1
+    assert t.nodes[1].write_versions == {"z": 1}
+    assert t.nodes[2].write_versions == {"y": 2}
+    assert t.outputs == {"y": ("y", 2), "z": ("z", 1)}
+
+
+def test_same_stencil_twice_swapped_in_out_is_exact():
+    df = _diffuse()
+
+    @program(backend="numpy", name="t_pingpong")
+    def step(x, y, *, alpha):
+        df(x, y, alpha=alpha, domain=DOM)
+        df(y, x, alpha=alpha, domain=DOM)
+        return {"x": x, "y": y}
+
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=SHAPE)
+    x = storage.from_array(np.array(data), default_origin=(H, H, 0))
+    y = storage.zeros(SHAPE, default_origin=(H, H, 0))
+    info = {}
+    step(x, y, alpha=np.float64(0.05), exec_info=info)
+
+    x2 = storage.from_array(np.array(data), default_origin=(H, H, 0))
+    y2 = storage.zeros(SHAPE, default_origin=(H, H, 0))
+    df(x2, y2, alpha=np.float64(0.05), domain=DOM)
+    df(y2, x2, alpha=np.float64(0.05), domain=DOM)
+    assert np.array_equal(np.asarray(x), np.asarray(x2))
+    assert np.array_equal(np.asarray(y), np.asarray(y2))
+    # the two calls fuse: the crossing buffer is halo-read, so it stays an
+    # API field (no internalization), but the dispatch count still drops
+    assert info["program_report"]["fused_stencils"] == 1
+
+
+# ---------------------------------------------------------------------------
+# edge cases that must raise clearly
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_backends_raise():
+    sn = _scale("numpy")
+    sj = _scale("jax")
+
+    @program(backend="jax", name="t_mixed")
+    def step(x, y, z, *, f):
+        sj(x, y, f=f, domain=DOM)
+        sn(y, z, f=f, domain=DOM)
+        return z
+
+    s = _stores("x", "y", "z")
+    with pytest.raises(ProgramTraceError, match="mixes stencil backends"):
+        step(s["x"], s["y"], s["z"], f=np.float64(2.0))
+
+
+def test_field_arithmetic_inside_trace_raises():
+    sc = _scale()
+
+    @program(backend="numpy", name="t_fieldmath")
+    def step(x, y, *, f):
+        sc(x + 1.0, y, f=f, domain=DOM)
+        return y
+
+    s = _stores("x", "y")
+    with pytest.raises(ProgramTraceError, match="cannot apply"):
+        step(s["x"], s["y"], f=np.float64(2.0))
+
+
+def test_scalar_arithmetic_inside_trace_raises():
+    sc = _scale()
+
+    @program(backend="numpy", name="t_scalarmath")
+    def step(x, y, *, f):
+        sc(x, y, f=f * 2.0, domain=DOM)
+        return y
+
+    s = _stores("x", "y")
+    with pytest.raises(ProgramTraceError, match="precompute derived scalars"):
+        step(s["x"], s["y"], f=np.float64(2.0))
+
+
+def test_non_traced_field_argument_raises():
+    sc = _scale()
+    foreign = storage.zeros(SHAPE, default_origin=(H, H, 0))
+
+    @program(backend="numpy", name="t_foreign")
+    def step(x, y, *, f):
+        sc(x, foreign, f=f, domain=DOM)
+        return y
+
+    s = _stores("x", "y")
+    with pytest.raises(ProgramTraceError, match="non-traced value"):
+        step(s["x"], s["y"], f=np.float64(2.0))
+
+
+def test_return_none_raises():
+    sc = _scale()
+
+    @program(backend="numpy", name="t_none")
+    def step(x, y, *, f):
+        sc(x, y, f=f, domain=DOM)
+
+    s = _stores("x", "y")
+    with pytest.raises(ProgramTraceError, match="must[\\s\\S]*return its outputs"):
+        step(s["x"], s["y"], f=np.float64(2.0))
+
+
+# ---------------------------------------------------------------------------
+# dead-store elimination
+# ---------------------------------------------------------------------------
+
+
+def test_dead_store_dropped_but_returned_output_kept():
+    sc = _scale()
+
+    @program(backend="numpy", name="t_dse")
+    def step(x, dead, kept, *, f):
+        sc(x, dead, f=f, domain=DOM)  # never read again, not returned
+        sc(x, kept, f=f, domain=DOM)  # never read again but RETURNED
+        return kept
+
+    s = _stores("x", "dead", "kept")
+    s["dead"] = storage.zeros(SHAPE, default_origin=(H, H, 0))
+    s["kept"] = storage.zeros(SHAPE, default_origin=(H, H, 0))
+    info = {}
+    step(s["x"], s["dead"], s["kept"], f=np.float64(3.0), exec_info=info)
+    rep = info["program_report"]
+    assert rep["dead_stores_eliminated"] == ["scale_defs"]
+    assert rep["nodes"] == 1
+    interior = np.s_[H:-H, H:-H, :]
+    assert np.array_equal(np.asarray(s["kept"])[interior], 3.0 * np.asarray(s["x"])[interior])
+    # the dead store really did not execute
+    assert float(np.abs(np.asarray(s["dead"])).max()) == 0.0
+
+
+def test_dse_liveness_is_version_accurate():
+    sc = _scale()
+
+    @program(backend="numpy", name="t_dse_versions")
+    def step(x, y, z, *, f):
+        sc(x, y, f=f, domain=DOM)  # y@1 feeds z -> live
+        sc(y, z, f=f, domain=DOM)
+        sc(x, y, f=f, domain=DOM)  # y@2 unread + y not returned -> dead
+        return z
+
+    s = _stores("x", "y", "z")
+    t = step.trace(s, {"f": np.float64(2.0)})
+    g = ProgramGraph(t)
+    live, dropped = eliminate_dead_stores(g)
+    assert len(live) == 2 and dropped == ["scale_defs"]
+
+
+# ---------------------------------------------------------------------------
+# the functional apply protocol (what the program layer builds on)
+# ---------------------------------------------------------------------------
+
+
+def test_stencil_apply_is_pure_and_matches_call():
+    for backend in ("numpy", "jax"):
+        df = _diffuse(backend)
+        rng = np.random.default_rng(2)
+        data = rng.normal(size=SHAPE)
+        fields = {
+            "phi": storage.from_array(np.array(data), backend=backend, default_origin=(H, H, 0)),
+            "out": storage.zeros(SHAPE, backend=backend, default_origin=(H, H, 0)),
+        }
+        before = np.asarray(fields["out"]).copy()
+        updates = df.apply(fields, {"alpha": np.float64(0.05)}, domain=DOM)
+        assert set(updates) == {"out"}
+        # inputs untouched — apply never mutates
+        assert np.array_equal(np.asarray(fields["out"]), before)
+        ref_in = storage.from_array(np.array(data), backend=backend, default_origin=(H, H, 0))
+        ref_out = storage.zeros(SHAPE, backend=backend, default_origin=(H, H, 0))
+        df(ref_in, ref_out, alpha=np.float64(0.05), domain=DOM)
+        assert np.array_equal(np.asarray(updates["out"]), np.asarray(ref_out))
+
+
+# ---------------------------------------------------------------------------
+# explicit exchange markers
+# ---------------------------------------------------------------------------
+
+
+def test_request_exchange_noop_outside_trace():
+    arr = np.ones(4)
+    assert request_exchange(arr) is arr
+    assert parallel_halo.request_exchange(arr, 2) is arr
+
+
+def test_traced_scalar_with_concrete_fields_gets_tracer_diagnostic():
+    sc = _scale()
+    conc_x = storage.zeros(SHAPE, default_origin=(H, H, 0))
+    conc_y = storage.zeros(SHAPE, default_origin=(H, H, 0))
+
+    @program(backend="numpy", name="t_scalar_only")
+    def step(x, y, *, f):
+        sc(conc_x, conc_y, f=f, domain=DOM)  # traced scalar, concrete fields
+        return y
+
+    s = _stores("x", "y")
+    with pytest.raises(ProgramTraceError, match="non-traced value"):
+        step(s["x"], s["y"], f=np.float64(2.0))
+
+
+def test_exchange_marker_does_not_split_single_device_fusion():
+    sc = _scale()
+
+    @program(backend="numpy", name="t_exch_fuse")
+    def step(x, y, z, *, f):
+        sc(x, y, f=f, domain=DOM)
+        request_exchange(y)  # meaningful on a mesh; elided (and not a
+        sc(y, z, f=f, domain=DOM)  # fusion barrier) on a single device
+        return z
+
+    s = _stores("x", "y", "z")
+    info = {}
+    step(s["x"], s["y"], s["z"], f=np.float64(2.0), exec_info=info)
+    rep = info["program_report"]
+    assert rep["groups"] == 1 and rep["fused_stencils"] == 1
+    assert rep["elided_exchanges"] == 1
+
+
+def test_request_exchange_recorded_inside_trace():
+    sc = _scale()
+
+    @program(backend="numpy", name="t_exch")
+    def step(x, y, *, f):
+        request_exchange(x, 2)
+        sc(x, y, f=f, domain=DOM)
+        return y
+
+    s = _stores("x", "y")
+    t = step.trace(s, {"f": np.float64(2.0)})
+    kinds = [type(n).__name__ for n in t.nodes]
+    assert kinds == ["ExchangeNode", "StencilNode"]
+    assert t.nodes[0].halo == 2
+    # single-device compile elides the marker but still runs correctly
+    info = {}
+    step(s["x"], s["y"], f=np.float64(2.0), exec_info=info)
+    assert info["program_report"]["elided_exchanges"] == 1
