@@ -258,11 +258,12 @@ def _ir_stats(st, nk: int) -> dict:
 
 def bench_smoke(out_path: Path) -> None:
     """Small stencil-suite matrix: unoptimized vs default pipeline on
-    numpy/jax (float64 AND float32), plus the autotuned pallas schedule and
-    the orchestrated multi-stencil program step — records wall time, the
-    IR-quality deltas (autotuned tile, CSE eliminations, carried planes),
-    program fusion/DSE/exchange metrics, and a per-measurement repeat so the
-    run-to-run noise floor is visible in the artifact."""
+    numpy/jax (float64 AND float32), plus the autotuned pallas schedule,
+    the orchestrated multi-stencil program step, and the vmap-batched
+    ensemble step — records wall time, the IR-quality deltas (autotuned
+    tile, CSE eliminations, carried planes), program fusion/DSE/exchange
+    metrics, the ensemble-vs-member-loop ratio, and a per-measurement
+    repeat so the run-to-run noise floor is visible in the artifact."""
     H = 3
     ni = nj = 48
     nk = 16
@@ -398,6 +399,7 @@ def bench_smoke(out_path: Path) -> None:
     run_case_both_dtypes("vintg", build_vintg, vintg_fields)
 
     results["cases"]["program_step"] = bench_program_step(ni, nj, nk)
+    results["cases"]["ensemble_step"] = bench_ensemble_step(ni, nj, nk)
 
     noise = {}
     for cname, backends in results["cases"].items():
@@ -500,6 +502,82 @@ def bench_program_step(ni, nj, nk) -> dict:
             "exchanges_inserted": plan.summary()["inserted"],
             "eager_baseline_per_step": plan.summary()["baseline_per_step"],
         },
+    }
+
+
+def bench_ensemble_step(ni, nj, nk, members: int = 8) -> dict:
+    """The ensemble-execution case: N perturbed members of the climate
+    ``@program`` step as ONE vmap-batched jit dispatch vs a Python loop over
+    per-member ``CompiledProgram`` calls — the members-per-second and the
+    ensemble-vs-loop wall ratio are the subsystem's durable signals."""
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "examples"))
+    import climate_model as cm
+
+    from repro.ensemble import Ensemble, perturb
+    from repro.ensemble import batch as ens_batch
+
+    dom = (ni, nj, nk)
+    scalars = dict(
+        dt=np.float64(0.1), dx=np.float64(1.0), dy=np.float64(1.0),
+        dtdz=np.float64(0.1), alpha=np.float64(0.05),
+    )
+    stencils = cm.build_stencils("jax")
+    step = cm.make_program(stencils, "jax", dom)
+
+    fields = cm.make_fields("jax", ni, nj, nk)
+    batched = {}
+    for n in cm.FIELD_NAMES:
+        if n == "phi":
+            batched[n] = perturb(fields[n], members, seed=0, amplitude=1e-3)
+        elif n in ("u", "v", "w"):
+            batched[n] = fields[n]  # shared forcing: broadcast under vmap
+        else:
+            batched[n] = ens_batch.broadcast(fields[n], members, backend="jax")
+    args = [batched[n] for n in cm.FIELD_NAMES]
+    ens = Ensemble(step, members)
+    info: dict = {}
+    ens(*args, **scalars, exec_info=info)  # compile
+
+    def ensemble_call():
+        ens(*args, **scalars)
+        batched["phi"].synchronize()
+
+    us_ens, us_ens_repeat = _timed_pair(ensemble_call, 2, 10)
+
+    # the Python member loop: same compiled program, one dispatch per member
+    member_fields = [
+        {n: (batched[n].member(m) if batched[n].is_member_batched else fields[n])
+         for n in cm.FIELD_NAMES}
+        for m in range(members)
+    ]
+
+    def loop_call():
+        for mf in member_fields:
+            step(*[mf[n] for n in cm.FIELD_NAMES], **scalars)
+        member_fields[-1]["phi"].synchronize()
+
+    loop_call()  # warm per-member jit
+    us_loop, us_loop_repeat = _timed_pair(loop_call, 2, 10)
+
+    # best-of-two per side: the ratio is a *comparison inside one process*,
+    # so the same-process noise both measurements record must not flip it
+    ratio = min(us_ens, us_ens_repeat) / min(us_loop, us_loop_repeat)
+    rep = info["ensemble_report"]
+    row(f"ensemble_step_jax_ensemble_{members}x{ni}x{nj}x{nk}", us_ens,
+        f"{members / (us_ens / 1e6):.0f}members/s")
+    row(f"ensemble_step_jax_member_loop_{members}x{ni}x{nj}x{nk}", us_loop,
+        f"ens/loop={ratio:.2f}")
+    return {
+        "jax": {
+            "ensemble": {"us_per_call": us_ens, "us_repeat": us_ens_repeat},
+            "member_loop": {"us_per_call": us_loop, "us_repeat": us_loop_repeat},
+        },
+        "members": members,
+        "members_per_second": members / (us_ens / 1e6),
+        "ensemble_vs_loop_ratio": ratio,
+        "batched_fields": rep["batched_fields"],
+        "shared_fields": rep["shared_fields"],
+        "fingerprint": rep["fingerprint"],
     }
 
 

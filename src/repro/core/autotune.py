@@ -76,12 +76,13 @@ def candidate_blocks(
     return out
 
 
-def _synthetic_call_args(module, domain: Tuple[int, int, int]):
+def _synthetic_call_args(module, domain: Tuple[int, int, int], batch: Optional[int] = None):
     """Fields/scalars/origins for timing, built from the module's metadata.
 
     Values are uniform in [0.5, 1.5]: away from zero so division-heavy
     stencils (Thomas solvers) stay finite, with enough variation that no
-    arithmetic folds away.
+    arithmetic folds away.  ``batch`` prepends a member axis to every field
+    so batched runs are timed as they will execute (under ``jax.vmap``).
     """
     import jax.numpy as jnp
 
@@ -101,9 +102,23 @@ def _synthetic_call_args(module, domain: Tuple[int, int, int]):
         else:
             shape = (nk,)
             origins[name] = (0, 0, 0)
+        if batch is not None:
+            shape = (batch,) + shape
         fields[name] = jnp.asarray(0.5 + rng.random(shape), dtype=dtype)
     scalars = {s: 0.5 for s in module._SCALARS}
     return fields, scalars, origins
+
+
+def batch_count(module, operand_shapes) -> Optional[int]:
+    """The leading member-batch extent implied by the operand shapes, or
+    ``None`` for an unbatched call (ranks match the module's field axes)."""
+    if not operand_shapes:
+        return None
+    axes = module._AXES
+    for name, shape in operand_shapes:
+        if name in axes and len(shape) == len(axes[name]) + 1:
+            return int(shape[0])
+    return None
 
 
 def _time_block(
@@ -115,12 +130,21 @@ def _time_block(
     block: Tuple[int, int],
     warmup: int,
     iters: int,
+    batch: Optional[int] = None,
 ) -> float:
     """Best-of-``iters`` wall time of one tiled call, in microseconds."""
     import jax
 
+    if batch is None:
+        run = lambda: module.run(fields, scalars, domain, origins, block=block)  # noqa: E731
+    else:
+        vmapped = jax.vmap(
+            lambda f, s: module.run(f, s, domain, origins, block=block), in_axes=(0, None)
+        )
+        run = lambda: vmapped(fields, scalars)  # noqa: E731
+
     def call():
-        jax.block_until_ready(module.run(fields, scalars, domain, origins, block=block))
+        jax.block_until_ready(run())
 
     for _ in range(max(1, warmup)):
         call()  # compile + cache warm
@@ -132,8 +156,19 @@ def _time_block(
     return best * 1e6
 
 
-def _domain_key(domain: Tuple[int, int, int], candidates) -> str:
+def _domain_key(domain: Tuple[int, int, int], candidates, operand_shapes=None) -> str:
+    """Store key for one tuning record.
+
+    The FULL operand shapes participate alongside the compute domain: a
+    member-batched (vmapped) run has the same ``(ni, nj, nk)`` domain as the
+    unbatched one but a different DMA/compute balance per tile, so it must
+    never reuse a ``(BI, BJ)`` tuned for unbatched shapes (and vice versa).
+    """
     key = "x".join(str(d) for d in domain)
+    if operand_shapes:
+        key += "|" + ";".join(
+            f"{name}:{'x'.join(str(s) for s in shape)}" for name, shape in sorted(operand_shapes)
+        )
     if candidates:
         key += "|" + ";".join(f"{bi}x{bj}" for bi, bj in candidates)
     return key
@@ -158,15 +193,25 @@ def select_block(
     candidates: Optional[Sequence[Tuple[int, int]]] = None,
     warmup: int = 1,
     iters: int = 3,
+    operand_shapes=None,
 ) -> Tuple[Tuple[int, int], Dict[str, Any]]:
     """The tuned ``(BI, BJ)`` for ``domain``, searching at most once.
 
-    Returns ``(block, record)`` where ``record`` carries the per-candidate
-    timings (``cache_hit`` marks a persisted result being reused).
+    ``operand_shapes`` — ``((field_name, shape), ...)`` of the actual call —
+    folds the full operand geometry (member/batch axes included) into the
+    store key, and batched shapes are timed under ``jax.vmap`` exactly as
+    they will run.  Returns ``(block, record)`` where ``record`` carries the
+    per-candidate timings (``cache_hit`` marks a persisted result being
+    reused).
     """
     domain = tuple(int(d) for d in domain)
     cands = [tuple(c) for c in candidates] if candidates else None
-    dkey = _domain_key(domain, cands)
+    operand_shapes = (
+        tuple(sorted((str(n), tuple(int(x) for x in s)) for n, s in operand_shapes))
+        if operand_shapes
+        else None
+    )
+    dkey = _domain_key(domain, cands, operand_shapes)
     path = caching.tuning_path(name, fingerprint)
 
     with _lock:
@@ -182,16 +227,18 @@ def select_block(
             return tuple(rec["block"]), rec
 
     blocks = candidate_blocks(module, domain, cands)
-    fields, scalars, origins = _synthetic_call_args(module, domain)
+    batch = batch_count(module, operand_shapes)
+    fields, scalars, origins = _synthetic_call_args(module, domain, batch)
     timings: List[Dict[str, Any]] = []
     for block in blocks:
-        us = _time_block(module, fields, scalars, domain, origins, block, warmup, iters)
+        us = _time_block(module, fields, scalars, domain, origins, block, warmup, iters, batch)
         timings.append({"block": list(block), "us": us})
     best = min(timings, key=lambda t: t["us"])
     record: Dict[str, Any] = {
         "block": list(best["block"]),
         "timings": timings,
         "domain": list(domain),
+        "batch": batch,
         "cache_hit": False,
     }
 

@@ -264,7 +264,9 @@ class StencilObject:
         block = None
         if self.backend == "pallas":
             # resolve the tile before tracing: timing cannot happen under jit
-            block, autotune_record = self._resolve_block(domain)
+            block, autotune_record = self._resolve_block(
+                domain, [(n, tuple(v.shape)) for n, v in raw_fields.items()]
+            )
             if exec_info is not None:
                 exec_info["schedule"] = getattr(self._module, "SCHEDULE", None)
                 if autotune_record is not None:
@@ -298,14 +300,23 @@ class StencilObject:
             exec_info["run_end_time"] = time.perf_counter()
         return result
 
-    def _resolve_block(self, domain) -> Tuple[Optional[Tuple[int, int]], Optional[dict]]:
-        """The pallas tile for this domain: pinned block wins, otherwise the
-        autotuner's (cached) choice, otherwise the generated default."""
+    def _resolve_block(
+        self, domain, operand_shapes=None
+    ) -> Tuple[Optional[Tuple[int, int]], Optional[dict]]:
+        """The pallas tile for this domain + operand geometry: pinned block
+        wins, otherwise the autotuner's (cached) choice, otherwise the
+        generated default.  ``operand_shapes`` carries the FULL argument
+        shapes (member/batch axes included) so a batched run never reuses a
+        tile tuned for unbatched shapes."""
         if self._pinned_block is not None or not self._autotune_cfg.get("autotune"):
             return self._pinned_block, None
         if self._module is None:
             return None, None
-        key = tuple(domain)
+        if operand_shapes is not None:
+            operand_shapes = tuple(
+                sorted((str(n), tuple(int(x) for x in s)) for n, s in operand_shapes)
+            )
+        key = (tuple(domain), operand_shapes)
         cached = self._block_cache.get(key)
         if cached is None:
             from . import autotune
@@ -318,7 +329,12 @@ class StencilObject:
             if self._autotune_cfg.get("autotune_warmup") is not None:
                 kwargs["warmup"] = int(self._autotune_cfg["autotune_warmup"])
             cached = autotune.select_block(
-                self._module, self.name, self.fingerprint, key, **kwargs
+                self._module,
+                self.name,
+                self.fingerprint,
+                tuple(domain),
+                operand_shapes=operand_shapes,
+                **kwargs,
             )
             self._block_cache[key] = cached
         return cached
@@ -384,7 +400,7 @@ class StencilObject:
             return {n: work[n] for n in self._field_order if n in written}
         block = None
         if self.backend == "pallas":
-            block, _ = self._resolve_block(domain)
+            block, _ = self._resolve_block(domain, [(n, tuple(v.shape)) for n, v in raw.items()])
         return self._jitted(domain, origins, block)(raw, scalars)
 
     def as_jax_function(

@@ -6,24 +6,56 @@ position of the compute-domain origin inside the buffer — i.e. the halo) and
 implements ``__array__`` so it inter-operates copy-free with the rest of the
 Python ecosystem (the paper's buffer-protocol point).
 
-Backend-specific layout: for the TPU backends an optional alignment pads the
-trailing dimensions up to the (8, 128) sublane×lane register tile so Pallas
-block shapes stay hardware-aligned; the logical shape is unchanged (reads and
-writes go through a view).
+Backend-specific layout: an optional ``alignment`` pads the trailing
+dimensions of the *allocation* up to the (8, 128) sublane×lane register tile
+so Pallas block shapes stay hardware-aligned; the logical shape is unchanged
+(on the numpy backends reads and writes go through a view into the padded
+base, on the jax family XLA owns device layout and the padded shape is
+metadata).
+
+Ensemble member batching: a storage whose leading axis is ``N`` holds one
+field for every ensemble member (``axes=("N", "I", "J", "K")``, origin 0
+along ``N``).  Stencils never see the member axis — ``repro.ensemble``
+slices per-member views for compilation and batches execution with
+``jax.vmap``; alignment is computed per member so batched and unbatched
+allocations share one register-tile layout.
 """
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import numpy as np
 
 _JAX_BACKENDS = ("jax", "pallas")
 _ALL_BACKENDS = ("debug", "numpy") + _JAX_BACKENDS
 
+# TPU register tile: (sublane, lane) — trailing-two-dim padding target.
+ALIGNMENT_TPU = (8, 128)
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _aligned_shape(
+    shape: Tuple[int, ...], alignment: Tuple[int, int], skip_leading: int = 0
+) -> Tuple[int, ...]:
+    """Round the trailing two dims up to the (sublane, lane) tile.
+
+    1-D (per-member) shapes pad the single dim to the lane width; the first
+    ``skip_leading`` dims (the ensemble member axis ``N``) are never padded —
+    batching a field must not disturb its per-member register-tile layout.
+    """
+    head, body = shape[:skip_leading], shape[skip_leading:]
+    if len(body) == 0:
+        return shape
+    if len(body) == 1:
+        return head + (_round_up(body[0], alignment[1]),)
+    out = list(body)
+    out[-2] = _round_up(out[-2], alignment[0])
+    out[-1] = _round_up(out[-1], alignment[1])
+    return head + tuple(out)
 
 
 class Storage:
@@ -35,6 +67,8 @@ class Storage:
         backend: str = "numpy",
         default_origin: Tuple[int, ...] = (0, 0, 0),
         axes: Tuple[str, ...] = ("I", "J", "K"),
+        *,
+        aligned_shape: Optional[Tuple[int, ...]] = None,
     ):
         if backend not in _ALL_BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of {_ALL_BACKENDS}")
@@ -47,6 +81,9 @@ class Storage:
             self.data = jnp.asarray(data)
         else:
             self.data = np.asarray(data)
+        # the allocation shape behind the logical view (== shape when the
+        # storage was allocated without alignment padding)
+        self.aligned_shape = tuple(aligned_shape) if aligned_shape is not None else tuple(self.data.shape)
 
     # -- NumPy-like surface ----------------------------------------------------
 
@@ -81,6 +118,30 @@ class Storage:
             f"default_origin={self.default_origin})"
         )
 
+    # -- ensemble member axis --------------------------------------------------
+
+    @property
+    def is_member_batched(self) -> bool:
+        """True when the storage carries a leading ensemble member axis ``N``."""
+        return bool(self.axes) and self.axes[0] == "N"
+
+    @property
+    def members(self) -> Optional[int]:
+        return int(self.shape[0]) if self.is_member_batched else None
+
+    def member(self, m: int) -> "Storage":
+        """The per-member ``(I, J, K)`` storage for member ``m`` — a copy-free
+        view on the numpy backends, a device slice on the jax family."""
+        if not self.is_member_batched:
+            raise ValueError(f"storage with axes {self.axes} has no member axis")
+        return Storage(
+            self.data[m],
+            backend=self.backend,
+            default_origin=self.default_origin[1:],
+            axes=self.axes[1:],
+            aligned_shape=self.aligned_shape[1:],
+        )
+
     def synchronize(self) -> None:
         """Block until pending device work on this storage is done."""
         if self.backend in _JAX_BACKENDS:
@@ -90,41 +151,49 @@ class Storage:
         return np.asarray(self.data)
 
 
-def _alloc(shape, dtype, backend, default_origin, fill, axes) -> Storage:
+def _alloc(shape, dtype, backend, default_origin, fill, axes, alignment=None) -> Storage:
     shape = tuple(int(s) for s in shape)
     if default_origin is None:
         default_origin = (0,) * len(shape)
+    if axes is None:
+        axes = ("I", "J", "K")[: len(shape)] if len(shape) <= 3 else tuple(f"D{i}" for i in range(len(shape)))
+    if alignment is True:
+        alignment = ALIGNMENT_TPU
+    skip = 1 if axes and axes[0] == "N" else 0
+    padded = _aligned_shape(shape, alignment, skip) if alignment else shape
     if backend in _JAX_BACKENDS:
         import jax.numpy as jnp
 
-        if fill == "zeros":
-            data = jnp.zeros(shape, dtype=dtype)
-        elif fill == "ones":
+        # XLA owns device layout (it tiles to (8, 128) internally), so the
+        # jax-family buffer is allocated at the logical shape; ``alignment``
+        # only records the padded shape the TPU backends will see.
+        if fill == "ones":
             data = jnp.ones(shape, dtype=dtype)
-        else:
-            data = jnp.zeros(shape, dtype=dtype)  # no uninitialized memory in JAX
+        else:  # no uninitialized memory in JAX: 'empty' also zero-fills
+            data = jnp.zeros(shape, dtype=dtype)
     else:
-        if fill == "zeros":
-            data = np.zeros(shape, dtype=dtype)
-        elif fill == "ones":
-            data = np.ones(shape, dtype=dtype)
+        if fill == "zeros" or (fill == "ones" and padded != shape):
+            base = np.zeros(padded, dtype=dtype)
         else:
-            data = np.empty(shape, dtype=dtype)
-    if axes is None:
-        axes = ("I", "J", "K")[: len(shape)] if len(shape) <= 3 else tuple(f"D{i}" for i in range(len(shape)))
-    return Storage(data, backend=backend, default_origin=default_origin, axes=axes)
+            base = np.empty(padded, dtype=dtype)
+        # the logical array is a view into the aligned allocation: rows keep
+        # lane-aligned strides, np.asarray stays copy-free
+        data = base[tuple(slice(0, s) for s in shape)]
+        if fill == "ones":
+            data[...] = 1.0
+    return Storage(data, backend=backend, default_origin=default_origin, axes=axes, aligned_shape=padded)
 
 
-def zeros(shape, dtype="float64", backend="numpy", default_origin=None, axes=None) -> Storage:
-    return _alloc(shape, dtype, backend, default_origin, "zeros", axes)
+def zeros(shape, dtype="float64", backend="numpy", default_origin=None, axes=None, alignment=None) -> Storage:
+    return _alloc(shape, dtype, backend, default_origin, "zeros", axes, alignment)
 
 
-def ones(shape, dtype="float64", backend="numpy", default_origin=None, axes=None) -> Storage:
-    return _alloc(shape, dtype, backend, default_origin, "ones", axes)
+def ones(shape, dtype="float64", backend="numpy", default_origin=None, axes=None, alignment=None) -> Storage:
+    return _alloc(shape, dtype, backend, default_origin, "ones", axes, alignment)
 
 
-def empty(shape, dtype="float64", backend="numpy", default_origin=None, axes=None) -> Storage:
-    return _alloc(shape, dtype, backend, default_origin, "empty", axes)
+def empty(shape, dtype="float64", backend="numpy", default_origin=None, axes=None, alignment=None) -> Storage:
+    return _alloc(shape, dtype, backend, default_origin, "empty", axes, alignment)
 
 
 def from_array(array, backend="numpy", default_origin=None, dtype=None, axes=None) -> Storage:
@@ -145,8 +214,15 @@ def storage_for_domain(
     backend="numpy",
     fill="zeros",
     axes=("I", "J", "K"),
+    alignment=None,
+    members: Optional[int] = None,
 ) -> Storage:
-    """Allocate a storage sized domain+2·halo with origin at the halo."""
+    """Allocate a storage sized domain+2·halo with origin at the halo.
+
+    ``members=N`` prepends an ensemble member axis (``axes=("N", ...)``,
+    origin 0 along it); trailing-dim ``alignment`` is computed per member,
+    so batched and unbatched allocations share one register-tile layout.
+    """
     ni, nj, nk = domain
     hi, hj, hk = halo
     full = []
@@ -155,4 +231,9 @@ def storage_for_domain(
         if ax in axes:
             full.append(n + 2 * h)
             origin.append(h)
-    return _alloc(tuple(full), dtype, backend, tuple(origin), fill, tuple(a for a in ("I", "J", "K") if a in axes))
+    out_axes = tuple(a for a in ("I", "J", "K") if a in axes)
+    if members is not None:
+        full.insert(0, int(members))
+        origin.insert(0, 0)
+        out_axes = ("N",) + out_axes
+    return _alloc(tuple(full), dtype, backend, tuple(origin), fill, out_axes, alignment)

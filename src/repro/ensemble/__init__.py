@@ -1,0 +1,58 @@
+"""Ensemble execution: member-batched programs, perturbations, statistics.
+
+BEYOND PAPER.  The paper's separation of concerns is pitched at one
+forecast; operational weather and climate products run *ensembles* — tens
+of perturbed members whose spread is the product.  This package turns N
+per-member Python dispatches into ONE ``jax.vmap``-batched jit dispatch of
+the PR-3 ``@program`` layer::
+
+    from repro import ensemble
+    from repro.ensemble import Ensemble
+
+    ens = Ensemble(climate_step, members=8)       # or climate_step.ensemble(8)
+    phi0 = ensemble.perturb(phi, 8, seed=0, amplitude=1e-3)   # counter-based
+    ens(phi0, u, v, ..., dt=dt)                   # 8 members, 1 dispatch
+    ens.iterate(100, phi0, u, v, ..., dt=dt)      # 100 steps x 8 members, 1 dispatch
+    stats = ens.statistics()                      # fused IR stencil
+    stats(phi0, threshold=2.0)                    # mean/var/spread/min/max/prob
+    ens.distribute(mesh, member_axis="ens")       # members x domain co-sharded
+
+Modules: ``batch`` (member-batched storage allocation), ``perturb``
+(counter-based ``jax.random`` member initialization), ``stats`` (fused
+statistics emitted through the stencil IR), ``compile`` (the vmap-batched
+ensemble compiler and member×domain sharding).
+"""
+
+from . import batch
+from .batch import (
+    EnsembleError,
+    broadcast,
+    from_member_arrays,
+    is_member_batched,
+    member_view,
+    storage_for_domain,
+)
+from .compile import DistributedEnsemble, Ensemble
+from .perturb import member_keys, normal_noise, perturb, spread_inflation, uniform_noise
+from .stats import STAT_FIELDS, EnsembleStatistics, build_ensemble_stats, stats_definition
+
+__all__ = [
+    "Ensemble",
+    "DistributedEnsemble",
+    "EnsembleError",
+    "EnsembleStatistics",
+    "STAT_FIELDS",
+    "batch",
+    "broadcast",
+    "build_ensemble_stats",
+    "from_member_arrays",
+    "is_member_batched",
+    "member_keys",
+    "member_view",
+    "normal_noise",
+    "perturb",
+    "spread_inflation",
+    "stats_definition",
+    "storage_for_domain",
+    "uniform_noise",
+]

@@ -66,18 +66,18 @@ class LogicalAxisRules:
                 out.append(None)
                 continue
             if isinstance(axis, tuple):
-                ax = tuple(
-                    a for a in axis
-                    if a not in used and (mesh_axis_names is None or a in mesh_axis_names)
-                )
+                ax = tuple(a for a in axis if a not in used and (mesh_axis_names is None or a in mesh_axis_names))
                 if ax and _divides(dim, ax):
                     used.update(ax)
                     out.append(ax)
                 else:
                     out.append(None)
             else:
-                if axis in used or (mesh_axis_names is not None and axis not in mesh_axis_names) \
-                        or not _divides(dim, (axis,)):
+                if (
+                    axis in used
+                    or (mesh_axis_names is not None and axis not in mesh_axis_names)
+                    or not _divides(dim, (axis,))
+                ):
                     out.append(None)
                 else:
                     used.add(axis)
@@ -113,6 +113,11 @@ DEFAULT_RULES = LogicalAxisRules(
         # distributed stencils: horizontal plane decomposed over the mesh
         ("field_i", ("pod", "data")),
         ("field_j", "model"),
+        # ensemble member axis (repro.ensemble): members shard over the pod
+        # axis when present, composing with the field_i/field_j plane
+        # decomposition — member x domain co-sharding; on meshes without a
+        # pod axis the rule drops out and members stay vmap-batched locally
+        ("member", "pod"),
     ]
 )
 
@@ -143,13 +148,15 @@ def axis_rules(rules: LogicalAxisRules, mesh: Optional[Mesh] = None):
         _local.mesh = prev_mesh
 
 
-def logical_spec(logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
-                 shape: Optional[Sequence[int]] = None) -> P:
+def logical_spec(
+    logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None, shape: Optional[Sequence[int]] = None
+) -> P:
     return current_rules().mesh_axes(logical, mesh or current_mesh(), shape)
 
 
-def logical_sharding(logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
-                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+def logical_sharding(
+    logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None, shape: Optional[Sequence[int]] = None
+) -> NamedSharding:
     mesh = mesh or current_mesh()
     if mesh is None:
         raise ValueError("logical_sharding requires a mesh (use axis_rules(..., mesh=...))")

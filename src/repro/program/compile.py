@@ -619,6 +619,13 @@ class ProgramObject:
     def distribute(self, mesh, **kwargs) -> "DistributedProgram":
         return DistributedProgram(self, mesh, **kwargs)
 
+    def ensemble(self, members: int, **kwargs):
+        """An :class:`repro.ensemble.Ensemble` of this program: ``members``
+        perturbed copies advanced in one ``jax.vmap``-batched jit dispatch."""
+        from repro.ensemble import Ensemble
+
+        return Ensemble(self, members, **kwargs)
+
     def __repr__(self) -> str:
         return f"ProgramObject({self.name!r}, backend={self.backend!r})"
 
@@ -686,11 +693,18 @@ class DistributedProgram:
         self.i_size = int(mesh.shape[i_axis])
         self.j_size = int(mesh.shape[j_axis])
         self.periodic = tuple(periodic)
-        self._cache: Dict[Any, Tuple[Callable, dict]] = {}
+        self._plans: Dict[Any, "DistributedStepPlan"] = {}
+        self._cache: Dict[Any, Callable] = {}
+        self._iter_cache: Dict[Any, Callable] = {}
 
     # -- compilation -------------------------------------------------------
 
-    def _compile(self, fields: Dict[str, Any], scalars: Dict[str, Any], local_domain):
+    def _plan_local(
+        self, fields: Dict[str, Any], scalars: Dict[str, Any], local_domain
+    ) -> "DistributedStepPlan":
+        """The per-shard step as a pure function — the shared core of
+        ``__call__``, ``iterate`` and the ensemble layer's member-batched
+        (``vmap``-wrapped) distributed execution."""
         graph = ProgramGraph(self.prog.trace(fields, scalars))
         pplan = ProgramPlan(
             f"{self.prog.name}_dist",
@@ -717,9 +731,7 @@ class DistributedProgram:
         ni, nj, nk = local_domain
         i_axis, j_axis = self.i_axis, self.j_axis
         i_size, j_size, periodic = self.i_size, self.j_size, self.periodic
-        group_buffers = [
-            [b for b in g.buffers() if b not in temp_internals] for g in groups
-        ]
+        group_buffers = [[b for b in g.buffers() if b not in temp_internals] for g in groups]
         buffers = graph.buffers
         group_runs = [obj._run for obj in group_objects]
         used_inputs = sorted(
@@ -730,7 +742,10 @@ class DistributedProgram:
 
         from repro.parallel.halo import exchange_halo_2d
 
-        def body(local_fields: Dict[str, Any], scalar_vals: Dict[str, Any]):
+        def run_groups(local_fields: Dict[str, Any], scalar_vals: Dict[str, Any]):
+            """One per-shard step: planned exchanges + group runs.  Returns
+            ``(state, outs)`` — the updated values of every used input, and
+            the output binding."""
             import jax.numpy as jnp
 
             scal = dict(const_scalars)
@@ -767,41 +782,39 @@ class DistributedProgram:
                         vals[b] = arr
                     padded.pop(b, None)
                     depth.pop(b, None)
-            return {o: vals[b] for o, b in outputs.items()}
+            state = {n: vals[n] for n in used_inputs}
+            outs = {o: vals[b] for o, b in outputs.items()}
+            return state, outs
 
-        from repro.stencils.distributed import shard_map
+        return DistributedStepPlan(
+            run_groups=run_groups,
+            used_inputs=used_inputs,
+            outputs=dict(outputs),
+            buffers=buffers,
+            report=report,
+            iterable_reason=validate_iterable(graph),
+        )
+
+    def _spec_for(self, plan: "DistributedStepPlan", name: str, member_axis: Optional[str] = None):
         from jax.sharding import PartitionSpec as P
-        import jax
 
-        def spec_for(name: str):
-            axes = buffers[name].axes
-            if axes == ("K",):
-                return P(None)
-            if len(axes) == 2:
-                return P(i_axis, j_axis)
-            return P(i_axis, j_axis, None)
+        axes = plan.buffers[name].axes
+        m = (member_axis,) if member_axis is not None else ()
+        if axes and axes[0] == "N":
+            axes = axes[1:]
+        if axes == ("K",):
+            return P(*m, None)
+        if len(axes) == 2:
+            return P(*m, self.i_axis, self.j_axis)
+        return P(*m, self.i_axis, self.j_axis, None)
 
-        in_specs = ({n: spec_for(n) for n in used_inputs}, P())
-        out_specs = {o: spec_for(b) for o, b in outputs.items()}
-        shard_fn = jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs))
+    def _plan_for(self, fields, scalars, local, key) -> "DistributedStepPlan":
+        if key not in self._plans:
+            self._plans[key] = self._plan_local(fields, scalars, local)
+        return self._plans[key]
 
-        def fn(all_fields, scalar_vals):
-            return shard_fn({n: all_fields[n] for n in used_inputs}, scalar_vals)
-
-        return fn, report
-
-    # -- execution ---------------------------------------------------------
-
-    def __call__(
-        self,
-        fields: Dict[str, Any],
-        scalars: Optional[Dict[str, Any]] = None,
-        *,
-        exec_info: Optional[dict] = None,
-    ) -> Dict[str, Any]:
-        """``fields``: GLOBAL (interior-only) arrays keyed by program field
-        name.  Returns the output binding as global arrays."""
-        scalars = dict(scalars or {})
+    def _geometry(self, fields: Dict[str, Any]):
+        """(local_domain, cache key) for GLOBAL interior-only field arrays."""
         # the vertical extent must come from a 3-D field — a 2-D (I, J)
         # buffer that happens to be listed first must not collapse nk to 1
         sample = next(
@@ -816,11 +829,73 @@ class DistributedProgram:
         nk = int(sample.shape[2]) if len(sample.shape) == 3 else 1
         local = (gi // self.i_size, gj // self.j_size, nk)
         key = (tuple(sorted((n, tuple(v.shape), str(v.dtype)) for n, v in fields.items())), local)
+        return local, key
+
+    def _compile(self, plan: "DistributedStepPlan") -> Callable:
+        from repro.stencils.distributed import shard_map
+        from jax.sharding import PartitionSpec as P
+        import jax
+
+        def body(local_fields: Dict[str, Any], scalar_vals: Dict[str, Any]):
+            _state, outs = plan.run_groups(local_fields, scalar_vals)
+            return outs
+
+        in_specs = ({n: self._spec_for(plan, n) for n in plan.used_inputs}, P())
+        out_specs = {o: self._spec_for(plan, b) for o, b in plan.outputs.items()}
+        shard_fn = jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs))
+
+        def fn(all_fields, scalar_vals):
+            return shard_fn({n: all_fields[n] for n in plan.used_inputs}, scalar_vals)
+
+        return fn
+
+    def _compile_iterate(self, plan: "DistributedStepPlan", n: int) -> Callable:
+        from repro.stencils.distributed import shard_map
+        from jax.sharding import PartitionSpec as P
+        import jax
+        from jax import lax
+
+        run_groups, used, outputs = plan.run_groups, plan.used_inputs, plan.outputs
+
+        def body(local_fields: Dict[str, Any], scalar_vals: Dict[str, Any]):
+            def step(_i, st):
+                # per-step state: written buffers update, then the output
+                # binding rebinds — the 2-exchange/step plan runs inside
+                # run_groups on every iteration
+                state, outs = run_groups(st, scalar_vals)
+                return {**state, **outs}
+
+            final = lax.fori_loop(0, n, step, {k: local_fields[k] for k in used})
+            return {o: final[o] for o in outputs}
+
+        in_specs = ({n: self._spec_for(plan, n) for n in used}, P())
+        out_specs = {o: self._spec_for(plan, b) for o, b in outputs.items()}
+        shard_fn = jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs))
+
+        def fn(all_fields, scalar_vals):
+            return shard_fn({n: all_fields[n] for n in used}, scalar_vals)
+
+        return fn
+
+    # -- execution ---------------------------------------------------------
+
+    def __call__(
+        self,
+        fields: Dict[str, Any],
+        scalars: Optional[Dict[str, Any]] = None,
+        *,
+        exec_info: Optional[dict] = None,
+    ) -> Dict[str, Any]:
+        """``fields``: GLOBAL (interior-only) arrays keyed by program field
+        name.  Returns the output binding as global arrays."""
+        scalars = dict(scalars or {})
+        local, key = self._geometry(fields)
+        plan = self._plan_for(fields, scalars, local, key)
         if key not in self._cache:
-            self._cache[key] = self._compile(fields, scalars, local)
-        fn, report = self._cache[key]
+            self._cache[key] = self._compile(plan)
+        fn = self._cache[key]
         if exec_info is not None:
-            exec_info["program_report"] = dict(report)
+            exec_info["program_report"] = dict(plan.report)
             exec_info["run_start_time"] = time.perf_counter()
         out = fn(fields, scalars)
         if exec_info is not None:
@@ -828,3 +903,53 @@ class DistributedProgram:
                 v.block_until_ready()
             exec_info["run_end_time"] = time.perf_counter()
         return out
+
+    def iterate(
+        self,
+        n: int,
+        fields: Dict[str, Any],
+        scalars: Optional[Dict[str, Any]] = None,
+        *,
+        exec_info: Optional[dict] = None,
+    ) -> Dict[str, Any]:
+        """Run ``n`` sharded steps in ONE ``shard_map``-wrapped ``fori_loop``
+        dispatch, the minimal halo-exchange plan applied on every iteration.
+
+        Requires a rotation-closed output binding (same contract as
+        ``ProgramObject.iterate``): every output name rebinds a program field
+        of identical geometry, so the sharded step composes with itself.
+        Returns the output binding as global arrays after step ``n``.
+        """
+        scalars = dict(scalars or {})
+        local, key = self._geometry(fields)
+        plan = self._plan_for(fields, scalars, local, key)
+        if plan.iterable_reason is not None:
+            raise ProgramError(f"distributed program {self.prog.name!r} cannot iterate: {plan.iterable_reason}")
+        ikey = (key, int(n))
+        if ikey not in self._iter_cache:
+            self._iter_cache[ikey] = self._compile_iterate(plan, int(n))
+        fn = self._iter_cache[ikey]
+        if exec_info is not None:
+            exec_info["program_report"] = dict(plan.report)
+            exec_info["program_report"]["iterated_steps"] = int(n)
+            exec_info["run_start_time"] = time.perf_counter()
+        out = fn(fields, scalars)
+        if exec_info is not None:
+            for v in out.values():
+                v.block_until_ready()
+            exec_info["run_end_time"] = time.perf_counter()
+        return out
+
+
+class DistributedStepPlan:
+    """The compiled-but-unwrapped per-shard step of a distributed program:
+    everything ``shard_map`` wrappers (single-step, iterated, member-batched)
+    need, with the planning done exactly once per argument geometry."""
+
+    def __init__(self, *, run_groups, used_inputs, outputs, buffers, report, iterable_reason):
+        self.run_groups = run_groups
+        self.used_inputs = list(used_inputs)
+        self.outputs = dict(outputs)
+        self.buffers = buffers
+        self.report = report
+        self.iterable_reason = iterable_reason

@@ -121,3 +121,34 @@ def test_vmem_filter_drops_oversized_candidates(isolated_cache):
     blocks = autotune.candidate_blocks(module, (4096, 4096, 128), candidates=((8, 128), (2048, 2048)))
     assert (8, 128) in blocks
     assert (2048, 2048) not in blocks  # far past the VMEM budget
+
+
+def test_batched_operand_shapes_key_distinct_tiles(isolated_cache):
+    """A member-batched (vmapped) run has the same (ni, nj, nk) domain as the
+    unbatched one but different operand shapes — it must tune its own record,
+    never reuse the stale unbatched (BI, BJ)."""
+    st = _build()
+    info = {}
+    _call(st, info)
+    assert info["autotune"]["cache_hit"] is False
+
+    batched_shapes = [
+        (n, (5, NI, NJ, NK)) for n in ("rho", "w", "out_dn", "out_up")
+    ]
+    _block, rec = st._resolve_block((NI, NJ, NK), batched_shapes)
+    assert rec["cache_hit"] is False  # same domain, new geometry: fresh search
+    assert rec["batch"] == 5  # timed under vmap with the member axis
+
+    # both records persist independently under one fingerprint
+    path = caching.tuning_path(st.name, st.fingerprint)
+    store = json.loads(path.read_text())
+    assert len(store["domains"]) == 2
+
+    # each geometry is a pure cache hit for a fresh build of the same IR
+    st2 = _build()
+    _block, rec2 = st2._resolve_block((NI, NJ, NK), batched_shapes)
+    assert rec2["cache_hit"] is True
+    assert rec2["block"] == rec["block"]
+    info3 = {}
+    _call(st2, info3)
+    assert info3["autotune"]["cache_hit"] is True

@@ -35,8 +35,7 @@ def _run_subprocess(body: str) -> dict:
         f.write(script)
         path = f.name
     try:
-        res = subprocess.run([sys.executable, path], capture_output=True,
-                             text=True, timeout=600, env=env)
+        res = subprocess.run([sys.executable, path], capture_output=True, text=True, timeout=600, env=env)
     finally:
         os.unlink(path)
     if res.returncode != 0:

@@ -1,0 +1,339 @@
+"""Ensemble execution subsystem tests (repro.ensemble).
+
+The load-bearing invariant: an N-member batched run is BIT-identical
+(float64) to a Python loop over per-member ``CompiledProgram`` calls — for
+one step, for ``iterate(n)``, for shared (broadcast) forcing fields, and for
+per-member scalars.  Plus: counter-based perturbation reproducibility, fused
+IR-emitted statistics vs a numpy oracle, fingerprinting, and the error
+surface.
+"""
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import gtscript, storage
+from repro.core.gtscript import Field, PARALLEL, computation, interval
+from repro.core.storage import Storage
+from repro.ensemble import (
+    Ensemble,
+    EnsembleError,
+    EnsembleStatistics,
+    batch,
+    perturb,
+    stats_definition,
+)
+from repro.program import program
+from repro.stencils.library import laplacian
+
+H = 1
+NI, NJ, NK = 12, 10, 5
+DOM = (NI, NJ, NK)
+SHAPE = (NI + 2 * H, NJ + 2 * H, NK)
+N = 4
+
+
+def diffuse_defs(phi: Field[np.float64], out: Field[np.float64], *, alpha: np.float64):
+    with computation(PARALLEL), interval(...):
+        out = phi + alpha * laplacian(phi)
+
+
+def advect_defs(
+    phi: Field[np.float64],
+    u: Field[np.float64],
+    v: Field[np.float64],
+    adv: Field[np.float64],
+    *,
+    dx: np.float64,
+    dy: np.float64,
+):
+    with computation(PARALLEL), interval(...):
+        fx = (phi[0, 0, 0] - phi[-1, 0, 0]) / dx if u > 0.0 else (phi[1, 0, 0] - phi[0, 0, 0]) / dx
+        fy = (phi[0, 0, 0] - phi[0, -1, 0]) / dy if v > 0.0 else (phi[0, 1, 0] - phi[0, 0, 0]) / dy
+        adv = -(u * fx + v * fy)
+
+
+def euler_defs(phi: Field[np.float64], adv: Field[np.float64], out: Field[np.float64], *, dt: np.float64):
+    with computation(PARALLEL), interval(...):
+        out = phi + dt * adv
+
+
+@pytest.fixture(scope="module")
+def step():
+    build = gtscript.stencil(backend="jax")
+    advect, euler, diffuse = build(advect_defs), build(euler_defs), build(diffuse_defs)
+
+    @program(backend="jax", name="ens_step")
+    def ens_step(phi, u, v, adv, phi_star, phi_new, *, dx, dy, dt, alpha):
+        advect(phi, u, v, adv, dx=dx, dy=dy, domain=DOM)
+        euler(phi, adv, phi_star, dt=dt, domain=DOM)
+        diffuse(phi_star, phi_new, alpha=alpha, domain=DOM)
+        return {"phi": phi_new, "phi_new": phi}
+
+    return ens_step
+
+
+SCALARS = dict(dx=np.float64(1.0), dy=np.float64(1.0), dt=np.float64(0.1), alpha=np.float64(0.05))
+FIELD_NAMES = ("phi", "u", "v", "adv", "phi_star", "phi_new")
+
+
+def _base_fields():
+    rng = np.random.default_rng(0)
+    mk = lambda a: storage.from_array(a, backend="jax", default_origin=(H, H, 0))  # noqa: E731
+    return {
+        "phi": mk(rng.normal(size=SHAPE)),
+        "u": mk(np.full(SHAPE, 0.8)),
+        "v": mk(np.full(SHAPE, -0.4)),
+        "adv": mk(np.zeros(SHAPE)),
+        "phi_star": mk(np.zeros(SHAPE)),
+        "phi_new": mk(np.zeros(SHAPE)),
+    }
+
+
+def _batched_fields(members=N, shared=("u", "v")):
+    base = _base_fields()
+    out = {}
+    for n, f in base.items():
+        if n == "phi":
+            out[n] = perturb(f, members, seed=0, amplitude=1e-3)
+        elif n in shared:
+            out[n] = f
+        else:
+            out[n] = batch.broadcast(f, members, backend="jax")
+    return out
+
+
+def _snapshot(fields):
+    return {n: np.asarray(v.data).copy() for n, v in fields.items()}
+
+
+def _member_loop(step, snap, fields, members, nt=1, scalars=None):
+    """The oracle: per-member CompiledProgram calls in a Python loop."""
+    out = []
+    for m in range(members):
+        mf = {}
+        for n, src in fields.items():
+            if src.is_member_batched:
+                mf[n] = Storage(
+                    snap[n][m].copy(), backend="jax", default_origin=src.default_origin[1:], axes=src.axes[1:]
+                )
+            else:
+                mf[n] = Storage(snap[n].copy(), backend="jax", default_origin=src.default_origin, axes=src.axes)
+        sc = dict(SCALARS if scalars is None else scalars)
+        for _ in range(nt):
+            step(*[mf[n] for n in FIELD_NAMES], **sc)
+        out.append(np.asarray(mf["phi"].data))
+    return np.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: one vmapped dispatch == python member loop
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_call_bit_identical_to_member_loop(step):
+    fields = _batched_fields()
+    snap = _snapshot(fields)
+    ens = Ensemble(step, N)
+    info = {}
+    outs = ens(*[fields[n] for n in FIELD_NAMES], **SCALARS, exec_info=info)
+    got = np.asarray(fields["phi"].data)
+    ref = _member_loop(step, snap, fields, N)
+    assert np.abs(got - ref).max() == 0.0  # bit-identical, float64
+    assert set(outs) == {"phi", "phi_new"}
+    rep = info["ensemble_report"]
+    assert rep["members"] == N
+    assert "u" in rep["shared_fields"] and "phi" in rep["batched_fields"]
+    # the member-batched step reuses the single-member compiled program
+    assert rep["program_report"]["groups"] >= 1
+
+
+def test_ensemble_iterate_bit_identical_to_member_loop(step):
+    nt = 5
+    fields = _batched_fields()
+    snap = _snapshot(fields)
+    ens = Ensemble(step, N)
+    info = {}
+    ens.iterate(nt, *[fields[n] for n in FIELD_NAMES], **SCALARS, exec_info=info)
+    got = np.asarray(fields["phi"].data)
+    ref = _member_loop(step, snap, fields, N, nt=nt)
+    assert np.abs(got - ref).max() == 0.0
+    assert info["ensemble_report"]["iterated_steps"] == nt
+
+
+def test_iterate_leaves_shared_fields_untouched(step):
+    """Shared (broadcast) storages must come back from iterate exactly as
+    they went in — never N-replicated by the vmapped loop carry."""
+    fields = _batched_fields()
+    u_before = np.asarray(fields["u"].data).copy()
+    ens = Ensemble(step, N)
+    ens.iterate(3, *[fields[n] for n in FIELD_NAMES], **SCALARS)
+    assert fields["u"].shape == SHAPE  # still rank-3, not (N, ...)
+    assert fields["u"].axes == ("I", "J", "K")
+    np.testing.assert_array_equal(np.asarray(fields["u"].data), u_before)
+
+
+def test_all_batched_fields_work_too(step):
+    fields = _batched_fields(shared=())  # everything batched, nothing shared
+    snap = _snapshot(fields)
+    ens = Ensemble(step, N)
+    ens(*[fields[n] for n in FIELD_NAMES], **SCALARS)
+    ref = _member_loop(step, snap, fields, N)
+    assert np.abs(np.asarray(fields["phi"].data) - ref).max() == 0.0
+
+
+def test_per_member_scalars(step):
+    """A length-N scalar array is mapped over: member m runs with dt[m]."""
+    fields = _batched_fields()
+    snap = _snapshot(fields)
+    dts = np.linspace(0.05, 0.2, N)
+    ens = Ensemble(step, N)
+    sc = dict(SCALARS, dt=dts)
+    ens(*[fields[n] for n in FIELD_NAMES], **sc)
+    got = np.asarray(fields["phi"].data)
+    for m in range(N):
+        ref_m = _member_loop(step, snap, fields, N, scalars=dict(SCALARS, dt=np.float64(dts[m])))[m]
+        assert np.abs(got[m] - ref_m).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# error surface
+# ---------------------------------------------------------------------------
+
+
+def test_numpy_backend_rejected():
+    build = gtscript.stencil(backend="numpy")
+    diffuse = build(diffuse_defs)
+
+    @program(backend="numpy", name="np_step")
+    def np_step(phi, out, *, alpha):
+        diffuse(phi, out, alpha=alpha, domain=DOM)
+        return {"phi": out, "out": phi}
+
+    with pytest.raises(EnsembleError, match="jax/pallas"):
+        Ensemble(np_step, 4)
+
+
+def test_written_shared_field_raises(step):
+    fields = _batched_fields(shared=("u", "v", "phi_new"))  # phi_new is written!
+    ens = Ensemble(step, N)
+    with pytest.raises(EnsembleError, match="not member-batched"):
+        ens(*[fields[n] for n in FIELD_NAMES], **SCALARS)
+
+
+def test_wrong_member_count_raises(step):
+    fields = _batched_fields(members=3)
+    ens = Ensemble(step, N)
+    with pytest.raises(EnsembleError, match="3 members"):
+        ens(*[fields[n] for n in FIELD_NAMES], **SCALARS)
+
+
+def test_no_batched_field_raises(step):
+    fields = _base_fields()
+    ens = Ensemble(step, N)
+    with pytest.raises(EnsembleError, match="no member-batched field"):
+        ens(*[fields[n] for n in FIELD_NAMES], **SCALARS)
+
+
+def test_per_member_scalar_length_mismatch(step):
+    fields = _batched_fields()
+    ens = Ensemble(step, N)
+    with pytest.raises(EnsembleError, match="length 3"):
+        ens(*[fields[n] for n in FIELD_NAMES], **dict(SCALARS, dt=np.linspace(0.1, 0.2, 3)))
+
+
+# ---------------------------------------------------------------------------
+# perturbations: counter-based reproducibility
+# ---------------------------------------------------------------------------
+
+
+def test_perturbation_counter_based_reproducibility():
+    base = storage.zeros(SHAPE, backend="jax", default_origin=(H, H, 0))
+    a = np.asarray(perturb(base, 4, seed=7).data)
+    b = np.asarray(perturb(base, 8, seed=7).data)
+    # member m draws the same bytes regardless of ensemble size (fold_in)
+    assert np.array_equal(a, b[:4])
+    c = np.asarray(perturb(base, 4, seed=8).data)
+    assert not np.array_equal(a, c)
+
+
+def test_perturb_control_member():
+    base = storage.from_array(
+        np.random.default_rng(1).normal(size=SHAPE), backend="jax", default_origin=(H, H, 0)
+    )
+    p = perturb(base, 4, seed=0, amplitude=1e-2, perturb_member0=False)
+    assert np.array_equal(np.asarray(p.data)[0], np.asarray(base.data))
+    assert not np.array_equal(np.asarray(p.data)[1], np.asarray(base.data))
+    assert p.axes == ("N", "I", "J", "K")
+    assert p.default_origin == (0, H, H, 0)
+
+
+# ---------------------------------------------------------------------------
+# fused statistics (IR-emitted)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_statistics_match_numpy_oracle(backend):
+    rng = np.random.default_rng(3)
+    arrs = [rng.normal(size=SHAPE) for _ in range(N)]
+    batched = batch.from_member_arrays(arrs, backend=backend, default_origin=(H, H, 0))
+    stats = EnsembleStatistics(N, backend)
+    out = stats(batched, threshold=0.5)
+    stack = np.stack(arrs)
+    np.testing.assert_allclose(np.asarray(out["mean"]), stack.mean(0), rtol=1e-13)
+    np.testing.assert_allclose(np.asarray(out["var"]), stack.var(0), rtol=1e-12, atol=1e-15)
+    np.testing.assert_allclose(np.asarray(out["spread"]), stack.std(0), rtol=1e-12, atol=1e-15)
+    np.testing.assert_array_equal(np.asarray(out["mn"]), stack.min(0))
+    np.testing.assert_array_equal(np.asarray(out["mx"]), stack.max(0))
+    np.testing.assert_allclose(np.asarray(out["prob"]), (stack > 0.5).mean(0), rtol=1e-13)
+
+
+def test_statistics_ride_the_pass_pipeline():
+    """The stats stencil is a normal toolchain artifact: Definition IR in,
+    pass pipeline + fingerprint cache + generated module out."""
+    stats = EnsembleStatistics(3, "numpy")
+    st = stats.stencil
+    assert st.fingerprint  # cached like any stencil
+    assert [r["pass"] for r in st.pass_report]  # the pipeline ran on it
+    assert "def run(" in st.generated_source
+    defn = stats_definition(3)
+    assert len(defn.api_fields) == 3 + 6  # members + stat outputs
+    # a different member count is a different (cached) stencil
+    assert EnsembleStatistics(4, "numpy").stencil.fingerprint != st.fingerprint
+
+
+def test_statistics_reject_mismatched_members():
+    stats = EnsembleStatistics(N, "numpy")
+    b = batch.zeros(N + 1, SHAPE, backend="numpy")
+    with pytest.raises(EnsembleError, match="members"):
+        stats(b)
+
+
+# ---------------------------------------------------------------------------
+# caching / fingerprints / hooks
+# ---------------------------------------------------------------------------
+
+
+def test_member_count_folds_into_fingerprint(step):
+    f4 = _batched_fields(members=4)
+    f2 = _batched_fields(members=2)
+    e4, e2 = Ensemble(step, 4), Ensemble(step, 2)
+    c4 = e4.compiled({n: f4[n] for n in FIELD_NAMES}, dict(SCALARS))
+    c2 = e2.compiled({n: f2[n] for n in FIELD_NAMES}, dict(SCALARS))
+    assert c4.cp is c2.cp  # the single-member program is shared…
+    assert c4.fingerprint != c2.fingerprint  # …the batched artifact is not
+
+
+def test_batched_compilation_is_cached(step):
+    fields = _batched_fields()
+    ens = Ensemble(step, N)
+    c1 = ens.compiled({n: fields[n] for n in FIELD_NAMES}, dict(SCALARS))
+    c2 = ens.compiled({n: fields[n] for n in FIELD_NAMES}, dict(SCALARS))
+    assert c1 is c2
+
+
+def test_program_object_ensemble_hook(step):
+    ens = step.ensemble(6)
+    assert isinstance(ens, Ensemble)
+    assert ens.members == 6 and ens.prog is step

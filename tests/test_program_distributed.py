@@ -206,3 +206,139 @@ def test_forced_exchange_marker_honoured():
     assert out["forced"] == [{"buffer": "phi", "halo": 2, "before_group": 0, "forced": True}]
     # the forced depth-2 exchange covers advect's depth-1 need: no extra op
     assert out["n_ops"] == 2
+
+
+def test_distributed_iterate_bit_identical_to_eager_distributed_loop():
+    """``DistributedProgram.iterate(n)``: n sharded steps in ONE fori_loop
+    dispatch, the 2-exchange/step plan applied per iteration — bit-identical
+    to n eager distributed calls."""
+    out = _run_subprocess(
+        _STEP_DEFS
+        + textwrap.dedent("""
+        dp = step.distribute(mesh)
+
+        # eager: NT separate sharded dispatches with host-side rotation
+        g = fresh_fields()
+        for _ in range(NT):
+            o = dp(g, sc)
+            g["phi"], g["phi_new"] = o["phi"], o["phi_new"]
+
+        # fused: one fori_loop dispatch
+        info = {}
+        final = dp.iterate(NT, fresh_fields(), sc, exec_info=info)
+        rep = info["program_report"]
+        err = float(np.abs(np.asarray(final["phi"]) - np.asarray(g["phi"])).max())
+        print(json.dumps({
+            "err": err,
+            "iterated": rep["iterated_steps"],
+            "inserted": rep["halo_plan"]["inserted"],
+        }))
+        """)
+    )
+    assert out["err"] == 0.0  # bit-identical across 10 fused sharded steps
+    assert out["iterated"] == 10
+    assert out["inserted"] == 2  # the minimal plan runs inside every iteration
+
+
+def test_distributed_iterate_requires_rotation_closed_outputs():
+    out = _run_subprocess(
+        _STEP_DEFS
+        + textwrap.dedent("""
+        from repro.program import ProgramError
+
+        @program(backend=be, name="dist_open")
+        def open_step(phi, u, v, adv, *, dx, dy):
+            advect(phi, u, v, adv, dx=dx, dy=dy)
+            return {"tendency": adv}
+
+        dp = open_step.distribute(mesh)
+        f = {"phi": jnp.asarray(phi0), "u": jnp.asarray(u0), "v": jnp.asarray(v0),
+             "adv": jnp.zeros((NI, NJ, NK))}
+        try:
+            dp.iterate(3, f, {"dx": sc["dx"], "dy": sc["dy"]})
+            failed = False
+        except ProgramError:
+            failed = True
+        print(json.dumps({"raised": failed}))
+        """)
+    )
+    assert out["raised"] is True
+
+
+def test_distributed_ensemble_members_times_domain_sharding():
+    """Member x domain co-sharding: the member axis shards over its own mesh
+    axis, domain tiles over (data, model), local members advance under vmap
+    (batched halo exchanges) — and the result matches the single-device
+    ensemble at rounding level."""
+    out = _run_subprocess(
+        _STEP_DEFS.replace(
+            'mesh = jax.make_mesh((4, 2), ("data", "model"))',
+            'mesh = jax.make_mesh((2, 2, 2), ("ens", "data", "model"))',
+        )
+        + textwrap.dedent("""
+        from repro.core.storage import Storage
+        from repro.ensemble import Ensemble, perturb
+        from repro.ensemble import batch as B
+
+        NMEM = 4
+        ens = Ensemble(step, NMEM)
+
+        # single-device oracle: python loop over per-member compiled programs
+        # on padded (zero-halo-matching) storages
+        Hh = 1
+        shape = (NI + 2 * Hh, NJ + 2 * Hh, NK)
+        def pad(x):
+            p = np.zeros(shape)
+            p[Hh:-Hh, Hh:-Hh, :] = x
+            return p
+        phi_b = perturb(
+            Storage(pad(phi0), backend="jax", default_origin=(Hh, Hh, 0)),
+            NMEM, seed=0, amplitude=1e-3)
+        # zero the perturbation outside the interior so the zero-halo
+        # boundary of the mesh decomposition is reproduced exactly
+        noise_masked = np.zeros((NMEM,) + shape)
+        noise_masked[:, Hh:-Hh, Hh:-Hh, :] = np.asarray(phi_b.data)[:, Hh:-Hh, Hh:-Hh, :]
+        phi_b = Storage(noise_masked, backend="jax", default_origin=(0, Hh, Hh, 0),
+                        axes=("N", "I", "J", "K"))
+
+        refs = []
+        for m in range(NMEM):
+            mf = {
+                "phi": Storage(np.asarray(phi_b.data)[m].copy(), backend="jax",
+                               default_origin=(Hh, Hh, 0)),
+                "u": Storage(pad(u0), backend="jax", default_origin=(Hh, Hh, 0)),
+                "v": Storage(pad(v0), backend="jax", default_origin=(Hh, Hh, 0)),
+            }
+            for n in ("adv", "phi_star", "phi_new"):
+                mf[n] = Storage(np.zeros(shape), backend="jax", default_origin=(Hh, Hh, 0))
+            step(mf["phi"], mf["u"], mf["v"], mf["adv"], mf["phi_star"], mf["phi_new"], **sc)
+            refs.append(np.asarray(mf["phi"].data)[Hh:-Hh, Hh:-Hh, :])
+        ref = np.stack(refs)
+
+        # distributed ensemble: GLOBAL interior-only arrays, members sharded
+        # over the "ens" mesh axis, domain tiles over (data, model)
+        dens = ens.distribute(mesh, member_axis="ens")
+        g = {
+            "phi": jnp.asarray(np.asarray(phi_b.data)[:, Hh:-Hh, Hh:-Hh, :]),
+            "u": jnp.asarray(u0), "v": jnp.asarray(v0),
+            "adv": jnp.zeros((NMEM, NI, NJ, NK)),
+            "phi_star": jnp.zeros((NMEM, NI, NJ, NK)),
+            "phi_new": jnp.zeros((NMEM, NI, NJ, NK)),
+        }
+        info = {}
+        o = dens(g, sc, exec_info=info)
+        rep = info["ensemble_report"]
+        err = float(np.abs(np.asarray(o["phi"]) - ref).max())
+        print(json.dumps({
+            "err": err,
+            "members": rep["members"],
+            "per_shard": rep["members_per_shard"],
+            "inserted": rep["program_report"]["halo_plan"]["inserted"],
+            "out_shape": list(np.asarray(o["phi"]).shape),
+        }))
+        """)
+    )
+    assert out["err"] < 1e-12  # member x domain sharding matches the oracle
+    assert out["members"] == 4 and out["per_shard"] == 2
+    assert out["inserted"] == 2  # one exchange serves ALL local members
+    assert out["out_shape"] == [4, 32, 16, 6]

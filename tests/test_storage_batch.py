@@ -1,0 +1,120 @@
+"""Property tests for member-batched Storage (repro.ensemble.batch).
+
+Invariants: prepending the ensemble member axis ``N`` must preserve the
+TPU (8, 128) trailing-dim alignment padding, the ``default_origin``
+semantics, and the copy-free ``__array__`` / member-view behaviour of the
+unbatched allocation — the member axis is transparent to everything the
+single-member toolchain computed.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' dependency"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import storage  # noqa: E402
+from repro.core.storage import ALIGNMENT_TPU, _aligned_shape  # noqa: E402
+from repro.ensemble import batch  # noqa: E402
+
+_members = st.integers(1, 9)
+_dim = st.integers(1, 40)
+_shape3 = st.tuples(_dim, _dim, st.integers(1, 17))
+_halo = st.integers(0, 3)
+
+
+def _round_up(x, m):
+    return -(-x // m) * m
+
+
+@settings(max_examples=25, deadline=None)
+@given(members=_members, shape=_shape3)
+def test_member_axis_preserves_alignment_padding(members, shape):
+    """The aligned allocation pads the SAME trailing dims batched and
+    unbatched: the member axis is leading and never folded into the tile."""
+    single = storage.zeros(shape, backend="numpy", alignment=True)
+    batched = batch.zeros(members, shape, backend="numpy", alignment=True)
+    assert single.aligned_shape == (
+        shape[0],
+        _round_up(shape[1], ALIGNMENT_TPU[0]),
+        _round_up(shape[2], ALIGNMENT_TPU[1]),
+    )
+    assert batched.aligned_shape == (members,) + single.aligned_shape
+    # logical shapes unchanged; the data is a view into the padded base
+    assert single.shape == shape
+    assert batched.shape == (members,) + shape
+    assert batched.data.base is not None
+    assert batched.data.base.shape == batched.aligned_shape
+
+
+@settings(max_examples=25, deadline=None)
+@given(members=_members, shape=_shape3, h=_halo)
+def test_member_axis_preserves_default_origin(members, shape, h):
+    ni, nj, nk = shape
+    single = storage.storage_for_domain((ni, nj, nk), (h, h, 0), backend="numpy")
+    batched = storage.storage_for_domain((ni, nj, nk), (h, h, 0), backend="numpy", members=members)
+    assert batched.axes == ("N",) + single.axes
+    assert batched.default_origin == (0,) + single.default_origin
+    assert batched.shape == (members,) + single.shape
+    for m in range(members):
+        view = batched.member(m)
+        assert view.axes == single.axes
+        assert view.default_origin == single.default_origin
+        assert view.shape == single.shape
+
+
+@settings(max_examples=25, deadline=None)
+@given(members=_members, shape=_shape3)
+def test_batched_array_protocol_is_copy_free(members, shape):
+    batched = batch.zeros(members, shape, backend="numpy", alignment=True)
+    arr = np.asarray(batched)
+    assert arr.shape == (members,) + shape
+    assert np.shares_memory(arr, batched.data)
+    # member views share memory too: writes through a view land in the batch
+    if members > 1:
+        view = batched.member(1)
+        assert np.shares_memory(np.asarray(view), batched.data)
+        view[0, 0, 0] = 42.0
+        assert batched.data[1, 0, 0, 0] == 42.0
+        assert batched.data[0, 0, 0, 0] == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=_shape3)
+def test_aligned_write_read_roundtrip(shape):
+    """Writes through the aligned view must read back exactly (the view
+    never aliases padding)."""
+    s = storage.zeros(shape, backend="numpy", alignment=True)
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=shape)
+    s[...] = data
+    np.testing.assert_array_equal(np.asarray(s), data)
+    # padding stays zero: the logical view exactly tiles the base corner
+    base = s.data.base
+    assert base[tuple(slice(0, d) for d in shape)].sum() == pytest.approx(data.sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(members=_members, nk=st.integers(1, 300))
+def test_k_only_batched_alignment_pads_lanes_not_members(members, nk):
+    """A batched (N, K) field pads K to the lane width; N is never padded."""
+    batched = batch.zeros(members, (nk,), axes=("K",), backend="numpy", alignment=True)
+    assert batched.aligned_shape == (members, _round_up(nk, ALIGNMENT_TPU[1]))
+
+
+def test_aligned_shape_helper_edges():
+    assert _aligned_shape((), ALIGNMENT_TPU) == ()
+    assert _aligned_shape((5,), ALIGNMENT_TPU) == (128,)
+    assert _aligned_shape((5, 5), ALIGNMENT_TPU) == (8, 128)
+    assert _aligned_shape((3, 5, 5), ALIGNMENT_TPU) == (3, 8, 128)
+    # skip_leading: the member axis passes through
+    assert _aligned_shape((4, 3, 5, 5), ALIGNMENT_TPU, skip_leading=1) == (4, 3, 8, 128)
+    assert _aligned_shape((4, 5), ALIGNMENT_TPU, skip_leading=1) == (4, 128)
+
+
+def test_jax_backend_records_aligned_shape_without_view():
+    s = storage.zeros((5, 6, 7), backend="jax", alignment=True)
+    assert s.shape == (5, 6, 7)  # XLA owns device layout: logical allocation
+    assert s.aligned_shape == (5, 8, 128)
