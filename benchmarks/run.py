@@ -245,6 +245,11 @@ def _ir_stats(st, nk: int) -> dict:
     cse = next((r.get("detail") for r in st.pass_report if r["pass"] == "cross_stage_cse"), None)
     stats["cse_hoisted"] = (cse or {}).get("hoisted", 0)
     stats["cse_eliminated"] = (cse or {}).get("eliminated", 0)
+    split = next((r.get("detail") for r in st.pass_report if r["pass"] == "interval_splitting"), None)
+    stats["intervals_split"] = (split or {}).get("intervals_split", 0)
+    tiling = next((r.get("detail") for r in st.pass_report if r["pass"] == "numpy_stage_tiling"), None)
+    if tiling is not None:
+        stats["numpy_tiling"] = tiling
     plans = analysis.sequential_carry_plan(st.implementation_ir)
     stats["carry"] = {
         "full_fields": sum(len(p.full) for p in plans.values()),
@@ -398,6 +403,21 @@ def bench_smoke(out_path: Path) -> None:
 
     run_case_both_dtypes("vintg", build_vintg, vintg_fields)
 
+    from repro.stencils.vadv import build_vadv_boundary
+
+    def vadv_boundary_fields(backend):
+        rng = np.random.default_rng(5)
+        Hb = 1
+        shape = (ni + 2 * Hb, nj + 2 * Hb, nk)
+        fs = [
+            storage.from_array(rng.normal(size=shape), backend=backend, default_origin=(Hb, Hb, 0)),
+            storage.from_array(rng.normal(size=shape), backend=backend, default_origin=(Hb, Hb, 0)),
+        ] + [storage.zeros(shape, backend=backend, default_origin=(Hb, Hb, 0)) for _ in range(4)]
+        return fs, {"weight": np.float64(0.4)}
+
+    run_case("vadv_boundary", build_vadv_boundary, vadv_boundary_fields)
+    results["cases"]["vadv_boundary"].update(_vadv_boundary_metrics(nk))
+
     results["cases"]["program_step"] = bench_program_step(ni, nj, nk)
     results["cases"]["ensemble_step"] = bench_ensemble_step(ni, nj, nk)
 
@@ -418,6 +438,38 @@ def bench_smoke(out_path: Path) -> None:
 
     out_path.write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {out_path}")
+
+
+def _vadv_boundary_metrics(nk: int) -> dict:
+    """The boundary-specialization signals of the interval-splitting case:
+    peeled-interval count, the carried-plane reduction of the interior
+    sweeps vs the verbatim lowering, the CSE hits attributable to
+    reassociation's commutative canonicalization, and the numpy tile plan."""
+    from repro.core import analysis
+    from repro.stencils.vadv import build_vadv_boundary
+
+    def detail(st, pass_name):
+        return next(
+            (r.get("detail", {}) for r in st.pass_report if r["pass"] == pass_name), {}
+        )
+
+    def carried(st):
+        plans = analysis.sequential_carry_plan(st.implementation_ir)
+        return sum(p.carried_planes(nk) for p in plans.values())
+
+    st = build_vadv_boundary("numpy")
+    st0 = build_vadv_boundary("numpy", opt_level=0)
+    st_noreassoc = build_vadv_boundary("numpy", disable_passes=("algebraic_reassociation",))
+    cse = detail(st, "cross_stage_cse").get("eliminated", 0)
+    cse_noreassoc = detail(st_noreassoc, "cross_stage_cse").get("eliminated", 0)
+    return {
+        "intervals_split": detail(st, "interval_splitting").get("intervals_split", 0),
+        "carried_planes_opt0": carried(st0),
+        "carried_planes_default": carried(st),
+        "carried_plane_reduction": carried(st0) - carried(st),
+        "reassoc_cse_hits": cse - cse_noreassoc,
+        "numpy_tiling": detail(st, "numpy_stage_tiling"),
+    }
 
 
 def bench_program_step(ni, nj, nk) -> dict:

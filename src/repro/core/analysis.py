@@ -391,8 +391,18 @@ def analyze(definition: ir.StencilDefinition, fuse: bool = False) -> ir.StencilI
 
     min_k = _check_vertical_bounds(definition)
     for block in definition.computations:
-        for ib in block.intervals:
+        ordered = sorted(block.intervals, key=lambda ib: ib.interval.start.key())
+        for ib in ordered:
             min_k = max(min_k, ib.interval.min_levels())
+        for a, b in zip(ordered, ordered[1:]):
+            ae, bs = a.interval.end, b.interval.start
+            if ae.level == ir.LevelMarker.START and bs.level == ir.LevelMarker.END:
+                # intervals validated under large-domain ordering: a START-
+                # relative end [.., START+x) before an END-relative start
+                # [END+y, ..) is only actually disjoint when nk + y >= x —
+                # without this, e.g. interval(0, 1) + interval(-1, None)
+                # silently execute the same level twice at nk == 1
+                min_k = max(min_k, ae.offset - bs.offset)
 
     impl = ir.StencilImplementation(
         name=definition.name,

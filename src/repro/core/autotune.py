@@ -42,6 +42,21 @@ DEFAULT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
     (16, 256),
 )
 
+# (TI, TJ) candidates for the tiled numpy backend (codegen_array stage
+# tiling): row-major arrays want long contiguous j-runs; the i side sets the
+# L2 working-set of a tile's live stage chain.
+DEFAULT_NUMPY_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (32, 64),
+    (32, 128),
+    (64, 128),
+    (64, 256),
+    (128, 128),
+)
+
+
+def _is_numpy_module(module) -> bool:
+    return getattr(module, "_BACKEND", None) == "numpy"
+
 # don't time tiles whose estimated footprint exceeds ~3/4 of a 16 MB VMEM core
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 
@@ -56,7 +71,8 @@ def candidate_blocks(
 ) -> List[Tuple[int, int]]:
     """Domain-clamped, VMEM-filtered, deduplicated candidate tiles."""
     ni, nj, nk = domain
-    cands = [tuple(c) for c in (candidates or DEFAULT_CANDIDATES)]
+    defaults = DEFAULT_NUMPY_CANDIDATES if _is_numpy_module(module) else DEFAULT_CANDIDATES
+    cands = [tuple(c) for c in (candidates or defaults)]
     default = tuple(getattr(module, "_BLOCK_DEFAULT", (8, 128)))
     if default not in cands:
         cands.insert(0, default)
@@ -83,8 +99,13 @@ def _synthetic_call_args(module, domain: Tuple[int, int, int], batch: Optional[i
     stencils (Thomas solvers) stay finite, with enough variation that no
     arithmetic folds away.  ``batch`` prepends a member axis to every field
     so batched runs are timed as they will execute (under ``jax.vmap``).
+    Numpy modules (``_BACKEND == 'numpy'``) get mutable host arrays — their
+    generated ``run`` writes fields in place.
     """
-    import jax.numpy as jnp
+    if _is_numpy_module(module):
+        jnp = np
+    else:
+        import jax.numpy as jnp
 
     ni, nj, nk = domain
     H = int(getattr(module, "_H", 0))
@@ -133,6 +154,25 @@ def _time_block(
     batch: Optional[int] = None,
 ) -> float:
     """Best-of-``iters`` wall time of one tiled call, in microseconds."""
+    if _is_numpy_module(module):
+        # synchronous host execution: nothing to block on, no batching.
+        # The generated run() writes fields in place, so each candidate gets
+        # a fresh copy of the synthetic data — otherwise recurrence stencils
+        # would drift values across candidates and bias the timings.
+        fields = {n: np.array(v, copy=True) for n, v in fields.items()}
+
+        def call():
+            module.run(fields, scalars, domain, origins, block=block)
+
+        for _ in range(max(1, warmup)):
+            call()
+        best = float("inf")
+        for _ in range(max(1, iters)):
+            t0 = time.perf_counter()
+            call()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
     import jax
 
     if batch is None:

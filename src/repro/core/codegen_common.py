@@ -27,7 +27,7 @@ their required extents, with origins shifted accordingly.
 from __future__ import annotations
 
 import io
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from . import ir
 
@@ -85,6 +85,12 @@ class ArrayExprPrinter:
         self.extent: ir.Extent = ir.Extent.zero()
         self.k0 = "_k0"
         self.k1 = "_k1"
+        # horizontal sub-ranges of the compute domain: ("0", "ni") covers the
+        # whole domain (the default); the numpy stage-tiling emitter rebinds
+        # these to the current tile's bounds ("_t0", "_t1") so every slice is
+        # evaluated tile-by-tile.
+        self.irange: Tuple[str, str] = ("0", "ni")
+        self.jrange: Tuple[str, str] = ("0", "nj")
         self.used_helpers: set = set()
         # demoted temporaries (ir.StencilImplementation.local_decls): bound as
         # plain block/plane variables — reads are the bare name (the demotion
@@ -98,10 +104,24 @@ class ArrayExprPrinter:
 
     # -- region slices ---------------------------------------------------------
 
+    @staticmethod
+    def _hbound(origin: str, bound: str, off: int) -> str:
+        if bound == "0":
+            return f"{origin}{_c(off)}"
+        return f"{origin} + {bound}{_c(off)}"
+
     def _hslices(self, name: str, di: int, dj: int) -> Tuple[str, str]:
         (ilo, ihi), (jlo, jhi), _ = self.extent.as_tuple()
-        si = f"_oi_{name}{_c(ilo + di)}:_oi_{name} + ni{_c(ihi + di)}"
-        sj = f"_oj_{name}{_c(jlo + dj)}:_oj_{name} + nj{_c(jhi + dj)}"
+        i0, i1 = self.irange
+        j0, j1 = self.jrange
+        si = (
+            f"{self._hbound(f'_oi_{name}', i0, ilo + di)}"
+            f":{self._hbound(f'_oi_{name}', i1, ihi + di)}"
+        )
+        sj = (
+            f"{self._hbound(f'_oj_{name}', j0, jlo + dj)}"
+            f":{self._hbound(f'_oj_{name}', j1, jhi + dj)}"
+        )
         return si, sj
 
     def _kslice(self, name: str, dk: int) -> str:

@@ -82,6 +82,44 @@ def _ms_touched(ms: ir.MultiStage) -> set:
     return touched
 
 
+def _masked_writes(impl: ir.StencilImplementation) -> set:
+    """Fields only ever written under an ``If`` keep their old value on the
+    false lanes — the kernel must start from the caller's data, not zeros."""
+    masked: set = set()
+    for ms in impl.multi_stages:
+        for itv in ms.intervals:
+            for st in itv.stages:
+                for stmt in st.stmts:
+                    if isinstance(stmt, ir.If):
+                        masked.update(ir.stmt_writes(stmt))
+    return masked
+
+
+def _written_k_coverage_full(impl: ir.StencilImplementation, name: str) -> bool:
+    """True when the union of vertical intervals writing ``name`` provably
+    covers the whole [START, END) axis (at representation level, so the
+    answer is domain-size independent; gaps that only close for specific nk
+    count as partial — conservative)."""
+    intervals = [
+        itv.interval
+        for ms in impl.multi_stages
+        for itv in ms.intervals
+        if any(name in st.writes for st in itv.stages)
+    ]
+    if not intervals:
+        return True
+    ivs = sorted(intervals, key=lambda iv: iv.start.key())
+    if ivs[0].start != ir.AxisBound(ir.LevelMarker.START, 0):
+        return False
+    end = ivs[0].end
+    for iv in ivs[1:]:
+        if iv.start.key() > end.key():
+            return False  # gap under large-domain ordering
+        if iv.end.key() > end.key():
+            end = iv.end
+    return end == ir.AxisBound(ir.LevelMarker.END, 0)
+
+
 def generate_pallas_source(
     impl: ir.StencilImplementation,
     block: Tuple[int, int] = (8, 128),
@@ -92,8 +130,18 @@ def generate_pallas_source(
     written_api = [w for w in writes if w in api_names]
     read_api = [f.name for f in impl.api_fields if f.name in reads]
     # API fields that are both read and written need their tile DMA'd in as
-    # the initial value of the functional in-kernel array.
-    inout_api = [n for n in written_api if n in reads]
+    # the initial value of the functional in-kernel array.  So do outputs
+    # whose writes don't provably cover the whole vertical axis, or that are
+    # only written under a mask: every other backend preserves the caller's
+    # values on unwritten planes / false lanes, and a zeros-initialized
+    # kernel array would clobber them (a divergence the backend-differential
+    # fuzzer caught on boundary-only outputs).
+    masked = _masked_writes(impl)
+    inout_api = [
+        n
+        for n in written_api
+        if n in reads or n in masked or not _written_k_coverage_full(impl, n)
+    ]
     input_api = [n for n in read_api if n not in written_api] + inout_api
 
     for n in written_api:

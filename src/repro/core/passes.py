@@ -10,27 +10,44 @@ and before/after IR statistics, surfaced to users through
 
 Pipeline (in application order; ``min_opt_level`` in parentheses)::
 
-    constant_folding   (3)  literal arithmetic + algebraic identities + dead branches
-    dead_temp_pruning  (2)  liveness fixpoint: drop unread temporaries and the
-                            stages that only feed them, shrink extents
-    interval_merging   (2)  merge adjacent k-intervals with identical stage bodies
-    multistage_fusion  (1)  fuse adjacent PARALLEL multi-stages so the Pallas
-                            backend keeps intermediates VMEM-resident
-    cross_stage_cse    (3)  hash subexpressions across the fused stages (modulo
-                            a uniform offset shift) and hoist repeats into new
-                            temporaries computed once
-    temp_demotion      (2)  demote single-interval, zero-offset temporaries to
-                            stage-local values (no field allocation / DMA)
+    constant_folding        (3)  literal arithmetic + algebraic identities + dead branches
+    dead_temp_pruning       (2)  liveness fixpoint: drop unread temporaries and the
+                                 stages that only feed them, shrink extents
+    interval_splitting      (1)  peel carry-free boundary intervals off sequential
+                                 sweeps into vectorized PARALLEL multi-stages so the
+                                 steady-state interior loop carries less state
+    interval_merging        (2)  merge adjacent k-intervals with identical stage bodies
+    multistage_fusion       (1)  fuse adjacent PARALLEL multi-stages so the Pallas
+                                 backend keeps intermediates VMEM-resident
+    algebraic_reassociation (2)  canonicalize commutative (and, with ``exact=False``,
+                                 associative) float chains so equivalent spellings
+                                 share one shape for cross_stage_cse to hit
+    cross_stage_cse         (3)  hash subexpressions across the fused stages (modulo
+                                 a uniform offset shift) and hoist repeats into new
+                                 temporaries computed once
+    temp_demotion           (2)  demote single-interval, zero-offset temporaries to
+                                 stage-local values (no field allocation / DMA)
 
-``opt_level`` semantics: 0 = verbatim lowering (no passes), 1 = fusion only,
-2 = + structural passes, 3 (default) = everything.  Individual passes toggle
-via ``backend_opts={"disable_passes": (...,)}`` / ``{"enable_passes": (...)}``.
+``opt_level`` semantics: 0 = verbatim lowering (no passes), 1 = fusion +
+interval splitting (+ numpy stage tiling, a backend-schedule pass living in
+``codegen_array.py``), 2 = + structural passes + reassociation, 3 (default)
+= everything.  Individual passes toggle via
+``backend_opts={"disable_passes": (...,)}`` / ``{"enable_passes": (...)}``;
+``backend_opts={"exact": False}`` additionally unlocks the value-changing
+(reassociating) rewrites of ``algebraic_reassociation``.
+
+The environment variables ``REPRO_OPT_LEVEL`` and ``REPRO_DISABLE_PASSES``
+(comma-separated pass names) shift the *defaults* seen by every stencil
+build in the process — the CI pass-matrix leg uses them to re-run the whole
+differential corpus with one pass knocked out, so a miscompiling pass fails
+with its name in the job title.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
@@ -38,6 +55,12 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 from . import analysis, ir
 
 DEFAULT_OPT_LEVEL = 3
+
+# Backend-schedule passes: toggled through the same ``opt_level`` /
+# ``disable_passes`` surface (and folded into the cache fingerprint via the
+# pass configuration) but applied inside a code generator rather than as an
+# IR → IR transform.  ``numpy_stage_tiling`` lives in ``codegen_array.py``.
+SCHEDULE_PASS_NAMES: Tuple[str, ...] = ("numpy_stage_tiling",)
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +84,10 @@ class PassContext:
     """Shared state of one pipeline run: configuration + per-pass records."""
 
     opt_level: int = DEFAULT_OPT_LEVEL
+    # IEEE-exact mode (default): passes may only apply bit-preserving
+    # rewrites.  ``exact=False`` (via backend_opts) additionally legalizes
+    # value-changing but algebraically-valid rewrites (reassociation).
+    exact: bool = True
     records: List[Dict[str, Any]] = field(default_factory=list)
     # per-pass structured detail (e.g. CSE's eliminated-occurrence count),
     # stashed by Pass.apply and folded into the next record
@@ -313,7 +340,146 @@ class DeadTempPruning(Pass):
 
 
 # ---------------------------------------------------------------------------
-# Pass 3: k-interval merging
+# Pass 3: vertical interval splitting (boundary specialization)
+# ---------------------------------------------------------------------------
+
+
+def _ms_writes(ms: ir.MultiStage) -> set:
+    return {w for itv in ms.intervals for st in itv.stages for w in st.writes}
+
+
+def _interval_carry_free(itv: ir.MultiStageInterval, writes: set) -> bool:
+    """True when no statement of ``itv`` reads a multi-stage-written field at
+    a nonzero vertical offset — the interval has no loop-carried input, so
+    its levels are independent of the sweep."""
+    for st in itv.stages:
+        for stmt in st.stmts:
+            for rname, off in ir.stmt_reads(stmt):
+                if off[2] != 0 and rname in writes:
+                    return False
+    return True
+
+
+class IntervalSplitting(Pass):
+    """Peel boundary intervals with no loop-carried input off FORWARD /
+    BACKWARD multi-stages into their own *PARALLEL* multi-stages — the
+    boundary specialization of the ROADMAP: the first/last levels of a sweep
+    (``interval(0, 1)`` inits, ``interval(-1, None)`` closures) usually seed
+    or drain the recurrence without depending on it, so they become
+    vectorized blocks and the steady-state interior ``fori_loop`` carries
+    only the true recurrence state.
+
+    Mechanics: intervals are considered in execution order (descending for
+    BACKWARD).  The leading run of *carry-free* intervals — no read of any
+    field written in this multi-stage at a nonzero vertical offset — is
+    peeled into a PARALLEL multi-stage placed before the remaining sweep;
+    the trailing run is peeled symmetrically after it.  A multi-stage whose
+    every interval is carry-free converts to PARALLEL outright (a "sweep"
+    with no recurrence at all).
+
+    Legality:
+
+    * Both the sequential and PARALLEL emitters execute one interval at a
+      time, stage by stage, so peeling whole intervals preserves statement
+      order exactly; within a carry-free interval, converting the per-level
+      loop to one vectorized block is observationally identical because no
+      statement reads multi-stage-written state at a vertical offset (and
+      horizontal reads never cross k-planes).
+    * Peeled intervals are mutually independent (disjoint k-slabs, no
+      carried reads), so each peeled run is re-sorted into ascending order —
+      this lets ``interval_merging`` re-merge identical boundary bodies that
+      a BACKWARD sweep stored descending.
+    * A peel may reclassify a sweep-local temporary as cross-multi-stage
+      state (``analysis.sequential_carry_plan`` would then carry it as a
+      full 3-D array instead of a rolling window).  Every candidate peel is
+      therefore checked against the carry plan of the whole stencil and
+      rejected if it would increase ``(full carries, window depth)``
+      lexicographically — splitting never pessimizes the k-blocked schedule.
+
+    The peeled-interval count is reported as ``intervals_split`` in the pass
+    record's ``detail`` (surfaced via ``exec_info["pass_report"]`` and the
+    smoke bench).
+    """
+
+    name = "interval_splitting"
+    min_opt_level = 1
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        detail = {"intervals_split": 0, "parallelized_sweeps": 0, "rejected_by_carry_guard": 0}
+        current = impl
+        changed = False
+        mi = 0
+        while mi < len(current.multi_stages):
+            ms = current.multi_stages[mi]
+            if ms.order == ir.IterationOrder.PARALLEL:
+                mi += 1
+                continue
+            pieces = self._peel(ms)
+            if pieces is None:
+                mi += 1
+                continue
+            trial = dataclasses.replace(
+                current,
+                multi_stages=current.multi_stages[:mi] + tuple(pieces) + current.multi_stages[mi + 1:],
+            )
+            if self._carry_totals(trial) > self._carry_totals(current):
+                detail["rejected_by_carry_guard"] += 1
+                mi += 1
+                continue
+            detail["intervals_split"] += sum(
+                len(p.intervals) for p in pieces if p.order == ir.IterationOrder.PARALLEL
+            )
+            if all(p.order == ir.IterationOrder.PARALLEL for p in pieces):
+                detail["parallelized_sweeps"] += 1
+            current = trial
+            changed = True
+            mi += len(pieces)
+        ctx.set_detail(detail)
+        if not changed:
+            return impl
+        # peeled intervals now run under PARALLEL extent semantics (vertical
+        # reads become real k-extents, not loop-carried) → re-analyze
+        return analysis.recompute_implementation(current)
+
+    @staticmethod
+    def _peel(ms: ir.MultiStage) -> Optional[List[ir.MultiStage]]:
+        writes = _ms_writes(ms)
+        flags = [_interval_carry_free(itv, writes) for itv in ms.intervals]
+        n = len(flags)
+        p = 0
+        while p < n and flags[p]:
+            p += 1
+        q = n
+        while q > p and flags[q - 1]:
+            q -= 1
+        if p == 0 and q == n:
+            return None  # nothing carry-free at either boundary
+
+        def parallel_piece(intervals) -> ir.MultiStage:
+            ordered = sorted(intervals, key=lambda itv: itv.interval.start.key())
+            return ir.MultiStage(ir.IterationOrder.PARALLEL, tuple(ordered))
+
+        pieces: List[ir.MultiStage] = []
+        if p:
+            pieces.append(parallel_piece(ms.intervals[:p]))
+        if q > p:
+            pieces.append(ir.MultiStage(ms.order, tuple(ms.intervals[p:q])))
+        if q < n:
+            pieces.append(parallel_piece(ms.intervals[q:]))
+        return pieces
+
+    @staticmethod
+    def _carry_totals(impl: ir.StencilImplementation) -> Tuple[int, int]:
+        """(full 3-D carries, summed window depth) across all sweeps — the
+        nk-independent lexicographic size of the carried state."""
+        plans = analysis.sequential_carry_plan(impl)
+        full = sum(len(p.full) for p in plans.values())
+        depth = sum(d for p in plans.values() for _, d in p.window)
+        return (full, depth)
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: k-interval merging
 # ---------------------------------------------------------------------------
 
 
@@ -327,6 +493,13 @@ class IntervalMerging(Pass):
     so the rewrite is domain-size independent.  For BACKWARD multi-stages the
     interval list is stored in execution (descending) order, so adjacency is
     checked in the reversed direction.
+
+    PARALLEL multi-stages additionally require the body to read no
+    body-written field at a nonzero vertical offset: per-interval execution
+    completes a writer stage over one slab before a reader stage looks up or
+    down within it, so merging the slabs would let the reader observe planes
+    the original schedule had not yet written (the ``t`` / ``t[0, 0, 1]``
+    miscompile the differential fuzzer caught).
     """
 
     name = "interval_merging"
@@ -336,9 +509,14 @@ class IntervalMerging(Pass):
         multi_stages: List[ir.MultiStage] = []
         for ms in impl.multi_stages:
             backward = ms.order == ir.IterationOrder.BACKWARD
+            parallel = ms.order == ir.IterationOrder.PARALLEL
             merged: List[ir.MultiStageInterval] = []
             for itv in ms.intervals:
-                if merged and ir.stages_structurally_equal(merged[-1].stages, itv.stages):
+                if (
+                    merged
+                    and ir.stages_structurally_equal(merged[-1].stages, itv.stages)
+                    and (not parallel or self._parallel_merge_safe(itv.stages))
+                ):
                     prev = merged[-1]
                     if not backward and ir.intervals_adjacent(prev.interval, itv.interval):
                         merged[-1] = ir.MultiStageInterval(
@@ -354,9 +532,20 @@ class IntervalMerging(Pass):
             multi_stages.append(ir.MultiStage(ms.order, tuple(merged)))
         return dataclasses.replace(impl, multi_stages=tuple(multi_stages))
 
+    @staticmethod
+    def _parallel_merge_safe(stages: Tuple[ir.Stage, ...]) -> bool:
+        """No vertical read of a body-written field → slab merge is exact."""
+        writes = {w for st in stages for w in st.writes}
+        for st in stages:
+            for stmt in st.stmts:
+                for rname, off in ir.stmt_reads(stmt):
+                    if off[2] != 0 and rname in writes:
+                        return False
+        return True
+
 
 # ---------------------------------------------------------------------------
-# Pass 4: multi-stage fusion
+# Pass 5: multi-stage fusion
 # ---------------------------------------------------------------------------
 
 
@@ -409,7 +598,129 @@ class MultiStageFusion(Pass):
 
 
 # ---------------------------------------------------------------------------
-# Pass 5: cross-stage common-subexpression elimination
+# Pass 6: algebraic reassociation / commutative canonicalization
+# ---------------------------------------------------------------------------
+
+_COMMUTATIVE_OPS = {"+", "*"}
+
+
+def _expr_sort_key(e: ir.Expr) -> Tuple:
+    """Deterministic structural ordering key for commutative canonicalization.
+
+    Field offsets participate as *numeric* tuples, so two operand lists that
+    differ only by a uniform offset shift sort into the same relative order —
+    which keeps this canonicalization composable with ``cross_stage_cse``'s
+    shift-canonical matching.
+    """
+    if isinstance(e, ir.Literal):
+        return ("0literal", e.dtype, repr(e.value))
+    if isinstance(e, ir.ScalarRef):
+        return ("1scalar", e.name)
+    if isinstance(e, ir.FieldAccess):
+        return ("2field", e.name, tuple(int(x) for x in e.offset))
+    if isinstance(e, ir.UnaryOp):
+        return ("3unary", e.op, _expr_sort_key(e.operand))
+    if isinstance(e, ir.BinOp):
+        return ("4bin", e.op, _expr_sort_key(e.left), _expr_sort_key(e.right))
+    if isinstance(e, ir.TernaryOp):
+        return (
+            "5ternary",
+            _expr_sort_key(e.cond),
+            _expr_sort_key(e.true_expr),
+            _expr_sort_key(e.false_expr),
+        )
+    if isinstance(e, ir.NativeCall):
+        return ("6call", e.func) + tuple(_expr_sort_key(a) for a in e.args)
+    if isinstance(e, ir.Cast):
+        return ("7cast", e.dtype, _expr_sort_key(e.expr))
+    return ("9other", repr(e))
+
+
+def _flatten_chain(e: ir.Expr, op: str) -> List[ir.Expr]:
+    if isinstance(e, ir.BinOp) and e.op == op:
+        return _flatten_chain(e.left, op) + _flatten_chain(e.right, op)
+    return [e]
+
+
+def _rebuild_chain(op: str, terms: List[ir.Expr]) -> ir.Expr:
+    out = terms[0]
+    for t in terms[1:]:
+        out = ir.BinOp(op, out, t)
+    return out
+
+
+class AlgebraicReassociation(Pass):
+    """Canonicalize commutative float chains so algebraically-equal spellings
+    share one structural shape, which is what ``cross_stage_cse`` hashes —
+    ``u * v`` and ``v * u`` (or k-shifted neighbor sums written in either
+    order) collapse into one hoisted temporary instead of two misses.
+
+    Two tiers, split by IEEE legality:
+
+    * **Commutative canonicalization** (always on): operands of ``+`` / ``*``
+      are ordered by a deterministic structural key.  IEEE-754 addition and
+      multiplication are commutative *including* rounding — ``a + b`` and
+      ``b + a`` produce the same bits — so this tier is exact and safe for
+      the bit-identical differential suite.
+    * **Reassociation** (only with ``backend_opts={"exact": False}``): whole
+      same-op chains are flattened, sorted, and rebuilt left-associated
+      (``a + (b + c)`` → ``(a + b) + c`` with sorted terms).  Changing the
+      association changes rounding, so users must explicitly waive bit
+      reproducibility — the flag travels with the pass configuration into
+      the cache fingerprint.
+
+    Node-rewrite counts surface as ``commuted`` / ``reassociated`` in the
+    pass record's ``detail``.
+    """
+
+    name = "algebraic_reassociation"
+    min_opt_level = 2
+
+    def apply(self, impl: ir.StencilImplementation, ctx: PassContext) -> ir.StencilImplementation:
+        counts = {"commuted": 0, "reassociated": 0, "exact": ctx.exact}
+        exact = ctx.exact
+
+        def canon(e: ir.Expr) -> ir.Expr:
+            if not (isinstance(e, ir.BinOp) and e.op in _COMMUTATIVE_OPS):
+                return e
+            if not exact:
+                terms = _flatten_chain(e, e.op)
+                if len(terms) > 2:
+                    rebuilt = _rebuild_chain(e.op, sorted(terms, key=_expr_sort_key))
+                    if rebuilt != e:
+                        counts["reassociated"] += 1
+                        return rebuilt
+                    return e
+            if _expr_sort_key(e.right) < _expr_sort_key(e.left):
+                counts["commuted"] += 1
+                return ir.BinOp(e.op, e.right, e.left)
+            return e
+
+        changed = False
+        multi_stages: List[ir.MultiStage] = []
+        for ms in impl.multi_stages:
+            intervals: List[ir.MultiStageInterval] = []
+            for itv in ms.intervals:
+                stages: List[ir.Stage] = []
+                for st in itv.stages:
+                    stmts = tuple(ir.map_stmt_exprs(s, canon) for s in st.stmts)
+                    if stmts != st.stmts:
+                        changed = True
+                        stages.append(ir.make_stage(stmts, st.compute_extent))
+                    else:
+                        stages.append(st)
+                intervals.append(ir.MultiStageInterval(itv.interval, tuple(stages)))
+            multi_stages.append(ir.MultiStage(ms.order, tuple(intervals)))
+        ctx.set_detail(counts)
+        if not changed:
+            return impl
+        # pure expression-shape rewrite: accesses, extents and liveness are
+        # untouched, so no re-analysis is needed
+        return dataclasses.replace(impl, multi_stages=tuple(multi_stages))
+
+
+# ---------------------------------------------------------------------------
+# Pass 7: cross-stage common-subexpression elimination
 # ---------------------------------------------------------------------------
 
 
@@ -730,7 +1041,7 @@ class CrossStageCSE(Pass):
 
 
 # ---------------------------------------------------------------------------
-# Pass 6: temporary demotion
+# Pass 8: temporary demotion
 # ---------------------------------------------------------------------------
 
 
@@ -818,13 +1129,18 @@ class TempDemotion(Pass):
 PIPELINE: Tuple[Pass, ...] = (
     ConstantFolding(),
     DeadTempPruning(),
+    IntervalSplitting(),
     IntervalMerging(),
     MultiStageFusion(),
+    AlgebraicReassociation(),
     CrossStageCSE(),
     TempDemotion(),
 )
 
 PASS_NAMES: Tuple[str, ...] = tuple(p.name for p in PIPELINE)
+# every name the disable/enable surface accepts (IR passes + the
+# backend-schedule passes applied inside the code generators)
+ALL_PASS_NAMES: Tuple[str, ...] = PASS_NAMES + SCHEDULE_PASS_NAMES
 
 
 def build_pipeline(
@@ -834,9 +1150,11 @@ def build_pipeline(
 ) -> List[Pass]:
     disable = set(disable)
     enable = set(enable)
-    unknown = (disable | enable) - set(PASS_NAMES)
+    unknown = (disable | enable) - set(ALL_PASS_NAMES)
     if unknown:
-        raise ValueError(f"unknown pass name(s) {sorted(unknown)}; available: {list(PASS_NAMES)}")
+        raise ValueError(
+            f"unknown pass name(s) {sorted(unknown)}; available: {list(ALL_PASS_NAMES)}"
+        )
     selected = []
     for p in PIPELINE:
         on = opt_level >= p.min_opt_level
@@ -849,14 +1167,34 @@ def build_pipeline(
     return selected
 
 
+def schedule_pass_enabled(
+    name: str,
+    opt_level: int = DEFAULT_OPT_LEVEL,
+    disable: Iterable[str] = (),
+    enable: Iterable[str] = (),
+    min_opt_level: int = 1,
+) -> bool:
+    """The ``build_pipeline`` on/off rule applied to a backend-schedule pass
+    (``SCHEDULE_PASS_NAMES``) — shared by the code generators so the toggle
+    surface stays uniform with the IR passes."""
+    assert name in SCHEDULE_PASS_NAMES, name
+    on = opt_level >= min_opt_level
+    if name in set(disable):
+        on = False
+    if name in set(enable):
+        on = True
+    return on
+
+
 def run_pipeline(
     impl: ir.StencilImplementation,
     opt_level: int = DEFAULT_OPT_LEVEL,
     disable: Iterable[str] = (),
     enable: Iterable[str] = (),
+    exact: bool = True,
 ) -> Tuple[ir.StencilImplementation, List[Dict[str, Any]]]:
     """Apply the configured passes; returns (optimized IR, pass report)."""
-    ctx = PassContext(opt_level=int(opt_level))
+    ctx = PassContext(opt_level=int(opt_level), exact=bool(exact))
     for p in build_pipeline(ctx.opt_level, disable, enable):
         impl = p(impl, ctx)
     return impl, ctx.records
@@ -866,13 +1204,25 @@ def split_backend_opts(backend_opts: Optional[Dict[str, Any]]) -> Tuple[Dict[str
     """Split ``backend_opts`` into (pass configuration, codegen options).
 
     Pass configuration keys: ``opt_level`` (int), ``disable_passes`` /
-    ``enable_passes`` (iterables of pass names).  Everything else goes to the
-    backend's source generator (e.g. the Pallas ``block`` shape).
+    ``enable_passes`` (iterables of pass names, including the
+    backend-schedule passes of ``SCHEDULE_PASS_NAMES``), and ``exact``
+    (bool; ``False`` legalizes value-changing rewrites like reassociation).
+    Everything else goes to the backend's source generator (e.g. the Pallas
+    ``block`` shape or the numpy ``tile``).
+
+    ``REPRO_OPT_LEVEL`` / ``REPRO_DISABLE_PASSES`` shift the process-wide
+    defaults (explicit per-stencil options still win for ``opt_level``;
+    env-disabled passes are unioned in) — the CI pass matrix runs the
+    differential suite through these.
     """
     opts = dict(backend_opts or {})
+    env_level = os.environ.get("REPRO_OPT_LEVEL", "")
+    default_level = int(env_level) if env_level else DEFAULT_OPT_LEVEL
+    env_disable = {p for p in os.environ.get("REPRO_DISABLE_PASSES", "").split(",") if p}
     cfg = {
-        "opt_level": int(opts.pop("opt_level", DEFAULT_OPT_LEVEL)),
-        "disable": tuple(sorted(opts.pop("disable_passes", ()))),
+        "opt_level": int(opts.pop("opt_level", default_level)),
+        "disable": tuple(sorted(set(opts.pop("disable_passes", ())) | env_disable)),
         "enable": tuple(sorted(opts.pop("enable_passes", ()))),
+        "exact": bool(opts.pop("exact", True)),
     }
     return cfg, opts

@@ -21,6 +21,10 @@ from .storage import Storage
 
 _AXIS_INDEX = {"I": 0, "J": 1, "K": 2}
 
+# distinguishes "tile not given" (schedule-pass default applies) from an
+# explicit ``tile=None`` (tiling off) in backend_opts
+_TILE_UNSET = object()
+
 # Orchestration-tracing hook (installed by ``repro.program.trace``): called at
 # the top of ``StencilObject.__call__`` so a ``@program`` tracer can intercept
 # calls made on traced field handles and record a dataflow node instead of
@@ -92,6 +96,9 @@ class StencilObject:
         self._autotune_cfg = dict(autotune_cfg or {})
         self._pinned_block = tuple(pinned_block) if pinned_block is not None else None
         self._block_cache: Dict[Tuple[int, int, int], Any] = {}
+
+        # tile-capable numpy module (stage tiling on): run() takes block=
+        self._numpy_tiled = backend == "numpy" and hasattr(module, "_BLOCK_DEFAULT")
 
         impl = implementation_ir
         kext = dict(impl.k_extents)
@@ -271,6 +278,17 @@ class StencilObject:
                 exec_info["schedule"] = getattr(self._module, "SCHEDULE", None)
                 if autotune_record is not None:
                     exec_info["autotune"] = autotune_record
+        elif self._numpy_tiled:
+            block, autotune_record = self._resolve_block(
+                domain, [(n, tuple(v.shape)) for n, v in raw_fields.items()]
+            )
+            if exec_info is not None:
+                exec_info["numpy_tile"] = dict(
+                    getattr(self._module, "_TILING", {}),
+                    block=tuple(block) if block else tuple(self._module._BLOCK_DEFAULT),
+                )
+                if autotune_record is not None:
+                    exec_info["autotune"] = autotune_record
 
         if exec_info is not None:
             exec_info["run_start_time"] = time.perf_counter()
@@ -282,7 +300,10 @@ class StencilObject:
                         f"{self.name}(): backend {self.backend!r} requires NumPy-backed fields; "
                         f"{n!r} is {type(v)} (use storage backend={self.backend!r})"
                     )
-            self._run(raw_fields, scalars, domain, origins)
+            if self._numpy_tiled:
+                self._run(raw_fields, scalars, domain, origins, block=block)
+            else:
+                self._run(raw_fields, scalars, domain, origins)
             result = None
         else:  # jax / pallas
             fn = self._jitted(domain, origins, block)
@@ -395,7 +416,11 @@ class StencilObject:
         raw = {n: self._raw(v) for n, v in fields.items()}
         if self.backend in ("debug", "numpy"):
             work = {n: np.array(v, copy=True) for n, v in raw.items()}
-            self._run(work, scalars, domain, origins)
+            if self._numpy_tiled:
+                block, _ = self._resolve_block(domain, [(n, tuple(v.shape)) for n, v in work.items()])
+                self._run(work, scalars, domain, origins, block=block)
+            else:
+                self._run(work, scalars, domain, origins)
             written = set(self.implementation_ir.written_api_fields())
             return {n: work[n] for n in self._field_order if n in written}
         block = None
@@ -495,15 +520,46 @@ def build_from_definition(
         for k in ("autotune", "autotune_candidates", "autotune_iters", "autotune_warmup")
         if k in codegen_opts
     }
+    user_tile = codegen_opts.get("tile", _TILE_UNSET)
+    if backend == "numpy":
+        # numpy stage tiling (a backend-schedule pass, codegen_array.py):
+        # explicit ``tile=(TI, TJ)`` pins it, ``tile=None`` disables it,
+        # otherwise it rides opt_level / disable_passes like every pass.
+        # The effective tile lands in ``codegen_opts`` before fingerprinting.
+        from .codegen_array import DEFAULT_NUMPY_TILE
+
+        if user_tile is _TILE_UNSET:
+            on = passes.schedule_pass_enabled(
+                "numpy_stage_tiling",
+                pass_cfg["opt_level"],
+                pass_cfg["disable"],
+                pass_cfg["enable"],
+            )
+            codegen_opts["tile"] = DEFAULT_NUMPY_TILE if on else None
     name = definition_ir.name
     impl = analysis.analyze(definition_ir)
     impl, pass_report = passes.run_pipeline(impl, **pass_cfg)
     fp = caching.fingerprint(definition_ir, backend, codegen_opts, pass_config=pass_cfg)
 
     if backend == "numpy":
-        from .codegen_array import generate_numpy_source
+        from .codegen_array import generate_numpy_source, tiling_plan
 
-        source = generate_numpy_source(impl)
+        tile = codegen_opts.get("tile")
+        source = generate_numpy_source(impl, tile=tile)
+        stats = passes.impl_stats(impl)
+        plan = tiling_plan(impl)
+        pass_report = list(pass_report) + [
+            {
+                "pass": "numpy_stage_tiling",
+                "seconds": 0.0,
+                "before": stats,
+                "after": stats,
+                "changed": tile is not None and plan["tiled_multistages"] > 0,
+                "detail": dict(
+                    plan, tile=tuple(tile) if tile else None, enabled=tile is not None
+                ),
+            }
+        ]
     elif backend == "jax":
         from .codegen_array import generate_jax_source
 
@@ -520,6 +576,12 @@ def build_from_definition(
         raise ValueError(f"unknown backend {backend!r} (expected debug|numpy|jax|pallas)")
 
     module = caching.load_generated_module(name, fp, source, rebuild=rebuild)
+    if backend == "pallas":
+        pinned = codegen_opts.get("block")
+    elif backend == "numpy" and user_tile is not _TILE_UNSET:
+        pinned = user_tile  # explicit tile pin always wins over the autotuner
+    else:
+        pinned = None
     return StencilObject(
         name=name,
         backend=backend,
@@ -532,5 +594,5 @@ def build_from_definition(
         pass_report=pass_report,
         module=module,
         autotune_cfg=autotune_cfg,
-        pinned_block=codegen_opts.get("block") if backend == "pallas" else None,
+        pinned_block=pinned,
     )

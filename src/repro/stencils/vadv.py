@@ -74,9 +74,50 @@ def vadv_system_defs(
         d = phi[0, 0, 0] + gcv_m * (phi[0, 0, 0] - phi[0, 0, -1])
 
 
+def vadv_boundary_defs(
+    wcon: Field[np.float64],
+    phi: Field[np.float64],
+    flux_bot: Field[np.float64],
+    flux_top: Field[np.float64],
+    acc: Field[np.float64],
+    res: Field[np.float64],
+    *,
+    weight: np.float64,
+):
+    """Boundary-specialized vertical sweep pair — the interval-splitting
+    motif: both sweeps seed/close at a domain boundary with carry-free
+    bodies (and boundary-only flux outputs), so ``interval_splitting`` peels
+    them into vectorized PARALLEL blocks and the interior ``fori_loop``
+    stops carrying the boundary fluxes.  The PARALLEL assembly deliberately
+    spells the same product two ways (``phi * wcon`` / ``wcon * phi``) —
+    the reassociation → CSE motif.
+    """
+    with computation(PARALLEL), interval(...):
+        p = phi * wcon + phi
+        q = wcon * phi + phi[1, 0, 0]
+        src = 0.5 * (p + q)
+    with computation(FORWARD):
+        with interval(0, 1):
+            flux_bot = 0.25 * (wcon[0, 0, 1] + wcon[0, 0, 0]) * src
+            acc = src + flux_bot
+        with interval(1, None):
+            acc = src + weight * acc[0, 0, -1]
+    with computation(BACKWARD):
+        with interval(-1, None):
+            flux_top = 0.25 * (wcon[0, 0, 0] + wcon[0, 0, -1]) * acc
+            res = acc + flux_top
+        with interval(0, -1):
+            res = acc + weight * res[0, 0, 1]
+
+
 @functools.lru_cache(maxsize=None)
 def build_vadv(backend: str = "numpy", dtype: str = "float64", **opts):
     return build_retyped(vadv_defs, backend, dtype, **opts)
+
+
+@functools.lru_cache(maxsize=None)
+def build_vadv_boundary(backend: str = "numpy", dtype: str = "float64", **opts):
+    return build_retyped(vadv_boundary_defs, backend, dtype, **opts)
 
 
 @functools.lru_cache(maxsize=None)

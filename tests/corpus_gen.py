@@ -1,0 +1,570 @@
+"""Deterministic stencil-program generator + IR↔JSON corpus serialization.
+
+The backend-differential fuzzer (``test_dsl_property.py``) needs two things
+from one generator so hypothesis-found failures can be frozen into CI
+regressions verbatim:
+
+* ``make_program(rng, name)`` — a seeded random ``ir.StencilDefinition``
+  drawing from eight templates that deliberately cover the pass pipeline's
+  attack surface: boundary vertical intervals (degenerate ``interval(0, 1)``
+  / ``interval(-1, None)`` edges), FORWARD/BACKWARD recurrences with
+  carry-free boundary inits (interval splitting's peel + its carry guard),
+  commuted repeated subexpressions (reassociation → CSE), temporaries,
+  horizontal offsets up to ±2, if/else (masked writes, zero-init temps),
+  and horizontal read-back of written API outputs (the stage-tiling
+  legality edge; pallas-incompatible by its static restriction — see
+  ``pallas_compatible``).
+* ``definition_to_json`` / ``definition_from_json`` — a stable corpus file
+  format.  ``python tests/corpus_gen.py`` (re)generates the committed
+  ``tests/corpus/prog_*.json`` set from fixed seeds; the corpus runs in CI
+  *without* hypothesis installed.
+
+Generated programs are legal by construction (the frontend/analysis checks
+are respected, not searched): vertical reads stay inside each interval's
+admissible range, sequential reads never look ahead of the sweep, and
+temporaries are written before read in program order.  All templates except
+``_t_api_feedback`` also respect the pallas written-API-horizontal-read
+restriction; the runner gates pallas per program via ``pallas_compatible``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import ir  # noqa: E402
+
+CORPUS_DIR = Path(__file__).resolve().parent / "corpus"
+N_PROGRAMS = 32  # 4 full cycles of the 8 templates
+# domain the differential runner uses; generators keep min_k_levels <= NK
+NI, NJ, NK = 6, 5, 7
+HALO = 6  # ±2 offsets chained through two temporaries
+
+START, END = ir.LevelMarker.START, ir.LevelMarker.END
+
+
+# ---------------------------------------------------------------------------
+# JSON serialization (corpus file format)
+# ---------------------------------------------------------------------------
+
+
+def _expr_to_json(e: ir.Expr):
+    if isinstance(e, ir.Literal):
+        return {"t": "lit", "v": e.value, "dtype": e.dtype}
+    if isinstance(e, ir.ScalarRef):
+        return {"t": "scalar", "name": e.name}
+    if isinstance(e, ir.FieldAccess):
+        return {"t": "fa", "name": e.name, "off": list(e.offset)}
+    if isinstance(e, ir.UnaryOp):
+        return {"t": "un", "op": e.op, "x": _expr_to_json(e.operand)}
+    if isinstance(e, ir.BinOp):
+        return {"t": "bin", "op": e.op, "l": _expr_to_json(e.left), "r": _expr_to_json(e.right)}
+    if isinstance(e, ir.TernaryOp):
+        return {
+            "t": "tern",
+            "c": _expr_to_json(e.cond),
+            "a": _expr_to_json(e.true_expr),
+            "b": _expr_to_json(e.false_expr),
+        }
+    if isinstance(e, ir.NativeCall):
+        return {"t": "call", "f": e.func, "args": [_expr_to_json(a) for a in e.args]}
+    raise TypeError(f"unserializable expr {type(e)}")
+
+
+def _expr_from_json(d) -> ir.Expr:
+    t = d["t"]
+    if t == "lit":
+        return ir.Literal(d["v"], d["dtype"])
+    if t == "scalar":
+        return ir.ScalarRef(d["name"])
+    if t == "fa":
+        return ir.FieldAccess(d["name"], tuple(d["off"]))
+    if t == "un":
+        return ir.UnaryOp(d["op"], _expr_from_json(d["x"]))
+    if t == "bin":
+        return ir.BinOp(d["op"], _expr_from_json(d["l"]), _expr_from_json(d["r"]))
+    if t == "tern":
+        return ir.TernaryOp(_expr_from_json(d["c"]), _expr_from_json(d["a"]), _expr_from_json(d["b"]))
+    if t == "call":
+        return ir.NativeCall(d["f"], tuple(_expr_from_json(a) for a in d["args"]))
+    raise TypeError(f"unknown expr tag {t!r}")
+
+
+def _stmt_to_json(s: ir.Stmt):
+    if isinstance(s, ir.Assign):
+        return {
+            "t": "assign",
+            "target": [s.target.name, list(s.target.offset)],
+            "value": _expr_to_json(s.value),
+        }
+    if isinstance(s, ir.If):
+        return {
+            "t": "if",
+            "cond": _expr_to_json(s.cond),
+            "body": [_stmt_to_json(b) for b in s.body],
+            "orelse": [_stmt_to_json(b) for b in s.orelse],
+        }
+    raise TypeError(f"unserializable stmt {type(s)}")
+
+
+def _stmt_from_json(d) -> ir.Stmt:
+    if d["t"] == "assign":
+        name, off = d["target"]
+        return ir.Assign(ir.FieldAccess(name, tuple(off)), _expr_from_json(d["value"]))
+    if d["t"] == "if":
+        return ir.If(
+            _expr_from_json(d["cond"]),
+            tuple(_stmt_from_json(b) for b in d["body"]),
+            tuple(_stmt_from_json(b) for b in d["orelse"]),
+        )
+    raise TypeError(f"unknown stmt tag {d['t']!r}")
+
+
+def _bound_to_json(b: ir.AxisBound):
+    return [b.level.name, b.offset]
+
+
+def _bound_from_json(d) -> ir.AxisBound:
+    return ir.AxisBound(ir.LevelMarker[d[0]], d[1])
+
+
+def definition_to_json(defn: ir.StencilDefinition) -> dict:
+    return {
+        "name": defn.name,
+        "fields": [
+            {"name": f.name, "dtype": f.dtype, "api": f.is_api} for f in defn.api_fields
+        ],
+        "scalars": [{"name": s.name, "dtype": s.dtype} for s in defn.scalars],
+        "computations": [
+            {
+                "order": block.order.name,
+                "intervals": [
+                    {
+                        "start": _bound_to_json(ib.interval.start),
+                        "end": _bound_to_json(ib.interval.end),
+                        "body": [_stmt_to_json(s) for s in ib.body],
+                    }
+                    for ib in block.intervals
+                ],
+            }
+            for block in defn.computations
+        ],
+    }
+
+
+def definition_from_json(d: dict) -> ir.StencilDefinition:
+    return ir.StencilDefinition(
+        name=d["name"],
+        api_fields=tuple(
+            ir.FieldDecl(f["name"], f["dtype"], ir.AXES_IJK, is_api=f["api"]) for f in d["fields"]
+        ),
+        scalars=tuple(ir.ScalarDecl(s["name"], s["dtype"]) for s in d["scalars"]),
+        computations=tuple(
+            ir.ComputationBlock(
+                order=ir.IterationOrder[block["order"]],
+                intervals=tuple(
+                    ir.IntervalBlock(
+                        ir.VerticalInterval(
+                            _bound_from_json(ib["start"]), _bound_from_json(ib["end"])
+                        ),
+                        tuple(_stmt_from_json(s) for s in ib["body"]),
+                    )
+                    for ib in block["intervals"]
+                ),
+            )
+            for block in d["computations"]
+        ),
+    )
+
+
+def load_program(path: Path) -> ir.StencilDefinition:
+    return definition_from_json(json.loads(Path(path).read_text()))
+
+
+# ---------------------------------------------------------------------------
+# Random expression generator
+# ---------------------------------------------------------------------------
+
+
+class Leaf:
+    """A readable field with its admissible horizontal/vertical offsets."""
+
+    def __init__(self, name: str, h: int = 2, dk: Sequence[int] = (0,)):
+        self.name = name
+        self.h = h  # max |di|, |dj|
+        self.dk = tuple(dk)
+
+
+def _offset(rng: np.random.Generator, leaf: Leaf) -> Tuple[int, int, int]:
+    def h() -> int:
+        return int(rng.integers(-leaf.h, leaf.h + 1)) if rng.random() < 0.4 else 0
+
+    dk = int(leaf.dk[rng.integers(len(leaf.dk))])
+    return (h(), h(), dk)
+
+
+def _lit(rng: np.random.Generator) -> ir.Literal:
+    return ir.Literal(round(float(rng.uniform(-2.0, 2.0)), 4), "float")
+
+
+def gen_expr(rng: np.random.Generator, leaves: Sequence[Leaf], depth: int) -> ir.Expr:
+    if depth <= 0 or rng.random() < 0.25:
+        r = rng.random()
+        if r < 0.6 and leaves:
+            leaf = leaves[rng.integers(len(leaves))]
+            return ir.FieldAccess(leaf.name, _offset(rng, leaf))
+        if r < 0.85:
+            return _lit(rng)
+        return ir.ScalarRef("s")
+    c = rng.random()
+    a = gen_expr(rng, leaves, depth - 1)
+    b = gen_expr(rng, leaves, depth - 1)
+    if c < 0.45:
+        return ir.BinOp(("+", "-", "*")[rng.integers(3)], a, b)
+    if c < 0.60:
+        return ir.NativeCall(("min", "max")[rng.integers(2)], (a, b))
+    if c < 0.70:
+        return ir.UnaryOp("-", a)
+    if c < 0.78:
+        return ir.NativeCall("abs", (a,))
+    if c < 0.88:
+        # division guarded away from zero (vectorized where-branches evaluate
+        # both sides, so even masked divisions must stay finite)
+        return ir.BinOp("/", a, ir.BinOp("+", ir.Literal(1.5, "float"), ir.NativeCall("abs", (b,))))
+    return ir.TernaryOp(ir.BinOp(">", a, ir.Literal(0.0, "float")), b, _lit(rng))
+
+
+def _assign(name: str, value: ir.Expr) -> ir.Assign:
+    return ir.Assign(ir.FieldAccess(name, (0, 0, 0)), value)
+
+
+def _maybe_if(rng: np.random.Generator, leaves: Sequence[Leaf], target: str) -> List[ir.Stmt]:
+    """A conditional update of ``target`` (already defined) — masked-write
+    machinery on the vectorized backends, real branches on debug."""
+    cond = ir.BinOp(">", gen_expr(rng, leaves, 1), ir.Literal(0.0, "float"))
+    body = (_assign(target, gen_expr(rng, leaves, 1)),)
+    orelse = (_assign(target, gen_expr(rng, leaves, 1)),) if rng.random() < 0.5 else ()
+    return [ir.If(cond, body, orelse)]
+
+
+def _interval(start: ir.AxisBound, end: ir.AxisBound, body: Sequence[ir.Stmt]) -> ir.IntervalBlock:
+    return ir.IntervalBlock(ir.VerticalInterval(start, end), tuple(body))
+
+
+def _definition(name: str, computations, temps=("t1", "t2"), outputs=("out1",)) -> ir.StencilDefinition:
+    fields = [ir.FieldDecl(n, "float64") for n in ("in1", "in2")]
+    fields += [ir.FieldDecl(n, "float64") for n in outputs]
+    fields += [ir.FieldDecl(n, "float64", is_api=False) for n in temps]
+    return ir.StencilDefinition(
+        name=name,
+        api_fields=tuple(fields),
+        scalars=(ir.ScalarDecl("s", "float64"),),
+        computations=tuple(computations),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Program templates
+# ---------------------------------------------------------------------------
+
+
+def _t_parallel_chain(rng: np.random.Generator, name: str) -> ir.StencilDefinition:
+    """PARALLEL temp chain with horizontal offsets and a conditional update."""
+    ins = [Leaf("in1"), Leaf("in2")]
+    body: List[ir.Stmt] = [_assign("t1", gen_expr(rng, ins, 2))]
+    body += [_assign("t2", gen_expr(rng, ins + [Leaf("t1")], 2))]
+    body += [_assign("out1", gen_expr(rng, [Leaf("t1"), Leaf("t2"), Leaf("in2")], 1))]
+    if rng.random() < 0.7:
+        body += _maybe_if(rng, [Leaf("t1", h=1), Leaf("in1", h=1)], "out1")
+    comp = ir.ComputationBlock(
+        ir.IterationOrder.PARALLEL, (_interval(ir.AxisBound(START), ir.AxisBound(END), body),)
+    )
+    return _definition(name, [comp])
+
+
+def _t_parallel_boundary(rng: np.random.Generator, name: str) -> ir.StencilDefinition:
+    """PARALLEL with specialized boundary intervals; the interior reads up and
+    down one level, boundary-only writes hit ``out2``."""
+    ins_mid = [Leaf("in1", dk=(-1, 0, 1)), Leaf("in2")]
+    bottom = [
+        _assign("t1", gen_expr(rng, [Leaf("in1", dk=(0, 1, 2))], 1)),
+        _assign("out1", gen_expr(rng, [Leaf("t1"), Leaf("in2")], 1)),
+        _assign("out2", gen_expr(rng, [Leaf("in1", dk=(0, 1))], 1)),
+    ]
+    interior = [
+        _assign("t1", gen_expr(rng, ins_mid, 2)),
+        _assign("out1", gen_expr(rng, [Leaf("t1"), Leaf("in2")], 1)),
+    ]
+    top = [
+        _assign("t1", gen_expr(rng, [Leaf("in1", dk=(-2, -1, 0))], 1)),
+        _assign("out1", gen_expr(rng, [Leaf("t1"), Leaf("in2")], 1)),
+        _assign("out2", gen_expr(rng, [Leaf("in1", dk=(-1, 0))], 1)),
+    ]
+    comp = ir.ComputationBlock(
+        ir.IterationOrder.PARALLEL,
+        (
+            _interval(ir.AxisBound(START, 0), ir.AxisBound(START, 1), bottom),
+            _interval(ir.AxisBound(START, 1), ir.AxisBound(END, -1), interior),
+            _interval(ir.AxisBound(END, -1), ir.AxisBound(END, 0), top),
+        ),
+    )
+    return _definition(name, [comp], temps=("t1",), outputs=("out1", "out2"))
+
+
+def _t_forward(rng: np.random.Generator, name: str) -> ir.StencilDefinition:
+    """FORWARD recurrence: boundary init (carry-free → peelable), interior
+    carrying ``out1[0, 0, -1]`` and a sweep-local temp read one plane back."""
+    ins = [Leaf("in1"), Leaf("in2", h=1)]
+    init = [
+        _assign("t1", gen_expr(rng, ins, 1)),
+        _assign("out1", gen_expr(rng, [Leaf("t1"), Leaf("in1", h=1)], 1)),
+    ]
+    w = round(float(rng.uniform(-0.9, 0.9)), 3)
+    step = [
+        _assign("t1", gen_expr(rng, ins, 1)),
+        _assign(
+            "out1",
+            ir.BinOp(
+                "+",
+                gen_expr(rng, [Leaf("t1", dk=(0, -1)), Leaf("in2", h=1)], 1),
+                ir.BinOp("*", ir.Literal(w, "float"), ir.FieldAccess("out1", (0, 0, -1))),
+            ),
+        ),
+    ]
+    intervals = [
+        _interval(ir.AxisBound(START, 0), ir.AxisBound(START, 1), init),
+        _interval(ir.AxisBound(START, 1), ir.AxisBound(END, 0), step),
+    ]
+    comp = ir.ComputationBlock(ir.IterationOrder.FORWARD, tuple(intervals))
+    return _definition(name, [comp], temps=("t1",))
+
+
+def _t_backward(rng: np.random.Generator, name: str) -> ir.StencilDefinition:
+    """BACKWARD recurrence with a carry-free top closure writing ``out2``."""
+    ins = [Leaf("in1"), Leaf("in2", h=1)]
+    top = [
+        _assign("out1", gen_expr(rng, ins, 1)),
+        _assign("out2", gen_expr(rng, [Leaf("in1", dk=(-1, 0))], 1)),
+    ]
+    w = round(float(rng.uniform(-0.9, 0.9)), 3)
+    step = [
+        _assign(
+            "out1",
+            ir.BinOp(
+                "+",
+                gen_expr(rng, ins, 1),
+                ir.BinOp("*", ir.Literal(w, "float"), ir.FieldAccess("out1", (0, 0, 1))),
+            ),
+        ),
+    ]
+    comp = ir.ComputationBlock(
+        ir.IterationOrder.BACKWARD,
+        (
+            _interval(ir.AxisBound(START, 0), ir.AxisBound(END, -1), step),
+            _interval(ir.AxisBound(END, -1), ir.AxisBound(END, 0), top),
+        ),
+    )
+    return _definition(name, [comp], temps=(), outputs=("out1", "out2"))
+
+
+def _t_mixed(rng: np.random.Generator, name: str) -> ir.StencilDefinition:
+    """PARALLEL assembly (with a deliberately commuted repeated product, the
+    reassociation → CSE motif) feeding a FORWARD sweep and a BACKWARD pass."""
+    assembly = [
+        _assign("t1", ir.BinOp("+", ir.BinOp("*", ir.FieldAccess("in1", (0, 0, 0)), ir.FieldAccess("in2", (0, 0, 0))), gen_expr(rng, [Leaf("in1")], 1))),
+        _assign("t2", ir.BinOp("+", ir.BinOp("*", ir.FieldAccess("in2", (0, 0, 0)), ir.FieldAccess("in1", (0, 0, 0))), gen_expr(rng, [Leaf("in2", h=1)], 1))),
+    ]
+    comp0 = ir.ComputationBlock(
+        ir.IterationOrder.PARALLEL,
+        (_interval(ir.AxisBound(START), ir.AxisBound(END), assembly),),
+    )
+    w = round(float(rng.uniform(-0.8, 0.8)), 3)
+    fwd = ir.ComputationBlock(
+        ir.IterationOrder.FORWARD,
+        (
+            _interval(
+                ir.AxisBound(START, 0),
+                ir.AxisBound(START, 1),
+                [_assign("out1", gen_expr(rng, [Leaf("t1"), Leaf("t2")], 1))],
+            ),
+            _interval(
+                ir.AxisBound(START, 1),
+                ir.AxisBound(END, 0),
+                [
+                    _assign(
+                        "out1",
+                        ir.BinOp(
+                            "+",
+                            gen_expr(rng, [Leaf("t1"), Leaf("t2")], 1),
+                            ir.BinOp(
+                                "*", ir.Literal(w, "float"), ir.FieldAccess("out1", (0, 0, -1))
+                            ),
+                        ),
+                    )
+                ],
+            ),
+        ),
+    )
+    bwd = ir.ComputationBlock(
+        ir.IterationOrder.BACKWARD,
+        (
+            _interval(
+                ir.AxisBound(START, 0),
+                ir.AxisBound(END, -1),
+                [
+                    _assign(
+                        "out2",
+                        ir.BinOp(
+                            "+",
+                            gen_expr(rng, [Leaf("t1")], 1),
+                            ir.BinOp(
+                                "*", ir.Literal(w, "float"), ir.FieldAccess("out2", (0, 0, 1))
+                            ),
+                        ),
+                    )
+                ],
+            ),
+            _interval(
+                ir.AxisBound(END, -1),
+                ir.AxisBound(END, 0),
+                [_assign("out2", gen_expr(rng, [Leaf("t1"), Leaf("t2")], 1))],
+            ),
+        ),
+    )
+    return _definition(name, [comp0, fwd, bwd], outputs=("out1", "out2"))
+
+
+def _t_carry_free_sweep(rng: np.random.Generator, name: str) -> ir.StencilDefinition:
+    """A FORWARD computation with no actual recurrence (reads inputs only) —
+    interval splitting converts it to PARALLEL outright."""
+    intervals = [
+        _interval(
+            ir.AxisBound(START, 0),
+            ir.AxisBound(START, 1),
+            [_assign("out1", gen_expr(rng, [Leaf("in1", dk=(0, 1)), Leaf("in2")], 2))],
+        ),
+        _interval(
+            ir.AxisBound(START, 1),
+            ir.AxisBound(END, 0),
+            [_assign("out1", gen_expr(rng, [Leaf("in1", dk=(-1, 0)), Leaf("in2")], 2))],
+        ),
+    ]
+    comp = ir.ComputationBlock(ir.IterationOrder.FORWARD, tuple(intervals))
+    return _definition(name, [comp], temps=())
+
+
+def _t_conditional(rng: np.random.Generator, name: str) -> ir.StencilDefinition:
+    """Zero-initialized temporary (conditional first write) + masked updates."""
+    ins = [Leaf("in1", h=1), Leaf("in2", h=1)]
+    body: List[ir.Stmt] = [
+        ir.If(
+            ir.BinOp(">", gen_expr(rng, ins, 1), ir.Literal(0.0, "float")),
+            (_assign("t1", gen_expr(rng, ins, 1)),),
+        ),
+        _assign("out1", ir.BinOp("+", ir.FieldAccess("t1", (0, 0, 0)), gen_expr(rng, ins, 1))),
+    ]
+    body += _maybe_if(rng, [Leaf("in2", h=1)], "out1")
+    comp = ir.ComputationBlock(
+        ir.IterationOrder.PARALLEL, (_interval(ir.AxisBound(START), ir.AxisBound(END), body),)
+    )
+    return _definition(name, [comp], temps=("t1",))
+
+
+def _t_api_feedback(rng: np.random.Generator, name: str) -> ir.StencilDefinition:
+    """Writes an API output, then reads it back at horizontal offsets through
+    a temp chain — legal on debug/numpy/jax (pallas statically rejects
+    written-API horizontal reads, see ``pallas_compatible``).  This is the
+    class ``numpy_stage_tiling`` must refuse to tile: API fields are written
+    with zero compute extent, so an offset/extended read would reach into a
+    neighboring tile's not-yet-written data (the miscompile the review of
+    this fuzzer caught)."""
+    ins = [Leaf("in1"), Leaf("in2", h=1)]
+    # the offset read-back of out1 is the load-bearing access — guaranteed,
+    # not left to the expression draw
+    feedback = ir.BinOp(
+        "+",
+        ir.FieldAccess("out1", (1, 0, 0)),
+        ir.FieldAccess("out1", (-1, int(rng.integers(-1, 2)), 0)),
+    )
+    body: List[ir.Stmt] = [
+        _assign("out1", gen_expr(rng, ins, 2)),
+        _assign("t1", ir.BinOp("+", feedback, gen_expr(rng, [Leaf("out1", h=1), Leaf("in1", h=1)], 1))),
+        # the t1 read is guaranteed too: a draw that ignored t1 would prune
+        # the whole feedback chain as dead and blind the case
+        _assign(
+            "out2",
+            ir.BinOp(
+                "+",
+                ir.FieldAccess("t1", (int(rng.integers(-1, 2)), 1, 0)),
+                gen_expr(rng, [Leaf("t1", h=1), Leaf("out1", h=0)], 1),
+            ),
+        ),
+    ]
+    comp = ir.ComputationBlock(
+        ir.IterationOrder.PARALLEL, (_interval(ir.AxisBound(START), ir.AxisBound(END), body),)
+    )
+    return _definition(name, [comp], temps=("t1",), outputs=("out1", "out2"))
+
+
+TEMPLATES = (
+    _t_parallel_chain,
+    _t_parallel_boundary,
+    _t_forward,
+    _t_backward,
+    _t_mixed,
+    _t_carry_free_sweep,
+    _t_conditional,
+    _t_api_feedback,
+)
+
+
+def pallas_compatible(defn: ir.StencilDefinition) -> bool:
+    """The pallas backend statically rejects written API fields read at
+    nonzero horizontal offsets — the differential runner skips pallas for
+    corpus programs exercising that (numpy/jax/debug-only) pattern."""
+    api = {f.name for f in defn.api_fields if f.is_api}
+    written: set = set()
+    reads: Dict[str, set] = {}
+    for block in defn.computations:
+        for ib in block.intervals:
+            for s in ib.body:
+                written.update(w for w in ir.stmt_writes(s) if w in api)
+                for rname, off in ir.stmt_reads(s):
+                    reads.setdefault(rname, set()).add(off)
+    return not any(
+        (off[0], off[1]) != (0, 0) for n in written for off in reads.get(n, ())
+    )
+
+
+def make_program(rng: np.random.Generator, name: str, template: Optional[int] = None) -> ir.StencilDefinition:
+    idx = int(rng.integers(len(TEMPLATES))) if template is None else template % len(TEMPLATES)
+    return TEMPLATES[idx](rng, name)
+
+
+def make_corpus(n: int = N_PROGRAMS) -> Dict[str, ir.StencilDefinition]:
+    """The deterministic corpus: ``n`` programs cycling the templates with
+    fixed seeds — regenerating yields byte-identical JSON."""
+    out: Dict[str, ir.StencilDefinition] = {}
+    for i in range(n):
+        name = f"prog_{i:02d}"
+        rng = np.random.default_rng(1000 + i)
+        out[name] = make_program(rng, name, template=i)
+    return out
+
+
+def main() -> None:
+    CORPUS_DIR.mkdir(exist_ok=True)
+    for name, defn in make_corpus().items():
+        path = CORPUS_DIR / f"{name}.json"
+        path.write_text(json.dumps(definition_to_json(defn), indent=1) + "\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -198,9 +198,41 @@ def test_program_fusion_and_eliminated_temporaries():
     # adv and the tridiagonal coefficients never materialize at program level
     assert set(rep["eliminated_temporaries"]) == {"adv", "a", "b", "c", "d"}
     assert rep["rotation"] == {"phi_new": "phi"}
-    # PARALLEL stages all fused into one multi-stage; FORWARD/BACKWARD remain
-    assert rep["group_multi_stages"] == [3]
+    # PARALLEL stages all fused into one multi-stage; FORWARD/BACKWARD remain,
+    # and interval_splitting peels the Thomas solver's carry-free boundary
+    # interval(s) into PARALLEL multi-stages of their own
+    assert rep["group_multi_stages"] == [4]
     assert [t["group"] for t in rep["node_timings"]] == [0]
+
+
+def test_program_groups_ride_pass_config():
+    """backend_opts thread into the fused groups' builds: fused programs
+    split/tile exactly like standalone stencils, and disabling a pass at
+    program scope disables it inside every merged group."""
+    advect, euler, diffuse, wsys, vsolve = _build_all("numpy")
+
+    def make(**opts):
+        @program(backend="numpy", name=f"climate_step_cfg_{sorted(opts.items())!r}", **opts)
+        def climate_step(phi, u, v, w, adv, phi_star, phi_h, a, b, c, d, phi_new, *, dt, dx, dy, dtdz, alpha):
+            advect(phi, u, v, adv, dx=dx, dy=dy, domain=DOM)
+            euler(phi, adv, phi_star, dt=dt, domain=DOM)
+            diffuse(phi_star, phi_h, alpha=alpha, domain=DOM)
+            wsys(w, phi_h, a, b, c, d, dtdz=dtdz, domain=DOM)
+            vsolve(a, b, c, d, phi_new, domain=DOM)
+            return {"phi": phi_new, "phi_new": phi}
+
+        p = _stores("numpy")
+        info = {}
+        climate_step(*[p[n] for n in FIELD_NAMES], **SCALARS, exec_info=info)
+        return info["program_report"], np.asarray(p["phi"]).copy()
+
+    rep_default, phi_default = make()
+    rep_nosplit, phi_nosplit = make(disable_passes=("interval_splitting",))
+    # the peel happens inside the merged group (4 multi-stages), and turning
+    # the pass off at program scope removes it (back to 3)
+    assert rep_default["group_multi_stages"] == [4]
+    assert rep_nosplit["group_multi_stages"] == [3]
+    np.testing.assert_array_equal(phi_default, phi_nosplit)
 
 
 def test_non_output_written_fields_persist_on_all_backends():
