@@ -264,11 +264,12 @@ def _ir_stats(st, nk: int) -> dict:
 def bench_smoke(out_path: Path) -> None:
     """Small stencil-suite matrix: unoptimized vs default pipeline on
     numpy/jax (float64 AND float32), plus the autotuned pallas schedule,
-    the orchestrated multi-stencil program step, and the vmap-batched
-    ensemble step — records wall time, the IR-quality deltas (autotuned
-    tile, CSE eliminations, carried planes), program fusion/DSE/exchange
-    metrics, the ensemble-vs-member-loop ratio, and a per-measurement
-    repeat so the run-to-run noise floor is visible in the artifact."""
+    the orchestrated multi-stencil program step, the vmap-batched ensemble
+    step, and the forecast-serving throughput case — records wall time, the
+    IR-quality deltas (autotuned tile, CSE eliminations, carried planes),
+    program fusion/DSE/exchange metrics, the ensemble-vs-member-loop ratio,
+    serving requests/s + p50/p99 latency, and a per-measurement repeat so
+    the run-to-run noise floor is visible in the artifact."""
     H = 3
     ni = nj = 48
     nk = 16
@@ -420,6 +421,7 @@ def bench_smoke(out_path: Path) -> None:
 
     results["cases"]["program_step"] = bench_program_step(ni, nj, nk)
     results["cases"]["ensemble_step"] = bench_ensemble_step(ni, nj, nk)
+    results["cases"]["serving_throughput"] = bench_serving(ni, nj, nk)
 
     noise = {}
     for cname, backends in results["cases"].items():
@@ -631,6 +633,73 @@ def bench_ensemble_step(ni, nj, nk, members: int = 8) -> dict:
         "shared_fields": rep["shared_fields"],
         "fingerprint": rep["fingerprint"],
     }
+
+
+def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: int = 2) -> dict:
+    """The forecast-serving case: N concurrent requests dynamic-batched onto
+    the ensemble member axis of one warm engine (in-process asyncio driver —
+    no websocket dependency, so this runs in the minimal bench-smoke env).
+    Durable signals: requests/s, p50/p99 request latency, batch occupancy."""
+    import asyncio
+
+    from repro.serving import RequestSpec, ServingEngine, drive_engine
+    from repro.stencils.forecast import build_forecast_step, make_forecast_fields, request_state
+
+    dom = (ni, nj, nk)
+    step = build_forecast_step("jax", dom, name="bench_forecast")
+    fields, scalars = make_forecast_fields("jax", dom)
+
+    async def run_load():
+        engine = ServingEngine(window_ms=10.0)
+        engine.register(
+            step,
+            fields=fields,
+            scalars=scalars,
+            request_fields=("phi",),
+            member_counts=(1, 2, 4, 8),
+            warm=True,
+            warm_chunk=stream_every,
+        )
+        specs = [
+            RequestSpec(
+                "bench_forecast",
+                {"phi": request_state(dom, seed=i + 1)},
+                steps=steps,
+                stream_every=stream_every,
+            )
+            for i in range(requests)
+        ]
+        async with engine:
+            first = await drive_engine(engine, specs, keep_fields="none")
+            repeat = await drive_engine(engine, specs, keep_fields="none")
+        return first, repeat, engine.stats()
+
+    first, repeat, stats = asyncio.run(run_load())
+    assert first.all_in_order and repeat.all_in_order
+
+    def pair(metric):
+        return {"us_per_call": metric(first), "us_repeat": metric(repeat)}
+
+    case = {
+        "jax": {
+            "request_wall": pair(lambda r: r.wall_s / r.requests * 1e6),
+            "p50": pair(lambda r: r.p50_ms * 1e3),
+            "p99": pair(lambda r: r.p99_ms * 1e3),
+        },
+        "requests": requests,
+        "steps": steps,
+        "stream_every": stream_every,
+        "requests_per_second": max(first.requests_per_second, repeat.requests_per_second),
+        "batch_occupancy": first.mean_occupancy,
+        "batches": stats["batches"],
+        "steps_streamed": stats["steps_streamed"],
+    }
+    best = min(first.requests_per_second, repeat.requests_per_second)
+    row(f"serving_p50_jax_{requests}req_{ni}x{nj}x{nk}", first.p50_ms * 1e3,
+        f"{case['requests_per_second']:.1f}req/s")
+    row(f"serving_p99_jax_{requests}req_{ni}x{nj}x{nk}", first.p99_ms * 1e3,
+        f"occupancy={first.mean_occupancy:.2f} worst={best:.1f}req/s")
+    return case
 
 
 def main() -> None:

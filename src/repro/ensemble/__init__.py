@@ -28,8 +28,10 @@ from .batch import (
     EnsembleError,
     broadcast,
     from_member_arrays,
+    gather_member,
     is_member_batched,
     member_view,
+    scatter_members,
     storage_for_domain,
 )
 from .compile import DistributedEnsemble, Ensemble
@@ -46,11 +48,13 @@ __all__ = [
     "broadcast",
     "build_ensemble_stats",
     "from_member_arrays",
+    "gather_member",
     "is_member_batched",
     "member_keys",
     "member_view",
     "normal_noise",
     "perturb",
+    "scatter_members",
     "spread_inflation",
     "stats_definition",
     "storage_for_domain",

@@ -138,6 +138,50 @@ def broadcast(value: Any, members: int, backend=None) -> Storage:
     )
 
 
+def scatter_members(arrays, members: int, *, template: Storage, backend=None) -> Storage:
+    """Scatter request-shaped arrays onto member slots of one batched storage.
+
+    The serving path: ``arrays[i]`` (a plain per-request array shaped like
+    ``template``) lands in member slot ``i``; slots ``len(arrays)..members-1``
+    are padded with copies of the LAST array.  Padding is free correctness-wise
+    because vmapped members are independent — padded members compute garbage
+    nobody gathers — and it lets a partial batch reuse the jit artifact of the
+    nearest tuned member count instead of compiling a new one per batch size.
+    """
+    arrays = list(arrays)
+    if not arrays:
+        raise EnsembleError("scatter_members() needs at least one request array")
+    if len(arrays) > int(members):
+        raise EnsembleError(f"cannot scatter {len(arrays)} requests onto {members} member slots")
+    for i, a in enumerate(arrays):
+        shape = tuple(np.asarray(a).shape)
+        if shape != tuple(template.shape):
+            raise EnsembleError(
+                f"request array {i} has shape {shape}, template field expects {tuple(template.shape)}"
+            )
+    pad = [arrays[-1]] * (int(members) - len(arrays))
+    return from_member_arrays(
+        arrays + pad,
+        backend=backend or template.backend,
+        default_origin=template.default_origin,
+        dtype=str(template.dtype),
+        axes=template.axes,
+    )
+
+
+def gather_member(batched, m: int) -> np.ndarray:
+    """Gather member ``m`` back out as a host numpy copy.
+
+    The inverse of :func:`scatter_members` — used by the serving engine to
+    peel request ``m``'s state out of a batched storage for streaming, so the
+    returned array must not alias device or batch memory."""
+    if isinstance(batched, Storage):
+        if not batched.is_member_batched:
+            raise EnsembleError(f"storage with axes {batched.axes} has no member axis to gather")
+        return np.array(np.asarray(batched.member(int(m)).data), copy=True)
+    return np.array(np.asarray(batched)[int(m)], copy=True)
+
+
 def member_view(batched: Storage, m: int) -> Storage:
     """The per-member storage for member ``m`` (copy-free on numpy)."""
     return batched.member(m)

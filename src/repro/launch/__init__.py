@@ -1,1 +1,3 @@
-"""Launch layer: production meshes, input specs, dry-run, train/serve drivers."""
+"""Launch layer: production meshes, input specs, dry-run, the train driver,
+and the forecast-serving driver (``python -m repro.launch.serve`` — the
+CLI over ``repro.serving``, docs/serving.md)."""

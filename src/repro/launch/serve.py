@@ -1,81 +1,123 @@
-"""Batched serving driver: prefill a batch of prompts, decode greedily.
+"""Forecast-serving driver: hold a compiled stencil program hot, batch
+concurrent requests onto the ensemble member axis, stream steps back.
 
-Demonstrates the serve path end-to-end on CPU with a reduced config::
+(This entrypoint used to be an LM prompt-decode demo; it now drives the
+``repro.serving`` subsystem — see docs/serving.md.)
 
-    PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
-        --batch 4 --prompt-len 32 --gen 32
+Serve the demo forecast program over websockets (needs aiohttp)::
+
+    PYTHONPATH=src python -m repro.launch.serve --port 8765
+
+In-process load test, no network or aiohttp needed::
+
+    PYTHONPATH=src python -m repro.launch.serve --load 8 --steps 10 --stream-every 2
+
+Print the catalog a client would see and exit::
+
+    PYTHONPATH=src python -m repro.launch.serve --dry
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import asyncio
+import json
+from typing import Tuple
 
 import repro  # noqa: F401
-from repro.configs import get_arch
-from repro.models import build_model
+from repro.serving import ProgramEntry, RequestSpec, ServingEngine, drive_engine
+from repro.stencils.forecast import build_forecast_step, make_forecast_fields, request_state
+
+
+def build_forecast_entry(
+    engine: ServingEngine,
+    *,
+    backend: str = "jax",
+    domain: Tuple[int, int, int] = (48, 48, 16),
+    member_counts: Tuple[int, ...] = (1, 2, 4, 8),
+    warm: bool = True,
+    warm_chunk: int = 1,
+) -> ProgramEntry:
+    """Register the demo forecast step (advect + euler + diffuse) — the
+    reusable builder examples/serve_forecast.py and the bench wrap."""
+    fields, scalars = make_forecast_fields(backend, domain)
+    step = build_forecast_step(backend, domain)
+    return engine.register(
+        step,
+        fields=fields,
+        scalars=scalars,
+        request_fields=("phi",),
+        member_counts=member_counts,
+        warm=warm,
+        warm_chunk=warm_chunk,
+    )
+
+
+async def _load_test(args: argparse.Namespace) -> None:
+    engine = ServingEngine(window_ms=args.window_ms)
+    domain = tuple(args.domain)
+    entry = build_forecast_entry(
+        engine, backend=args.backend, domain=domain, warm=True, warm_chunk=args.stream_every
+    )
+    specs = [
+        RequestSpec(
+            program=entry.name,
+            fields={"phi": request_state(domain, seed=i + 1)},
+            steps=args.steps,
+            stream_every=args.stream_every,
+        )
+        for i in range(args.load)
+    ]
+    async with engine:
+        report = await drive_engine(engine, specs, keep_fields="none")
+    s = report.summary()
+    print(
+        f"{args.load} concurrent requests x {args.steps} steps (stream_every={args.stream_every}) "
+        f"on {args.backend} {domain}"
+    )
+    print(
+        f"  {s['requests_per_second']:.1f} req/s  p50 {s['p50_ms']:.1f} ms  "
+        f"p99 {s['p99_ms']:.1f} ms  occupancy {s['mean_occupancy']:.2f}"
+    )
+    print(f"  in order: {report.all_in_order}   engine: {json.dumps(engine.stats())}")
+
+
+async def _serve(args: argparse.Namespace) -> None:
+    from repro.serving.server import ForecastServer
+
+    engine = ServingEngine(window_ms=args.window_ms)
+    build_forecast_entry(engine, backend=args.backend, domain=tuple(args.domain), warm=not args.no_warm)
+    async with ForecastServer(engine, host=args.host, port=args.port) as srv:
+        print(f"forecast server on {srv.ws_url}  (GET /programs for the catalog; ctrl-c to stop)")
+        await asyncio.Event().wait()
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
+    ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--backend", default="jax", choices=["jax", "pallas"])
+    ap.add_argument("--domain", type=int, nargs=3, default=[48, 48, 16], metavar=("NI", "NJ", "NK"))
+    ap.add_argument("--window-ms", type=float, default=2.0, help="batching window")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8765)
+    ap.add_argument("--no-warm", action="store_true", help="skip pre-jitting every member count")
+    ap.add_argument("--load", type=int, default=0, help="run an in-process load test with N requests")
+    ap.add_argument("--steps", type=int, default=10, help="(--load) steps per request")
+    ap.add_argument("--stream-every", type=int, default=2, help="(--load) stream cadence")
+    ap.add_argument("--dry", action="store_true", help="print the catalog and exit")
     args = ap.parse_args()
 
-    entry = get_arch(args.arch)
-    cfg = entry.reduced if args.reduced else entry.full
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(args.seed))
-
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(2, cfg.vocab, size=(args.batch, args.prompt_len)).astype(np.int32)
-    batch = {"tokens": jnp.asarray(prompts)}
-    if cfg.frontend == "vision":
-        batch["patches"] = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32))
-    if cfg.is_encdec:
-        batch["frames"] = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32))
-
-    max_len = args.prompt_len + args.gen
-    cache = model.make_cache(batch=args.batch, max_len=max_len)
-
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step, donate_argnums=(2,))
-
-    t0 = time.time()
-    logits, cache = prefill(params, batch, cache)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    tokens = jnp.argmax(logits, axis=-1)[:, None]
-    outputs = [tokens]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        step_batch = {"tokens": tokens}
-        if cfg.is_encdec:
-            step_batch["frames"] = batch["frames"]
-        logits, cache = decode(params, step_batch, cache)
-        tokens = jnp.argmax(logits, axis=-1)[:, None]
-        outputs.append(tokens)
-    jax.block_until_ready(outputs[-1])
-    t_decode = time.time() - t0
-
-    gen = np.concatenate([np.asarray(t) for t in outputs], axis=1)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
-    print(f"prefill: {t_prefill * 1e3:.1f} ms   decode: {t_decode * 1e3:.1f} ms "
-          f"({args.batch * (args.gen - 1) / max(t_decode, 1e-9):.1f} tok/s)")
-    print("sample generations (token ids):")
-    for row in gen[:2]:
-        print("  ", row[:16].tolist())
+    if args.dry:
+        engine = ServingEngine(window_ms=args.window_ms)
+        entry = build_forecast_entry(engine, backend=args.backend, domain=tuple(args.domain), warm=False)
+        print(json.dumps(entry.describe(), indent=2))
+        return
+    if args.load:
+        asyncio.run(_load_test(args))
+        return
+    try:
+        asyncio.run(_serve(args))
+    except KeyboardInterrupt:
+        pass
 
 
 if __name__ == "__main__":

@@ -1,0 +1,56 @@
+"""Forecast-as-a-service: compiled programs held hot, requests batched as
+ensemble members, per-step state streamed back.
+
+BEYOND PAPER.  The paper argues that embedding the stencil DSL in Python
+buys "integration in complex workflows"; this package cashes that in by
+*serving* compiled programs the way operational centers run them — a
+persistent compute server instead of a batch script::
+
+    from repro.serving import ServingEngine
+    from repro.stencils.forecast import build_forecast_step, make_forecast_fields
+
+    engine = ServingEngine(window_ms=2.0)
+    fields, scalars = make_forecast_fields("jax", (48, 48, 16))
+    step = build_forecast_step("jax", (48, 48, 16))
+    engine.register(step, fields=fields, scalars=scalars, request_fields=("phi",))
+    # async context: engine.forecast("forecast_step", {"phi": state}, steps=10)
+
+Modules: ``engine`` (admission + dynamic batching onto the ensemble member
+axis), ``protocol`` (JSON/base64 wire format, bit-exact float64), ``server``
+(aiohttp websocket transport, optional dependency), ``client`` (in-process
+and websocket drivers + the deterministic load generator).
+
+The contract: serving K concurrent requests through one vmapped batch is
+bit-identical (float64) to K sequential per-request program runs
+(tests/test_serving.py locks it against the PR-4 member-loop oracle).
+"""
+
+from . import client, protocol
+from .client import LoadReport, RequestResult, RequestSpec, drive_engine, drive_server, percentile
+from .engine import (
+    DEFAULT_MEMBER_COUNTS,
+    ForecastRequest,
+    ProgramEntry,
+    ServingEngine,
+    tuned_member_counts,
+)
+from .protocol import ServingError, decode_array, encode_array
+
+__all__ = [
+    "DEFAULT_MEMBER_COUNTS",
+    "ForecastRequest",
+    "LoadReport",
+    "ProgramEntry",
+    "RequestResult",
+    "RequestSpec",
+    "ServingEngine",
+    "ServingError",
+    "client",
+    "decode_array",
+    "drive_engine",
+    "drive_server",
+    "encode_array",
+    "percentile",
+    "protocol",
+    "tuned_member_counts",
+]

@@ -1,0 +1,219 @@
+"""Serving clients + the deterministic load generator.
+
+Two drivers share one request/report shape:
+
+* :func:`drive_engine` — in-process, pure asyncio against a
+  :class:`~repro.serving.engine.ServingEngine` (no aiohttp; this is what the
+  contract tests and the ``serving_throughput`` bench use, so the bench runs
+  in the minimal CI environment).
+* :func:`drive_server` — over a real websocket (aiohttp client) against a
+  running :class:`~repro.serving.server.ForecastServer`.
+
+Both issue all requests concurrently, record per-request latency
+(submit → done), assert streamed steps arrive strictly in order, and keep
+the streamed states so callers can verify bit-identity against sequential
+execution."""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .engine import ServingEngine
+from .protocol import ServingError, decode_event, dumps, encode_array, loads
+
+
+@dataclass
+class RequestSpec:
+    """One simulated client request."""
+
+    program: str
+    fields: Dict[str, np.ndarray]
+    scalars: Dict[str, Any] = field(default_factory=dict)
+    steps: int = 1
+    stream_every: int = 1
+    stats: bool = False
+    request_id: Optional[str] = None
+    fingerprint: Optional[str] = None
+
+
+@dataclass
+class RequestResult:
+    """What came back for one request."""
+
+    request_id: str
+    steps_seen: List[int]
+    final_fields: Dict[str, np.ndarray]
+    step_fields: Dict[int, Dict[str, np.ndarray]]
+    latency_s: float
+    occupancy: float
+    members: int
+
+    @property
+    def in_order(self) -> bool:
+        return self.steps_seen == sorted(self.steps_seen) and len(set(self.steps_seen)) == len(self.steps_seen)
+
+
+@dataclass
+class LoadReport:
+    """Aggregate view of one load-generator run."""
+
+    results: List[RequestResult]
+    wall_s: float
+
+    @property
+    def requests(self) -> int:
+        return len(self.results)
+
+    @property
+    def requests_per_second(self) -> float:
+        return self.requests / self.wall_s if self.wall_s > 0 else float("inf")
+
+    @property
+    def latencies_ms(self) -> List[float]:
+        return [r.latency_s * 1e3 for r in self.results]
+
+    @property
+    def p50_ms(self) -> float:
+        return percentile(self.latencies_ms, 50.0)
+
+    @property
+    def p99_ms(self) -> float:
+        return percentile(self.latencies_ms, 99.0)
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean([r.occupancy for r in self.results])) if self.results else 0.0
+
+    @property
+    def all_in_order(self) -> bool:
+        return all(r.in_order for r in self.results)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": self.requests,
+            "wall_s": self.wall_s,
+            "requests_per_second": self.requests_per_second,
+            "p50_ms": self.p50_ms,
+            "p99_ms": self.p99_ms,
+            "mean_occupancy": self.mean_occupancy,
+        }
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile — deterministic, no interpolation surprises."""
+    if not values:
+        return float("nan")
+    ordered = sorted(values)
+    rank = max(1, int(np.ceil(q / 100.0 * len(ordered))))
+    return float(ordered[min(rank, len(ordered)) - 1])
+
+
+def _fold_events(request_id: str, events: List[Dict[str, Any]], t0: float, keep: str) -> RequestResult:
+    steps_seen: List[int] = []
+    step_fields: Dict[int, Dict[str, np.ndarray]] = {}
+    final_fields: Dict[str, np.ndarray] = {}
+    occupancy, members, latency = 0.0, 0, time.perf_counter() - t0
+    for ev in events:
+        if ev["type"] == "error":
+            raise ServingError(ev["code"], ev["reason"])
+        if ev["type"] == "step":
+            steps_seen.append(int(ev["step"]))
+            if keep == "all":
+                step_fields[int(ev["step"])] = ev["fields"]
+            if keep in ("all", "final"):
+                final_fields = ev["fields"]
+        if ev["type"] == "done":
+            occupancy = float(ev["batch"]["occupancy"])
+            members = int(ev["batch"]["members"])
+            latency = float(ev.get("latency_s", latency))
+    return RequestResult(
+        request_id=request_id,
+        steps_seen=steps_seen,
+        final_fields=final_fields,
+        step_fields=step_fields,
+        latency_s=latency,
+        occupancy=occupancy,
+        members=members,
+    )
+
+
+async def drive_engine(
+    engine: ServingEngine, specs: Sequence[RequestSpec], *, keep_fields: str = "all"
+) -> LoadReport:
+    """Issue all specs concurrently against an in-process engine."""
+
+    async def one(i: int, spec: RequestSpec) -> RequestResult:
+        t0 = time.perf_counter()
+        req = engine.submit(
+            spec.program,
+            spec.fields,
+            spec.scalars,
+            steps=spec.steps,
+            stream_every=spec.stream_every,
+            fingerprint=spec.fingerprint,
+            request_id=spec.request_id or f"load-{i}",
+            stats=spec.stats,
+        )
+        events = [ev async for ev in engine.stream(req)]
+        return _fold_events(req.request_id, events, t0, keep_fields)
+
+    t0 = time.perf_counter()
+    results = await asyncio.gather(*(one(i, s) for i, s in enumerate(specs)))
+    return LoadReport(results=list(results), wall_s=time.perf_counter() - t0)
+
+
+async def drive_server(
+    url: str, specs: Sequence[RequestSpec], *, keep_fields: str = "all"
+) -> LoadReport:
+    """Issue all specs concurrently over one real websocket connection."""
+    try:
+        import aiohttp
+    except ImportError:
+        raise RuntimeError("drive_server needs aiohttp (pip install repro[serving])") from None
+
+    ids = [s.request_id or f"load-{i}" for i, s in enumerate(specs)]
+    events: Dict[str, List[Dict[str, Any]]] = {rid: [] for rid in ids}
+    done: Dict[str, asyncio.Event] = {rid: asyncio.Event() for rid in ids}
+    t0s: Dict[str, float] = {}
+
+    async with aiohttp.ClientSession() as session:
+        async with session.ws_connect(url) as ws:
+
+            async def reader() -> None:
+                async for raw in ws:
+                    if raw.type != aiohttp.WSMsgType.TEXT:
+                        continue
+                    ev = decode_event(loads(raw.data))
+                    rid = ev.get("request_id")
+                    if rid in events:
+                        events[rid].append(ev)
+                        if ev["type"] in ("done", "error"):
+                            done[rid].set()
+
+            pump = asyncio.get_running_loop().create_task(reader())
+            t0 = time.perf_counter()
+            for rid, spec in zip(ids, specs):
+                t0s[rid] = time.perf_counter()
+                frame = {
+                    "type": "forecast",
+                    "request_id": rid,
+                    "program": spec.program,
+                    "steps": spec.steps,
+                    "stream_every": spec.stream_every,
+                    "fields": {n: encode_array(a) for n, a in spec.fields.items()},
+                    "scalars": {n: float(v) for n, v in spec.scalars.items()},
+                    "stats": spec.stats,
+                }
+                if spec.fingerprint is not None:
+                    frame["fingerprint"] = spec.fingerprint
+                await ws.send_str(dumps(frame))
+            await asyncio.gather(*(d.wait() for d in done.values()))
+            wall = time.perf_counter() - t0
+            pump.cancel()
+    results = [_fold_events(rid, events[rid], t0s[rid], keep_fields) for rid in ids]
+    return LoadReport(results=results, wall_s=wall)

@@ -1,0 +1,561 @@
+"""Forecast-as-a-service engine: requests-as-members dynamic batching.
+
+The PR-4 ensemble machinery is a request batcher in disguise: vmapped members
+are *independent*, so K concurrent forecast requests can ride the member axis
+of ONE batched ``iterate`` dispatch instead of K sequential program calls.
+The engine holds compiled artifacts hot and turns a stream of websocket-sized
+requests into full batches:
+
+1. **Admission** — requests are admitted against a registered
+   :class:`ProgramEntry` keyed by the existing
+   ``caching.program_fingerprint``: unknown programs 404, stale fingerprints
+   409, wrong field shapes/dtypes 413, bad scalars/steps 422.  A request that
+   would trigger a recompile is *rejected at the door*, never silently
+   stalled behind a trace+jit.
+2. **Batching window** — a worker task takes the first queued request, then
+   keeps collecting until ``window_ms`` elapses (or the max member count is
+   reached).  Requests for the same program form one batch.
+3. **Padding to tuned member counts** — the batch is padded up to the nearest
+   registered member count (by default the counts with a persisted autotune
+   ``batch`` record, via :func:`tuned_member_counts`, plus small powers of
+   two) by repeating the last request's state.  Padded members compute
+   garbage nobody gathers; in exchange every dispatch reuses a warm,
+   possibly autotuned, jit artifact.
+4. **Segmented iterate + streaming** — the union of the batch's stream points
+   splits the horizon into segments; each segment is one vmapped
+   ``Ensemble.iterate`` dispatch, after which per-request member slices are
+   gathered (host copies) and streamed as ``step`` events.  Chunking is
+   bit-safe: ``iterate(a); iterate(b)`` ≡ ``iterate(a+b)`` ≡ the sequential
+   per-request loop, which the contract tests assert to 0 ULP in float64.
+
+The engine is pure asyncio + numpy/jax — no websocket dependency; transports
+(``serving.server``) and in-process drivers (``serving.client``) sit on top.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import itertools
+import json
+import time
+from dataclasses import dataclass, field as dc_field
+from typing import Any, AsyncIterator, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import caching
+from repro.core.storage import Storage
+from repro.ensemble import Ensemble
+from repro.ensemble import batch as ens_batch
+from repro.program.compile import ProgramObject
+from repro.runtime.loop import StragglerWatchdog
+
+from .protocol import (
+    FINGERPRINT_MISMATCH,
+    INTERNAL,
+    INVALID_VALUE,
+    SHAPE_MISMATCH,
+    UNKNOWN_PROGRAM,
+    ServingError,
+)
+
+#: padding targets always available, even with no autotune record on disk
+DEFAULT_MEMBER_COUNTS = (1, 2, 4, 8, 16)
+
+
+def tuned_member_counts(cp) -> List[int]:
+    """Member counts with a persisted autotune ``batch`` record.
+
+    The Pallas autotuner writes ``<name>_<fp>.tune.json`` next to each
+    generated group module (``caching.tuning_path``); records measured on
+    member-batched shapes carry the batch extent under ``"batch"``.  Those
+    extents are exactly the batch sizes the store holds a measured tile for,
+    so the engine prefers padding to them."""
+    counts = set()
+    for obj in getattr(cp, "group_objects", ()):
+        path = caching.tuning_path(obj.name, obj.fingerprint)
+        try:
+            store = json.loads(path.read_text())
+        except (OSError, ValueError):
+            continue
+        for rec in store.get("domains", {}).values():
+            b = rec.get("batch") if isinstance(rec, dict) else None
+            if b:
+                counts.add(int(b))
+    return sorted(counts)
+
+
+@dataclass
+class ForecastRequest:
+    """One admitted request: inputs plus the event queue results stream to."""
+
+    request_id: str
+    entry: "ProgramEntry"
+    steps: int
+    stream_every: int
+    fields: Dict[str, np.ndarray]
+    scalars: Dict[str, Any]
+    want_stats: bool = False
+    submitted_at: float = 0.0
+    events: "asyncio.Queue[Dict[str, Any]]" = dc_field(default_factory=asyncio.Queue)
+
+    def post(self, event: Dict[str, Any]) -> None:
+        self.events.put_nowait(event)
+
+
+class ProgramEntry:
+    """One registered program held hot: the compiled single-member artifact,
+    per-member-count ensembles, and the admission contract requests are
+    checked against."""
+
+    def __init__(
+        self,
+        engine: "ServingEngine",
+        prog: ProgramObject,
+        *,
+        fields: Dict[str, Storage],
+        scalars: Dict[str, Any],
+        request_fields: Sequence[str],
+        stream_fields: Optional[Sequence[str]] = None,
+        member_counts: Optional[Sequence[int]] = None,
+        max_steps: int = 10_000,
+    ):
+        if prog.backend not in ("jax", "pallas"):
+            raise ServingError(INTERNAL, f"serving requires a jax-family program, not {prog.backend!r}")
+        missing = [n for n in prog.field_params if n not in fields]
+        if missing:
+            raise ServingError(INTERNAL, f"register({prog.name!r}): missing template fields {missing}")
+        missing = [n for n in prog.scalar_params if n not in scalars]
+        if missing:
+            raise ServingError(INTERNAL, f"register({prog.name!r}): missing default scalars {missing}")
+        bad = [n for n in request_fields if n not in prog.field_params]
+        if bad:
+            raise ServingError(INTERNAL, f"register({prog.name!r}): unknown request fields {bad}")
+        self.engine = engine
+        self.prog = prog
+        self.name = prog.name
+        self.fields = {n: fields[n] for n in prog.field_params}
+        self.scalars = {n: scalars[n] for n in prog.scalar_params}
+        self.request_fields = tuple(request_fields)
+        self.stream_fields = tuple(stream_fields or request_fields)
+
+        # compile (or hit the cache for) the single-member artifact NOW —
+        # admission is a fingerprint check, never a recompile stall later
+        cp = prog.compiled(self.fields, self.scalars)
+        if cp.iterable_reason is not None:
+            raise ServingError(INTERNAL, f"program {prog.name!r} cannot be served: {cp.iterable_reason}")
+        self.cp = cp
+        self.fingerprint = cp.fingerprint
+
+        # everything the program writes must be member-batched (members would
+        # race on one buffer) — same classification the ensemble layer enforces
+        written = set(cp.written_buffers) | set(cp.outputs.values())
+        written |= {o for o in cp.outputs if o in self.fields}
+        self.batched_fields = tuple(
+            sorted(set(self.request_fields) | {b for b in written if b in self.fields})
+        )
+        self.shared_fields = tuple(n for n in prog.field_params if n not in self.batched_fields)
+
+        counts = list(member_counts) if member_counts else tuned_member_counts(cp) + list(DEFAULT_MEMBER_COUNTS)
+        self.member_counts = tuple(sorted({int(c) for c in counts if int(c) >= 1}))
+        if not self.member_counts:
+            raise ServingError(INTERNAL, f"register({prog.name!r}): empty member_counts")
+        self.max_batch = self.member_counts[-1]
+        self.max_steps = int(max_steps)
+        self.ensembles = {
+            m: Ensemble(prog, m, name=f"{self.name}_serve{m}") for m in self.member_counts
+        }
+
+    def pad_to(self, k: int) -> int:
+        """Smallest registered member count holding ``k`` live requests."""
+        for m in self.member_counts:
+            if m >= k:
+                return m
+        return self.max_batch
+
+    def admit_fields(self, fields: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        got, want = set(fields), set(self.request_fields)
+        if got != want:
+            missing, extra = sorted(want - got), sorted(got - want)
+            raise ServingError(
+                SHAPE_MISMATCH,
+                f"program {self.name!r} takes request fields {sorted(want)}"
+                + (f"; missing {missing}" if missing else "")
+                + (f"; unexpected {extra}" if extra else ""),
+            )
+        out = {}
+        for n in self.request_fields:
+            arr = np.asarray(fields[n])
+            tmpl = self.fields[n]
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ServingError(
+                    SHAPE_MISMATCH,
+                    f"field {n!r} has shape {tuple(arr.shape)}, program {self.name!r} is compiled "
+                    f"for {tuple(tmpl.shape)} — other geometries are not admitted (no recompile)",
+                )
+            if str(arr.dtype) != str(tmpl.dtype):
+                raise ServingError(
+                    SHAPE_MISMATCH, f"field {n!r} has dtype {arr.dtype}, program expects {tmpl.dtype}"
+                )
+            out[n] = arr
+        return out
+
+    def admit_scalars(self, scalars: Dict[str, Any]) -> Dict[str, Any]:
+        bad = [n for n in scalars if n not in self.scalars]
+        if bad:
+            raise ServingError(
+                INVALID_VALUE, f"unknown scalars {sorted(bad)}; program takes {sorted(self.scalars)}"
+            )
+        for n, v in scalars.items():
+            if np.ndim(v) != 0:
+                raise ServingError(INVALID_VALUE, f"scalar {n!r} must be a number, got shape {np.shape(v)}")
+        merged = dict(self.scalars)
+        merged.update({n: float(v) for n, v in scalars.items()})
+        return merged
+
+    def warm(self, chunk: int = 1) -> None:
+        """Pre-trace/jit every member count so the first real batch pays
+        dispatch cost only.  ``chunk`` should match the serving segment
+        length (``stream_every``) when known — the iterate jit is keyed on
+        the step count."""
+        sample = {n: np.asarray(self.fields[n].data) for n in self.request_fields}
+        for m in self.member_counts:
+            storages = self._batch_storages([sample], m)
+            self.ensembles[m].iterate(
+                int(chunk), *[storages[n] for n in self.prog.field_params], **self.scalars
+            )
+
+    def _batch_storages(self, request_fields: List[Dict[str, np.ndarray]], m: int) -> Dict[str, Storage]:
+        """Scatter K requests into member slots of fresh batched storages.
+
+        Request fields stack (+ pad) onto the member axis; written workspace
+        is broadcast fresh per batch (never reused — a batch must not see a
+        previous batch's scratch); shared read-only fields pass through as
+        the registered template storages, which the ensemble layer broadcasts
+        without materializing copies and never writes back."""
+        storages: Dict[str, Storage] = {}
+        for n in self.prog.field_params:
+            tmpl = self.fields[n]
+            if n in self.request_fields:
+                storages[n] = ens_batch.scatter_members([rf[n] for rf in request_fields], m, template=tmpl)
+            elif n in self.batched_fields:
+                storages[n] = ens_batch.broadcast(tmpl, m)
+            else:
+                storages[n] = tmpl
+        return storages
+
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "program": self.name,
+            "backend": self.prog.backend,
+            "fingerprint": self.fingerprint,
+            "request_fields": {
+                n: {"shape": list(self.fields[n].shape), "dtype": str(self.fields[n].dtype)}
+                for n in self.request_fields
+            },
+            "stream_fields": list(self.stream_fields),
+            "scalars": {n: float(v) for n, v in self.scalars.items()},
+            "member_counts": list(self.member_counts),
+            "max_steps": self.max_steps,
+        }
+
+
+def _segment_plan(requests: Sequence[ForecastRequest]) -> List[int]:
+    """Split the batch horizon at the union of every request's stream points
+    (multiples of its ``stream_every`` plus its final step), so each segment
+    is one fused dispatch and every emission lands on a segment boundary."""
+    points = sorted(
+        {
+            t
+            for r in requests
+            for t in itertools.chain(range(r.stream_every, r.steps + 1, r.stream_every), (r.steps,))
+        }
+    )
+    segments, prev = [], 0
+    for t in points:
+        segments.append(t - prev)
+        prev = t
+    return segments
+
+
+def _field_stats(arr: np.ndarray) -> Dict[str, float]:
+    return {"min": float(arr.min()), "max": float(arr.max()), "mean": float(arr.mean())}
+
+
+class ServingEngine:
+    """The asyncio compute server core: admission, batching, streaming."""
+
+    def __init__(self, *, window_ms: float = 2.0, straggler_factor: float = 3.0):
+        self.window_s = float(window_ms) / 1e3
+        self._programs: Dict[str, ProgramEntry] = {}
+        self._queue: "asyncio.Queue[ForecastRequest]" = asyncio.Queue()
+        self._worker: Optional[asyncio.Task] = None
+        self._request_ids = itertools.count()
+        self.watchdog = StragglerWatchdog(factor=straggler_factor)
+        self._stats: Dict[str, Any] = {
+            "requests": 0,
+            "batches": 0,
+            "dispatches": 0,
+            "steps_streamed": 0,
+            "padded_members": 0,
+            "live_members": 0,
+        }
+
+    # -- registration ------------------------------------------------------
+
+    def register(
+        self,
+        prog: ProgramObject,
+        *,
+        fields: Dict[str, Storage],
+        scalars: Dict[str, Any],
+        request_fields: Sequence[str],
+        stream_fields: Optional[Sequence[str]] = None,
+        member_counts: Optional[Sequence[int]] = None,
+        max_steps: int = 10_000,
+        warm: bool = False,
+        warm_chunk: int = 1,
+    ) -> ProgramEntry:
+        """Compile ``prog`` on the template ``fields``/``scalars`` and hold it
+        hot.  Only registered (program, geometry) pairs are ever admitted."""
+        entry = ProgramEntry(
+            self,
+            prog,
+            fields=fields,
+            scalars=scalars,
+            request_fields=request_fields,
+            stream_fields=stream_fields,
+            member_counts=member_counts,
+            max_steps=max_steps,
+        )
+        self._programs[entry.name] = entry
+        if warm:
+            entry.warm(warm_chunk)
+        return entry
+
+    def catalog(self) -> List[Dict[str, Any]]:
+        return [e.describe() for e in self._programs.values()]
+
+    # -- admission + submission --------------------------------------------
+
+    def admit(
+        self,
+        program: str,
+        fields: Dict[str, np.ndarray],
+        scalars: Optional[Dict[str, Any]] = None,
+        *,
+        steps: int = 1,
+        stream_every: int = 1,
+        fingerprint: Optional[str] = None,
+        request_id: Optional[str] = None,
+        stats: bool = False,
+    ) -> ForecastRequest:
+        entry = self._programs.get(program)
+        if entry is None:
+            raise ServingError(
+                UNKNOWN_PROGRAM, f"unknown program {program!r}; serving {sorted(self._programs)}"
+            )
+        if fingerprint is not None and fingerprint != entry.fingerprint:
+            raise ServingError(
+                FINGERPRINT_MISMATCH,
+                f"fingerprint {fingerprint} does not match served artifact {entry.fingerprint} "
+                f"for program {program!r} — refresh the catalog",
+            )
+        try:
+            steps, stream_every = int(steps), int(stream_every)
+        except (TypeError, ValueError):
+            raise ServingError(INVALID_VALUE, "steps and stream_every must be integers") from None
+        if not 1 <= steps <= entry.max_steps:
+            raise ServingError(INVALID_VALUE, f"steps must be in [1, {entry.max_steps}], got {steps}")
+        if stream_every < 1:
+            raise ServingError(INVALID_VALUE, f"stream_every must be >= 1, got {stream_every}")
+        return ForecastRequest(
+            request_id=request_id or f"req-{next(self._request_ids)}",
+            entry=entry,
+            steps=steps,
+            stream_every=stream_every,
+            fields=entry.admit_fields(fields),
+            scalars=entry.admit_scalars(dict(scalars or {})),
+            want_stats=bool(stats),
+        )
+
+    def submit(self, *args: Any, **kwargs: Any) -> ForecastRequest:
+        """Admit and enqueue (synchronous — admission errors raise here, so a
+        rejected request never occupies the batching window)."""
+        req = self.admit(*args, **kwargs)
+        req.submitted_at = time.perf_counter()
+        self._stats["requests"] += 1
+        self._ensure_worker()
+        self._queue.put_nowait(req)
+        req.post(
+            {
+                "type": "accepted",
+                "request_id": req.request_id,
+                "program": req.entry.name,
+                "fingerprint": req.entry.fingerprint,
+                "steps": req.steps,
+                "stream_every": req.stream_every,
+            }
+        )
+        return req
+
+    async def stream(self, req: ForecastRequest) -> AsyncIterator[Dict[str, Any]]:
+        """Yield this request's events until its terminal ``done``/``error``."""
+        while True:
+            ev = await req.events.get()
+            yield ev
+            if ev["type"] in ("done", "error"):
+                return
+
+    async def forecast(self, *args: Any, **kwargs: Any) -> AsyncIterator[Dict[str, Any]]:
+        """Submit + stream in one call (the in-process client convenience)."""
+        req = self.submit(*args, **kwargs)
+        async for ev in self.stream(req):
+            yield ev
+
+    # -- the batching worker ------------------------------------------------
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None or self._worker.done():
+            self._worker = asyncio.get_running_loop().create_task(self._run_worker())
+
+    async def _run_worker(self) -> None:
+        while True:
+            first = await self._queue.get()
+            batch = [first]
+            loop = asyncio.get_running_loop()
+            deadline = loop.time() + self.window_s
+            cap = max(e.max_batch for e in self._programs.values())
+            while len(batch) < cap:
+                remaining = deadline - loop.time()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(await asyncio.wait_for(self._queue.get(), remaining))
+                except asyncio.TimeoutError:
+                    break
+            groups: Dict[str, List[ForecastRequest]] = {}
+            for r in batch:
+                groups.setdefault(r.entry.name, []).append(r)
+            for reqs in groups.values():
+                entry = reqs[0].entry
+                for i in range(0, len(reqs), entry.max_batch):
+                    chunk = reqs[i : i + entry.max_batch]
+                    try:
+                        await self._run_batch(entry, chunk)
+                    except ServingError as e:
+                        for r in chunk:
+                            r.post(
+                                {
+                                    "type": "error",
+                                    "code": e.code,
+                                    "reason": e.reason,
+                                    "request_id": r.request_id,
+                                }
+                            )
+                    except Exception as e:  # noqa: BLE001 — the worker must survive any batch
+                        for r in chunk:
+                            r.post(
+                                {
+                                    "type": "error",
+                                    "code": INTERNAL,
+                                    "reason": f"{type(e).__name__}: {e}",
+                                    "request_id": r.request_id,
+                                }
+                            )
+
+    async def _run_batch(self, entry: ProgramEntry, requests: List[ForecastRequest]) -> None:
+        loop = asyncio.get_running_loop()
+        k = len(requests)
+        m = entry.pad_to(k)
+        ens = entry.ensembles[m]
+        batch_id = self._stats["batches"]
+        self._stats["batches"] += 1
+        self._stats["live_members"] += k
+        self._stats["padded_members"] += m
+        batch_info = {"id": batch_id, "members": m, "requests": k, "occupancy": k / m}
+
+        storages = entry._batch_storages([r.fields for r in requests], m)
+        scalars = _merge_scalars(entry, requests, m)
+        args = [storages[n] for n in entry.prog.field_params]
+
+        t = 0
+        for seg in _segment_plan(requests):
+            t0 = time.perf_counter()
+            await loop.run_in_executor(None, lambda seg=seg: ens.iterate(seg, *args, **scalars))
+            self.watchdog.record(self._stats["dispatches"], time.perf_counter() - t0)
+            self._stats["dispatches"] += 1
+            t += seg
+            for i, r in enumerate(requests):
+                if t > r.steps or (t % r.stream_every != 0 and t != r.steps):
+                    continue
+                gathered = {
+                    f: ens_batch.gather_member(storages[f], i) for f in entry.stream_fields
+                }
+                ev: Dict[str, Any] = {
+                    "type": "step",
+                    "request_id": r.request_id,
+                    "step": t,
+                    "fields": gathered,
+                    "batch": dict(batch_info),
+                }
+                if r.want_stats:
+                    ev["stats"] = {f: _field_stats(a) for f, a in gathered.items()}
+                r.post(ev)
+                self._stats["steps_streamed"] += 1
+        for r in requests:
+            r.post(
+                {
+                    "type": "done",
+                    "request_id": r.request_id,
+                    "steps": r.steps,
+                    "batch": dict(batch_info),
+                    "latency_s": time.perf_counter() - r.submitted_at,
+                }
+            )
+
+    # -- lifecycle / introspection ------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        out = dict(self._stats)
+        out["programs"] = sorted(self._programs)
+        out["mean_occupancy"] = (
+            self._stats["live_members"] / self._stats["padded_members"]
+            if self._stats["padded_members"]
+            else None
+        )
+        out["straggler"] = {
+            "dispatches": self.watchdog.stats.steps,
+            "stragglers": self.watchdog.stats.stragglers,
+            "median_s": self.watchdog.stats.median_s,
+        }
+        return out
+
+    async def aclose(self) -> None:
+        if self._worker is not None:
+            self._worker.cancel()
+            try:
+                await self._worker
+            except asyncio.CancelledError:
+                pass
+            self._worker = None
+
+    async def __aenter__(self) -> "ServingEngine":
+        return self
+
+    async def __aexit__(self, *exc: Any) -> None:
+        await self.aclose()
+
+
+def _merge_scalars(entry: ProgramEntry, requests: List[ForecastRequest], m: int) -> Dict[str, Any]:
+    """Per-request scalar overrides become per-member scalar arrays (length
+    ``m``, padded like the fields); a scalar every request agrees on stays
+    shared so the common case hits the all-shared jit specialization."""
+    out: Dict[str, Any] = {}
+    for name, default in entry.scalars.items():
+        vals = [r.scalars.get(name, default) for r in requests]
+        if all(v == vals[0] for v in vals[1:]):
+            out[name] = vals[0]
+        else:
+            out[name] = np.asarray(vals + [vals[-1]] * (m - len(vals)), dtype=np.float64)
+    return out

@@ -1,0 +1,142 @@
+"""Websocket transport for the forecast engine (aiohttp, optional dep).
+
+The engine (``serving.engine``) is transport-agnostic; this module exposes it
+over HTTP/websockets when ``aiohttp`` is installed (``pip install
+repro[serving]``):
+
+* ``GET /ws``       — the websocket endpoint speaking ``serving.protocol``
+* ``GET /healthz``  — liveness probe
+* ``GET /stats``    — engine counters (requests, batches, occupancy, stragglers)
+* ``GET /programs`` — the catalog, same payload as a ``programs`` frame
+
+Each connection may multiplex many requests: frames carry ``request_id`` and
+every request's events are streamed in submission order (one pump task per
+request; a per-connection send lock keeps frames whole)."""
+
+from __future__ import annotations
+
+import asyncio
+from typing import Any, Dict, Optional, Set
+
+try:
+    from aiohttp import WSMsgType, web
+except ImportError:  # pragma: no cover - exercised via _require_aiohttp
+    web = None
+    WSMsgType = None
+
+from . import protocol
+from .engine import ServingEngine
+from .protocol import ServingError
+
+
+def _require_aiohttp() -> None:
+    if web is None:
+        raise RuntimeError(
+            "the websocket transport needs aiohttp (pip install repro[serving]); "
+            "the engine itself (repro.serving.ServingEngine) has no such dependency"
+        )
+
+
+async def _send(ws, lock: asyncio.Lock, frame: Dict[str, Any]) -> None:
+    async with lock:
+        await ws.send_str(protocol.dumps(protocol.encode_event(frame)))
+
+
+async def _pump(engine: ServingEngine, req, ws, lock: asyncio.Lock) -> None:
+    """Stream one request's events to its connection until done/error."""
+    async for ev in engine.stream(req):
+        await _send(ws, lock, ev)
+
+
+async def _handle_frame(engine: ServingEngine, msg: Dict[str, Any], ws, lock, pumps: Set[asyncio.Task]):
+    kind = msg["type"]
+    if kind == "programs":
+        await _send(ws, lock, {"type": "catalog", "programs": engine.catalog()})
+        return
+    if kind != "forecast":
+        raise ServingError(protocol.BAD_REQUEST, f"unknown frame type {kind!r}")
+    kwargs = protocol.parse_forecast(msg)
+    program = kwargs.pop("program")
+    fields = kwargs.pop("fields")
+    scalars = kwargs.pop("scalars")
+    req = engine.submit(program, fields, scalars, **kwargs)
+    task = asyncio.get_running_loop().create_task(_pump(engine, req, ws, lock))
+    pumps.add(task)
+    task.add_done_callback(pumps.discard)
+
+
+def create_app(engine: ServingEngine) -> "web.Application":
+    _require_aiohttp()
+
+    async def ws_handler(request: "web.Request") -> "web.WebSocketResponse":
+        ws = web.WebSocketResponse()
+        await ws.prepare(request)
+        lock = asyncio.Lock()
+        pumps: Set[asyncio.Task] = set()
+        try:
+            async for raw in ws:
+                if raw.type != WSMsgType.TEXT:
+                    continue
+                request_id = None
+                try:
+                    msg = protocol.loads(raw.data)
+                    request_id = msg.get("request_id")
+                    await _handle_frame(engine, msg, ws, lock, pumps)
+                except ServingError as e:
+                    await _send(ws, lock, protocol.error_frame(e.code, e.reason, request_id))
+        finally:
+            for t in pumps:
+                t.cancel()
+        return ws
+
+    async def healthz(_request: "web.Request") -> "web.Response":
+        return web.json_response({"ok": True})
+
+    async def stats(_request: "web.Request") -> "web.Response":
+        return web.json_response(engine.stats())
+
+    async def programs(_request: "web.Request") -> "web.Response":
+        return web.json_response({"programs": engine.catalog()})
+
+    app = web.Application()
+    app.router.add_get("/ws", ws_handler)
+    app.router.add_get("/healthz", healthz)
+    app.router.add_get("/stats", stats)
+    app.router.add_get("/programs", programs)
+    return app
+
+
+class ForecastServer:
+    """Engine + aiohttp app bound to a host:port (0 → ephemeral, see
+    ``.port`` after ``start()``)."""
+
+    def __init__(self, engine: ServingEngine, *, host: str = "127.0.0.1", port: int = 0):
+        _require_aiohttp()
+        self.engine = engine
+        self.host = host
+        self.port = port
+        self._runner: Optional["web.AppRunner"] = None
+
+    async def start(self) -> "ForecastServer":
+        self._runner = web.AppRunner(create_app(self.engine))
+        await self._runner.setup()
+        site = web.TCPSite(self._runner, self.host, self.port)
+        await site.start()
+        self.port = site._server.sockets[0].getsockname()[1]
+        return self
+
+    @property
+    def ws_url(self) -> str:
+        return f"ws://{self.host}:{self.port}/ws"
+
+    async def stop(self) -> None:
+        if self._runner is not None:
+            await self._runner.cleanup()
+            self._runner = None
+        await self.engine.aclose()
+
+    async def __aenter__(self) -> "ForecastServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc: Any) -> None:
+        await self.stop()

@@ -5,7 +5,8 @@ limiter, implicit vertical advection) plus a library of reusable operators,
 mirroring how the paper's isentropic model (Tasmania) composes stencils.
 """
 
-from . import hdiff, library, vadv
+from . import forecast, hdiff, library, vadv
+from .forecast import build_forecast_step, make_forecast_fields
 from .hdiff import build_hdiff, hdiff_defs
 from .library import (
     avg_x,
@@ -19,8 +20,11 @@ from .vadv import build_vadv, vadv_defs
 
 __all__ = [
     "library",
+    "forecast",
     "hdiff",
     "vadv",
+    "build_forecast_step",
+    "make_forecast_fields",
     "laplacian",
     "gradx",
     "grady",

@@ -1,0 +1,197 @@
+"""Websocket transport contract tests (repro.serving.server / .client).
+
+Skipped entirely when aiohttp is absent — the transport is an optional
+extra (``pip install repro[serving]``); the engine-level contract lives in
+tests/test_serving.py with no such dependency.  Everything here crosses a
+real socket: base64 array frames must round-trip float64 bit-exactly, events
+must arrive per-request in order, and admission errors must come back as
+typed ``error`` frames, not closed connections."""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+aiohttp = pytest.importorskip("aiohttp")
+
+import repro  # noqa: F401,E402
+from repro.core.storage import Storage  # noqa: E402
+from repro.serving import RequestSpec, ServingEngine, protocol  # noqa: E402
+from repro.serving.client import drive_server  # noqa: E402
+from repro.serving.server import ForecastServer  # noqa: E402
+from repro.stencils.forecast import (  # noqa: E402
+    FIELD_NAMES,
+    build_forecast_step,
+    make_forecast_fields,
+    request_state,
+)
+
+DOM = (12, 10, 5)
+
+
+@pytest.fixture(scope="module")
+def step():
+    return build_forecast_step("jax", DOM, name="ws_step")
+
+
+@pytest.fixture(scope="module")
+def templates():
+    return make_forecast_fields("jax", DOM)
+
+
+def serve(step, templates, coro_fn):
+    """Run ``coro_fn(server)`` against a live server on an ephemeral port."""
+    fields, scalars = templates
+
+    async def go():
+        engine = ServingEngine(window_ms=25.0)
+        engine.register(
+            step,
+            fields=fields,
+            scalars=scalars,
+            request_fields=("phi",),
+            member_counts=(1, 2, 4),
+        )
+        async with ForecastServer(engine) as srv:
+            return await coro_fn(srv)
+
+    return asyncio.run(go())
+
+
+def sequential(step, templates, phi0, steps):
+    fields, scalars = templates
+    f = {
+        n: Storage(np.asarray(s.data).copy(), backend="jax", default_origin=s.default_origin, axes=s.axes)
+        for n, s in fields.items()
+    }
+    f["phi"].data = np.asarray(phi0).copy()
+    for _ in range(steps):
+        step(*[f[n] for n in FIELD_NAMES], **scalars)
+    return np.asarray(f["phi"].data)
+
+
+# ---------------------------------------------------------------------------
+# protocol: arrays must survive the wire bit-exactly
+# ---------------------------------------------------------------------------
+
+
+def test_array_codec_is_bit_exact():
+    rng = np.random.default_rng(0)
+    arr = rng.normal(size=(7, 5, 3))  # float64, full precision
+    back = protocol.decode_array(protocol.encode_array(arr))
+    assert back.dtype == arr.dtype and back.shape == arr.shape
+    assert np.abs(back - arr).max() == 0.0
+    assert back.tobytes() == arr.tobytes()
+
+
+def test_array_codec_rejects_garbage():
+    for bad in ("nope", {"shape": [2]}, {"shape": [4], "dtype": "float64", "data": "AAAA"}):
+        with pytest.raises(protocol.ServingError) as ei:
+            protocol.decode_array(bad)
+        assert ei.value.code == 400
+
+
+# ---------------------------------------------------------------------------
+# the websocket contract: accepted → ordered steps → done
+# ---------------------------------------------------------------------------
+
+
+def test_forecast_over_websocket_bit_identical(step, templates):
+    phi0 = request_state(DOM, seed=3)
+
+    async def scenario(srv):
+        async with aiohttp.ClientSession() as s, s.ws_connect(srv.ws_url) as ws:
+            await ws.send_str(
+                protocol.dumps(
+                    {
+                        "type": "forecast",
+                        "request_id": "r1",
+                        "program": "ws_step",
+                        "steps": 3,
+                        "stream_every": 1,
+                        "stats": True,
+                        "fields": {"phi": protocol.encode_array(phi0)},
+                    }
+                )
+            )
+            frames = []
+            while True:
+                frames.append(protocol.loads((await ws.receive()).data))
+                if frames[-1]["type"] in ("done", "error"):
+                    return frames
+
+    frames = serve(step, templates, scenario)
+    assert [f["type"] for f in frames] == ["accepted", "step", "step", "step", "done"]
+    assert all(f["request_id"] == "r1" for f in frames)
+    assert frames[0]["fingerprint"] and frames[0]["steps"] == 3
+    steps = [f for f in frames if f["type"] == "step"]
+    assert [f["step"] for f in steps] == [1, 2, 3]
+    for f in steps:
+        got = protocol.decode_array(f["fields"]["phi"])
+        ref = sequential(step, templates, phi0, f["step"])
+        assert np.abs(got - ref).max() == 0.0  # bit-identical across the wire
+        assert set(f["stats"]["phi"]) == {"min", "max", "mean"}
+        assert set(f["batch"]) == {"id", "members", "requests", "occupancy"}
+    assert frames[-1]["latency_s"] > 0
+
+
+def test_catalog_and_admission_errors_over_websocket(step, templates):
+    async def scenario(srv):
+        out = {}
+        async with aiohttp.ClientSession() as s:
+            async with s.ws_connect(srv.ws_url) as ws:
+                await ws.send_str(protocol.dumps({"type": "programs"}))
+                out["catalog"] = protocol.loads((await ws.receive()).data)
+                await ws.send_str("this is not json")
+                out["not_json"] = protocol.loads((await ws.receive()).data)
+                await ws.send_str(protocol.dumps({"type": "wat"}))
+                out["bad_type"] = protocol.loads((await ws.receive()).data)
+                await ws.send_str(
+                    protocol.dumps(
+                        {
+                            "type": "forecast",
+                            "request_id": "nope-1",
+                            "program": "no_such_program",
+                            "fields": {"phi": protocol.encode_array(np.zeros((2, 2, 2)))},
+                        }
+                    )
+                )
+                out["unknown"] = protocol.loads((await ws.receive()).data)
+            async with s.get(f"http://{srv.host}:{srv.port}/healthz") as r:
+                out["healthz"] = await r.json()
+            async with s.get(f"http://{srv.host}:{srv.port}/stats") as r:
+                out["stats"] = await r.json()
+        return out
+
+    out = serve(step, templates, scenario)
+    cat = out["catalog"]
+    assert cat["type"] == "catalog"
+    (entry,) = cat["programs"]
+    assert entry["program"] == "ws_step" and entry["member_counts"] == [1, 2, 4]
+    assert entry["request_fields"]["phi"]["dtype"] == "float64"
+    assert out["not_json"]["type"] == "error" and out["not_json"]["code"] == 400
+    assert out["bad_type"]["code"] == 400
+    assert out["unknown"]["code"] == 404 and out["unknown"]["request_id"] == "nope-1"
+    assert out["healthz"] == {"ok": True}
+    assert out["stats"]["requests"] == 0  # nothing was admitted
+
+
+def test_load_generator_over_websocket(step, templates):
+    """The deterministic load-generator smoke: N concurrent ws clients,
+    streamed steps in order, final states bit-identical to sequential."""
+    n = 5
+    specs = [
+        RequestSpec("ws_step", {"phi": request_state(DOM, seed=i + 1)}, steps=4, stream_every=2)
+        for i in range(n)
+    ]
+
+    async def scenario(srv):
+        return await drive_server(srv.ws_url, specs)
+
+    rep = serve(step, templates, scenario)
+    assert rep.requests == n and rep.all_in_order
+    assert [r.steps_seen for r in rep.results] == [[2, 4]] * n
+    assert rep.p99_ms >= rep.p50_ms > 0 and rep.mean_occupancy > 0
+    for spec, res in zip(specs, rep.results):
+        ref = sequential(step, templates, spec.fields["phi"], 4)
+        assert np.abs(res.final_fields["phi"] - ref).max() == 0.0
