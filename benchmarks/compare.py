@@ -39,8 +39,14 @@ from pathlib import Path
 from typing import Dict, Tuple
 
 #: labels that are extreme order statistics — gated at a widened threshold
+#: (substring match, so "p99_faulted" widens like "p99": the faulted tail
+#: additionally rides the retry/bisect schedule, noisier still)
 TAIL_LABELS = ("p99",)
 TAIL_FACTOR = 2.0
+
+
+def is_tail_label(label: str) -> bool:
+    return any(t in label for t in TAIL_LABELS)
 
 
 def collect(results: dict) -> Dict[Tuple[str, str, str], float]:
@@ -105,7 +111,7 @@ def main() -> int:
     for key in shared:
         raw = ratios[key]
         norm = raw / machine
-        widen = TAIL_FACTOR if key[2] in TAIL_LABELS else 1.0
+        widen = TAIL_FACTOR if is_tail_label(key[2]) else 1.0
         flag = ""
         if norm > args.threshold * widen:
             flag = f"REGRESSION (>{args.threshold * widen:.2f}x normalized)"

@@ -639,18 +639,37 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
     """The forecast-serving case: N concurrent requests dynamic-batched onto
     the ensemble member axis of one warm engine (in-process asyncio driver —
     no websocket dependency, so this runs in the minimal bench-smoke env).
-    Durable signals: requests/s, p50/p99 request latency, batch occupancy."""
+    Durable signals: requests/s, p50/p99 request latency, batch occupancy —
+    plus a *faulted* variant of the same workload with a 10% injected
+    dispatch-failure rate, recording the recovered-request rate and the p99
+    under retry/bisect (what resilience costs the tail when things break)."""
     import asyncio
 
-    from repro.serving import RequestSpec, ServingEngine, drive_engine
+    from repro.serving import FaultInjector, RequestSpec, ServingEngine, drive_engine
     from repro.stencils.forecast import build_forecast_step, make_forecast_fields, request_state
 
     dom = (ni, nj, nk)
     step = build_forecast_step("jax", dom, name="bench_forecast")
     fields, scalars = make_forecast_fields("jax", dom)
 
-    async def run_load():
-        engine = ServingEngine(window_ms=10.0)
+    def make_specs():
+        return [
+            RequestSpec(
+                "bench_forecast",
+                {"phi": request_state(dom, seed=i + 1)},
+                steps=steps,
+                stream_every=stream_every,
+            )
+            for i in range(requests)
+        ]
+
+    async def run_load(faults=None, retry_attempts=3):
+        engine = ServingEngine(
+            window_ms=10.0,
+            faults=faults if faults is not None else FaultInjector(),
+            retry_attempts=retry_attempts,
+            retry_backoff_ms=2.0,
+        )
         engine.register(
             step,
             fields=fields,
@@ -660,31 +679,30 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
             warm=True,
             warm_chunk=stream_every,
         )
-        specs = [
-            RequestSpec(
-                "bench_forecast",
-                {"phi": request_state(dom, seed=i + 1)},
-                steps=steps,
-                stream_every=stream_every,
-            )
-            for i in range(requests)
-        ]
         async with engine:
-            first = await drive_engine(engine, specs, keep_fields="none")
-            repeat = await drive_engine(engine, specs, keep_fields="none")
+            first = await drive_engine(engine, make_specs(), keep_fields="none")
+            repeat = await drive_engine(engine, make_specs(), keep_fields="none")
         return first, repeat, engine.stats()
 
     first, repeat, stats = asyncio.run(run_load())
     assert first.all_in_order and repeat.all_in_order
 
-    def pair(metric):
-        return {"us_per_call": metric(first), "us_repeat": metric(repeat)}
+    # the same workload on a chaos-armed engine: 10% of dispatches fail and
+    # must be absorbed by retry (and, for poison-like streaks, bisect)
+    f_first, f_repeat, f_stats = asyncio.run(
+        run_load(faults=FaultInjector(sites=("dispatch",), rate=0.10, seed=42), retry_attempts=6)
+    )
 
+    def pair(a, b, metric):
+        return {"us_per_call": metric(a), "us_repeat": metric(b)}
+
+    recovered = min(f_first.recovered_rate, f_repeat.recovered_rate)
     case = {
         "jax": {
-            "request_wall": pair(lambda r: r.wall_s / r.requests * 1e6),
-            "p50": pair(lambda r: r.p50_ms * 1e3),
-            "p99": pair(lambda r: r.p99_ms * 1e3),
+            "request_wall": pair(first, repeat, lambda r: r.wall_s / r.requests * 1e6),
+            "p50": pair(first, repeat, lambda r: r.p50_ms * 1e3),
+            "p99": pair(first, repeat, lambda r: r.p99_ms * 1e3),
+            "p99_faulted": pair(f_first, f_repeat, lambda r: r.p99_ms * 1e3),
         },
         "requests": requests,
         "steps": steps,
@@ -693,12 +711,21 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
         "batch_occupancy": first.mean_occupancy,
         "batches": stats["batches"],
         "steps_streamed": stats["steps_streamed"],
+        "faulted": {
+            "dispatch_fault_rate": 0.10,
+            "recovered_rate": recovered,
+            "retries": f_stats["retries"],
+            "bisects": f_stats["bisects"],
+            "requests_per_second": min(f_first.requests_per_second, f_repeat.requests_per_second),
+        },
     }
     best = min(first.requests_per_second, repeat.requests_per_second)
     row(f"serving_p50_jax_{requests}req_{ni}x{nj}x{nk}", first.p50_ms * 1e3,
         f"{case['requests_per_second']:.1f}req/s")
     row(f"serving_p99_jax_{requests}req_{ni}x{nj}x{nk}", first.p99_ms * 1e3,
         f"occupancy={first.mean_occupancy:.2f} worst={best:.1f}req/s")
+    row(f"serving_p99_faulted_jax_{requests}req_{ni}x{nj}x{nk}", f_first.p99_ms * 1e3,
+        f"recovered={recovered:.2f} retries={f_stats['retries']} bisects={f_stats['bisects']}")
     return case
 
 

@@ -15,16 +15,29 @@ In-process load test, no network or aiohttp needed::
 Print the catalog a client would see and exit::
 
     PYTHONPATH=src python -m repro.launch.serve --dry
+
+Run under the process supervisor (spawn → probe /healthz → restart with
+backoff → give up on a crash loop)::
+
+    PYTHONPATH=src python -m repro.launch.serve --supervise --port 8765
+
+The server itself shuts down gracefully on SIGTERM: /healthz flips to 503
+(``DRAINING``), new requests are rejected, queued and in-flight work is
+finished (bounded by ``--drain-timeout``), then the process exits 0 — the
+supervisor treats that as a deliberate stop, not a crash.
 """
 
 from __future__ import annotations
 
 import argparse
 import asyncio
+import functools
 import json
+import signal
 from typing import Tuple
 
 import repro  # noqa: F401
+from repro.runtime.supervise import RestartPolicy, Supervisor, http_ready
 from repro.serving import ProgramEntry, RequestSpec, ServingEngine, drive_engine
 from repro.stencils.forecast import build_forecast_step, make_forecast_fields, request_state
 
@@ -87,9 +100,46 @@ async def _serve(args: argparse.Namespace) -> None:
 
     engine = ServingEngine(window_ms=args.window_ms)
     build_forecast_entry(engine, backend=args.backend, domain=tuple(args.domain), warm=not args.no_warm)
+    stop = asyncio.Event()
+    loop = asyncio.get_running_loop()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        loop.add_signal_handler(sig, stop.set)
     async with ForecastServer(engine, host=args.host, port=args.port) as srv:
-        print(f"forecast server on {srv.ws_url}  (GET /programs for the catalog; ctrl-c to stop)")
-        await asyncio.Event().wait()
+        print(f"forecast server on {srv.ws_url}  (GET /programs for the catalog; SIGTERM drains)", flush=True)
+        await stop.wait()
+        # graceful drain: /healthz flips to DRAINING (503), new submits are
+        # rejected, queued + in-flight requests finish before we exit 0
+        print(f"draining (timeout {args.drain_timeout}s) ...", flush=True)
+        await engine.drain(timeout_s=args.drain_timeout)
+
+
+def _supervise(args: argparse.Namespace) -> None:
+    """Parent mode: spawn the server as a child of this interpreter, probe
+    /healthz until ready, restart with backoff when it dies, give up on a
+    crash loop (SupervisorGaveUp propagates)."""
+    child_args = ["--backend", args.backend, "--domain", *map(str, args.domain),
+                  "--window-ms", str(args.window_ms), "--host", args.host,
+                  "--port", str(args.port), "--drain-timeout", str(args.drain_timeout)]
+    if args.no_warm:
+        child_args.append("--no-warm")
+    from repro.runtime.supervise import serve_command
+
+    url = f"http://{args.host}:{args.port}/healthz"
+    sup = Supervisor(
+        serve_command(child_args),
+        probe=functools.partial(http_ready, url),
+        policy=RestartPolicy(),
+        ready_timeout_s=args.ready_timeout,
+    )
+
+    def _forward(signum, _frame):
+        sup.stop()
+        raise SystemExit(0)
+
+    signal.signal(signal.SIGTERM, _forward)
+    signal.signal(signal.SIGINT, _forward)
+    print(f"supervising forecast server (probe {url})", flush=True)
+    sup.run_forever()
 
 
 def main() -> None:
@@ -104,6 +154,12 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=10, help="(--load) steps per request")
     ap.add_argument("--stream-every", type=int, default=2, help="(--load) stream cadence")
     ap.add_argument("--dry", action="store_true", help="print the catalog and exit")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the server as a supervised child (restart with backoff)")
+    ap.add_argument("--drain-timeout", type=float, default=10.0,
+                    help="seconds to finish in-flight work on SIGTERM before exiting")
+    ap.add_argument("--ready-timeout", type=float, default=120.0,
+                    help="(--supervise) seconds for /healthz to come up before counting a crash")
     args = ap.parse_args()
 
     if args.dry:
@@ -113,6 +169,9 @@ def main() -> None:
         return
     if args.load:
         asyncio.run(_load_test(args))
+        return
+    if args.supervise:
+        _supervise(args)
         return
     try:
         asyncio.run(_serve(args))

@@ -1,7 +1,27 @@
 """Fault-tolerant distributed runtime: train state/step, restartable loop,
-straggler watchdog, gradient compression."""
+straggler watchdog, process supervision, gradient compression."""
 
 from .loop import TrainState, Trainer, make_train_step
 from .compression import int8_compress, int8_decompress
+from .supervise import (
+    RestartPolicy,
+    StragglerWatchdog,
+    Supervisor,
+    SupervisorGaveUp,
+    WatchdogStats,
+    http_ready,
+)
 
-__all__ = ["TrainState", "Trainer", "make_train_step", "int8_compress", "int8_decompress"]
+__all__ = [
+    "RestartPolicy",
+    "StragglerWatchdog",
+    "Supervisor",
+    "SupervisorGaveUp",
+    "TrainState",
+    "Trainer",
+    "WatchdogStats",
+    "http_ready",
+    "int8_compress",
+    "int8_decompress",
+    "make_train_step",
+]

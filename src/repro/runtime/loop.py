@@ -17,15 +17,16 @@ from __future__ import annotations
 
 import logging
 import time
-from dataclasses import dataclass
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm, linear_warmup_cosine
+from repro.runtime.supervise import StragglerWatchdog, WatchdogStats  # noqa: F401 — re-exported;
+# the watchdog moved to runtime/supervise.py (shared with the serving
+# supervisor), existing importers keep finding it here
 
 log = logging.getLogger("repro.runtime")
 
@@ -100,40 +101,6 @@ def make_train_step(
 def init_train_state(model, rng) -> TrainState:
     params = model.init_params(rng)
     return TrainState(step=jnp.zeros((), jnp.int32), params=params, opt=adamw_init(params))
-
-
-@dataclass
-class WatchdogStats:
-    steps: int = 0
-    stragglers: int = 0
-    median_s: float = 0.0
-
-
-class StragglerWatchdog:
-    """Rolling-median step timer; flags steps slower than ``factor``×median."""
-
-    def __init__(self, factor: float = 3.0, window: int = 32,
-                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
-        self.factor = factor
-        self.window = window
-        self.times: list[float] = []
-        self.stats = WatchdogStats()
-        self.on_straggler = on_straggler
-
-    def record(self, step: int, dt: float) -> bool:
-        self.stats.steps += 1
-        flagged = False
-        if len(self.times) >= 8:
-            med = float(np.median(self.times[-self.window :]))
-            self.stats.median_s = med
-            if dt > self.factor * med:
-                self.stats.stragglers += 1
-                flagged = True
-                log.warning("straggler: step %d took %.3fs (median %.3fs)", step, dt, med)
-                if self.on_straggler:
-                    self.on_straggler(step, dt, med)
-        self.times.append(dt)
-        return flagged
 
 
 class Trainer:

@@ -16,33 +16,54 @@ persistent compute server instead of a batch script::
     # async context: engine.forecast("forecast_step", {"phi": state}, steps=10)
 
 Modules: ``engine`` (admission + dynamic batching onto the ensemble member
-axis), ``protocol`` (JSON/base64 wire format, bit-exact float64), ``server``
+axis, plus the resilience policies: backpressure, deadlines, retry-with-
+bisect, health states), ``faults`` (deterministic fault injection for chaos
+tests), ``protocol`` (JSON/base64 wire format, bit-exact float64), ``server``
 (aiohttp websocket transport, optional dependency), ``client`` (in-process
 and websocket drivers + the deterministic load generator).
 
 The contract: serving K concurrent requests through one vmapped batch is
 bit-identical (float64) to K sequential per-request program runs
-(tests/test_serving.py locks it against the PR-4 member-loop oracle).
+(tests/test_serving.py locks it against the PR-4 member-loop oracle) — and
+that identity survives dispatch failures, because retry-with-bisect resumes
+half-batches from exactly-gathered member states (tests/test_serving_faults.py).
 """
 
-from . import client, protocol
+from . import client, faults, protocol
 from .client import LoadReport, RequestResult, RequestSpec, drive_engine, drive_server, percentile
 from .engine import (
     DEFAULT_MEMBER_COUNTS,
+    DEGRADED,
+    DRAINING,
+    SERVING,
     ForecastRequest,
     ProgramEntry,
     ServingEngine,
     tuned_member_counts,
 )
-from .protocol import ServingError, decode_array, encode_array
+from .faults import FaultInjector, InjectedFault
+from .protocol import (
+    DEADLINE_EXCEEDED,
+    OVERLOADED,
+    ServingError,
+    decode_array,
+    encode_array,
+)
 
 __all__ = [
+    "DEADLINE_EXCEEDED",
     "DEFAULT_MEMBER_COUNTS",
+    "DEGRADED",
+    "DRAINING",
+    "FaultInjector",
     "ForecastRequest",
+    "InjectedFault",
     "LoadReport",
+    "OVERLOADED",
     "ProgramEntry",
     "RequestResult",
     "RequestSpec",
+    "SERVING",
     "ServingEngine",
     "ServingError",
     "client",
@@ -50,6 +71,7 @@ __all__ = [
     "drive_engine",
     "drive_server",
     "encode_array",
+    "faults",
     "percentile",
     "protocol",
     "tuned_member_counts",

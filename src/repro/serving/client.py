@@ -12,7 +12,16 @@ Two drivers share one request/report shape:
 Both issue all requests concurrently, record per-request latency
 (submit → done), assert streamed steps arrive strictly in order, and keep
 the streamed states so callers can verify bit-identity against sequential
-execution."""
+execution.
+
+Resilience: both drivers honor 503 ``OVERLOADED`` rejections by backing off
+``retry_after_ms`` and resubmitting, up to ``retry_503`` attempts; the
+websocket driver additionally bounds the connect and per-frame read waits
+(``connect_timeout_s`` / ``read_timeout_s``) so a dead server yields error
+results instead of a hung client.  A request that ends in an ``error`` event
+(or times out) folds into a :class:`RequestResult` carrying ``error_code`` /
+``error_reason`` rather than raising — load reports under fault injection
+count recovered vs. failed requests instead of dying on the first casualty."""
 
 from __future__ import annotations
 
@@ -24,7 +33,14 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from .engine import ServingEngine
-from .protocol import ServingError, decode_event, dumps, encode_array, loads
+from .protocol import OVERLOADED, ServingError, decode_event, dumps, encode_array, loads
+
+#: error code used for client-side failures (timeouts, closed connections)
+#: that never reached the server — deliberately outside the HTTP range
+CLIENT_TIMEOUT = 0
+
+#: never sleep longer than this on a 503, whatever retry_after_ms claims
+MAX_RETRY_SLEEP_S = 2.0
 
 
 @dataclass
@@ -39,11 +55,12 @@ class RequestSpec:
     stats: bool = False
     request_id: Optional[str] = None
     fingerprint: Optional[str] = None
+    deadline_ms: Optional[float] = None
 
 
 @dataclass
 class RequestResult:
-    """What came back for one request."""
+    """What came back for one request; ``error_code`` is None iff it completed."""
 
     request_id: str
     steps_seen: List[int]
@@ -52,15 +69,24 @@ class RequestResult:
     latency_s: float
     occupancy: float
     members: int
+    error_code: Optional[int] = None
+    error_reason: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error_code is None
 
     @property
     def in_order(self) -> bool:
-        return self.steps_seen == sorted(self.steps_seen) and len(set(self.steps_seen)) == len(self.steps_seen)
+        ordered = self.steps_seen == sorted(self.steps_seen)
+        return ordered and len(set(self.steps_seen)) == len(self.steps_seen)
 
 
 @dataclass
 class LoadReport:
-    """Aggregate view of one load-generator run."""
+    """Aggregate view of one load-generator run.  Latency percentiles cover
+    *completed* requests only; errored ones show up in ``errors`` and drag
+    ``recovered_rate`` down instead of polluting the timing."""
 
     results: List[RequestResult]
     wall_s: float
@@ -70,12 +96,28 @@ class LoadReport:
         return len(self.results)
 
     @property
+    def completed(self) -> List[RequestResult]:
+        return [r for r in self.results if r.ok]
+
+    @property
+    def errors(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for r in self.results:
+            if not r.ok:
+                out[r.error_code] = out.get(r.error_code, 0) + 1
+        return out
+
+    @property
+    def recovered_rate(self) -> float:
+        return len(self.completed) / self.requests if self.requests else 0.0
+
+    @property
     def requests_per_second(self) -> float:
         return self.requests / self.wall_s if self.wall_s > 0 else float("inf")
 
     @property
     def latencies_ms(self) -> List[float]:
-        return [r.latency_s * 1e3 for r in self.results]
+        return [r.latency_s * 1e3 for r in self.completed]
 
     @property
     def p50_ms(self) -> float:
@@ -87,7 +129,8 @@ class LoadReport:
 
     @property
     def mean_occupancy(self) -> float:
-        return float(np.mean([r.occupancy for r in self.results])) if self.results else 0.0
+        done = self.completed
+        return float(np.mean([r.occupancy for r in done])) if done else 0.0
 
     @property
     def all_in_order(self) -> bool:
@@ -96,6 +139,8 @@ class LoadReport:
     def summary(self) -> Dict[str, float]:
         return {
             "requests": self.requests,
+            "completed": len(self.completed),
+            "recovered_rate": self.recovered_rate,
             "wall_s": self.wall_s,
             "requests_per_second": self.requests_per_second,
             "p50_ms": self.p50_ms,
@@ -118,9 +163,12 @@ def _fold_events(request_id: str, events: List[Dict[str, Any]], t0: float, keep:
     step_fields: Dict[int, Dict[str, np.ndarray]] = {}
     final_fields: Dict[str, np.ndarray] = {}
     occupancy, members, latency = 0.0, 0, time.perf_counter() - t0
+    error_code: Optional[int] = None
+    error_reason: Optional[str] = None
     for ev in events:
         if ev["type"] == "error":
-            raise ServingError(ev["code"], ev["reason"])
+            error_code = int(ev.get("code", 500))
+            error_reason = str(ev.get("reason", ""))
         if ev["type"] == "step":
             steps_seen.append(int(ev["step"]))
             if keep == "all":
@@ -139,81 +187,167 @@ def _fold_events(request_id: str, events: List[Dict[str, Any]], t0: float, keep:
         latency_s=latency,
         occupancy=occupancy,
         members=members,
+        error_code=error_code,
+        error_reason=error_reason,
     )
 
 
+def _retry_sleep_s(retry_after_ms: Optional[float], attempt: int = 1) -> float:
+    """How long to back off before resubmitting a 503-rejected request: the
+    server's estimate, scaled up linearly per attempt (the estimate proving
+    optimistic is itself a sign of overload), floored and capped."""
+    base = 0.01 if retry_after_ms is None or retry_after_ms <= 0 else retry_after_ms / 1e3
+    return min(max(base, 0.005) * max(attempt, 1), MAX_RETRY_SLEEP_S)
+
+
 async def drive_engine(
-    engine: ServingEngine, specs: Sequence[RequestSpec], *, keep_fields: str = "all"
+    engine: ServingEngine,
+    specs: Sequence[RequestSpec],
+    *,
+    keep_fields: str = "all",
+    retry_503: int = 3,
 ) -> LoadReport:
     """Issue all specs concurrently against an in-process engine."""
 
     async def one(i: int, spec: RequestSpec) -> RequestResult:
+        rid = spec.request_id or f"load-{i}"
         t0 = time.perf_counter()
-        req = engine.submit(
-            spec.program,
-            spec.fields,
-            spec.scalars,
-            steps=spec.steps,
-            stream_every=spec.stream_every,
-            fingerprint=spec.fingerprint,
-            request_id=spec.request_id or f"load-{i}",
-            stats=spec.stats,
-        )
+        attempt = 0
+        while True:
+            try:
+                req = engine.submit(
+                    spec.program,
+                    spec.fields,
+                    spec.scalars,
+                    steps=spec.steps,
+                    stream_every=spec.stream_every,
+                    fingerprint=spec.fingerprint,
+                    request_id=rid,
+                    stats=spec.stats,
+                    deadline_ms=spec.deadline_ms,
+                )
+                break
+            except ServingError as e:
+                if e.code == OVERLOADED and attempt < retry_503:
+                    attempt += 1
+                    await asyncio.sleep(_retry_sleep_s(e.retry_after_ms, attempt))
+                    continue
+                return _fold_events(
+                    rid,
+                    [{"type": "error", "code": e.code, "reason": e.reason}],
+                    t0,
+                    keep_fields,
+                )
         events = [ev async for ev in engine.stream(req)]
-        return _fold_events(req.request_id, events, t0, keep_fields)
+        return _fold_events(rid, events, t0, keep_fields)
 
     t0 = time.perf_counter()
     results = await asyncio.gather(*(one(i, s) for i, s in enumerate(specs)))
     return LoadReport(results=list(results), wall_s=time.perf_counter() - t0)
 
 
+def _forecast_frame(rid: str, spec: RequestSpec) -> Dict[str, Any]:
+    frame: Dict[str, Any] = {
+        "type": "forecast",
+        "request_id": rid,
+        "program": spec.program,
+        "steps": spec.steps,
+        "stream_every": spec.stream_every,
+        "fields": {n: encode_array(a) for n, a in spec.fields.items()},
+        "scalars": {n: float(v) for n, v in spec.scalars.items()},
+        "stats": spec.stats,
+    }
+    if spec.fingerprint is not None:
+        frame["fingerprint"] = spec.fingerprint
+    if spec.deadline_ms is not None:
+        frame["deadline_ms"] = spec.deadline_ms
+    return frame
+
+
 async def drive_server(
-    url: str, specs: Sequence[RequestSpec], *, keep_fields: str = "all"
+    url: str,
+    specs: Sequence[RequestSpec],
+    *,
+    keep_fields: str = "all",
+    connect_timeout_s: float = 10.0,
+    read_timeout_s: float = 60.0,
+    retry_503: int = 3,
 ) -> LoadReport:
-    """Issue all specs concurrently over one real websocket connection."""
+    """Issue all specs concurrently over one real websocket connection.
+
+    The connect wait and every frame read are bounded; a server that stops
+    answering turns still-pending requests into ``CLIENT_TIMEOUT`` error
+    results rather than hanging the driver.  503 rejections are resubmitted
+    after their advertised ``retry_after_ms`` (capped), ``retry_503`` times."""
     try:
         import aiohttp
     except ImportError:
         raise RuntimeError("drive_server needs aiohttp (pip install repro[serving])") from None
 
     ids = [s.request_id or f"load-{i}" for i, s in enumerate(specs)]
+    frames = {rid: _forecast_frame(rid, spec) for rid, spec in zip(ids, specs)}
     events: Dict[str, List[Dict[str, Any]]] = {rid: [] for rid in ids}
     done: Dict[str, asyncio.Event] = {rid: asyncio.Event() for rid in ids}
+    retries: Dict[str, int] = {rid: 0 for rid in ids}
     t0s: Dict[str, float] = {}
 
+    def _fail_pending(reason: str) -> None:
+        for rid, d in done.items():
+            if not d.is_set():
+                events[rid].append(
+                    {"type": "error", "code": CLIENT_TIMEOUT, "reason": reason, "request_id": rid}
+                )
+                d.set()
+
     async with aiohttp.ClientSession() as session:
-        async with session.ws_connect(url) as ws:
+        ws = await asyncio.wait_for(session.ws_connect(url), connect_timeout_s)
+        resend_tasks: List[asyncio.Task] = []
+        try:
+
+            async def resend(rid: str, after_ms: Optional[float]) -> None:
+                await asyncio.sleep(_retry_sleep_s(after_ms, retries[rid]))
+                await ws.send_str(dumps(frames[rid]))
 
             async def reader() -> None:
-                async for raw in ws:
+                loop = asyncio.get_running_loop()
+                while not all(d.is_set() for d in done.values()):
+                    try:
+                        raw = await ws.receive(timeout=read_timeout_s)
+                    except asyncio.TimeoutError:
+                        _fail_pending(f"no frame from server within {read_timeout_s}s")
+                        return
+                    if raw.type in (
+                        aiohttp.WSMsgType.CLOSE,
+                        aiohttp.WSMsgType.CLOSED,
+                        aiohttp.WSMsgType.ERROR,
+                    ):
+                        _fail_pending("connection closed by server")
+                        return
                     if raw.type != aiohttp.WSMsgType.TEXT:
                         continue
                     ev = decode_event(loads(raw.data))
                     rid = ev.get("request_id")
-                    if rid in events:
-                        events[rid].append(ev)
-                        if ev["type"] in ("done", "error"):
-                            done[rid].set()
+                    if rid not in events:
+                        continue
+                    if ev["type"] == "error" and ev.get("code") == OVERLOADED and retries[rid] < retry_503:
+                        retries[rid] += 1
+                        resend_tasks.append(loop.create_task(resend(rid, ev.get("retry_after_ms"))))
+                        continue
+                    events[rid].append(ev)
+                    if ev["type"] in ("done", "error"):
+                        done[rid].set()
 
             pump = asyncio.get_running_loop().create_task(reader())
             t0 = time.perf_counter()
-            for rid, spec in zip(ids, specs):
+            for rid in ids:
                 t0s[rid] = time.perf_counter()
-                frame = {
-                    "type": "forecast",
-                    "request_id": rid,
-                    "program": spec.program,
-                    "steps": spec.steps,
-                    "stream_every": spec.stream_every,
-                    "fields": {n: encode_array(a) for n, a in spec.fields.items()},
-                    "scalars": {n: float(v) for n, v in spec.scalars.items()},
-                    "stats": spec.stats,
-                }
-                if spec.fingerprint is not None:
-                    frame["fingerprint"] = spec.fingerprint
-                await ws.send_str(dumps(frame))
+                await ws.send_str(dumps(frames[rid]))
             await asyncio.gather(*(d.wait() for d in done.values()))
             wall = time.perf_counter() - t0
             pump.cancel()
+            for t in resend_tasks:
+                t.cancel()
+        finally:
+            await ws.close()
     results = [_fold_events(rid, events[rid], t0s[rid], keep_fields) for rid in ids]
     return LoadReport(results=results, wall_s=wall)

@@ -11,10 +11,14 @@ requests into full batches:
    ``caching.program_fingerprint``: unknown programs 404, stale fingerprints
    409, wrong field shapes/dtypes 413, bad scalars/steps 422.  A request that
    would trigger a recompile is *rejected at the door*, never silently
-   stalled behind a trace+jit.
+   stalled behind a trace+jit.  The admission queue is **bounded**: a full
+   queue rejects with 503 + ``retry_after_ms`` (computed from the watchdog's
+   median dispatch wall and the queue depth) instead of buffering unbounded
+   work it cannot finish.
 2. **Batching window** — a worker task takes the first queued request, then
    keeps collecting until ``window_ms`` elapses (or the max member count is
-   reached).  Requests for the same program form one batch.
+   reached).  Requests for the same program form one batch.  Under load
+   (state ``DEGRADED``) the window shrinks so queued work drains faster.
 3. **Padding to tuned member counts** — the batch is padded up to the nearest
    registered member count (by default the counts with a persisted autotune
    ``batch`` record, via :func:`tuned_member_counts`, plus small powers of
@@ -28,6 +32,27 @@ requests into full batches:
    bit-safe: ``iterate(a); iterate(b)`` ≡ ``iterate(a+b)`` ≡ the sequential
    per-request loop, which the contract tests assert to 0 ULP in float64.
 
+Resilience (the failure model, chaos-tested via :mod:`serving.faults`):
+
+* **Deadlines** — a request may carry ``deadline_ms``; expiry is checked at
+  every segment boundary and expired requests get a 504-style ``error``
+  event instead of burning further dispatches.
+* **Retry-with-bisect** — a failed batched dispatch retries with exponential
+  backoff; if it keeps failing and the batch holds more than one request,
+  the batch is *bisected* (current member states gathered and re-scattered
+  into two half-batches) so one poison request ends up alone, gets its own
+  ``error`` event, and its co-batched neighbors still complete — and because
+  gather→re-scatter round-trips bit-exactly and ``iterate`` chunks exactly,
+  the survivors remain bit-identical to their unfaulted sequential runs.
+* **Health states** — ``SERVING`` → ``DEGRADED`` (queue above the watermark:
+  sheds per-step statistics and shrinks the batching window) → ``DRAINING``
+  (:meth:`ServingEngine.drain`: stop admitting, finish in-flight work, then
+  stop the worker) — the graceful-SIGTERM path of the serve CLI.
+* **No orphaned requests** — a worker-level failure (e.g. while grouping)
+  fails every in-flight request with an ``error`` event and the worker keeps
+  running; a worker *death* fails everything queued and the next submission
+  respawns it.  Every accepted request terminates.
+
 The engine is pure asyncio + numpy/jax — no websocket dependency; transports
 (``serving.server``) and in-process drivers (``serving.client``) sit on top.
 """
@@ -37,9 +62,10 @@ from __future__ import annotations
 import asyncio
 import itertools
 import json
+import math
 import time
 from dataclasses import dataclass, field as dc_field
-from typing import Any, AsyncIterator, Dict, List, Optional, Sequence
+from typing import Any, AsyncIterator, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,12 +74,15 @@ from repro.core.storage import Storage
 from repro.ensemble import Ensemble
 from repro.ensemble import batch as ens_batch
 from repro.program.compile import ProgramObject
-from repro.runtime.loop import StragglerWatchdog
+from repro.runtime.supervise import StragglerWatchdog
 
+from .faults import FaultInjector, InjectedFault
 from .protocol import (
+    DEADLINE_EXCEEDED,
     FINGERPRINT_MISMATCH,
     INTERNAL,
     INVALID_VALUE,
+    OVERLOADED,
     SHAPE_MISMATCH,
     UNKNOWN_PROGRAM,
     ServingError,
@@ -62,21 +91,30 @@ from .protocol import (
 #: padding targets always available, even with no autotune record on disk
 DEFAULT_MEMBER_COUNTS = (1, 2, 4, 8, 16)
 
+#: engine health states
+SERVING = "SERVING"
+DEGRADED = "DEGRADED"
+DRAINING = "DRAINING"
 
-def tuned_member_counts(cp) -> List[int]:
+
+def tuned_member_counts(cp, faults: Optional[FaultInjector] = None) -> List[int]:
     """Member counts with a persisted autotune ``batch`` record.
 
     The Pallas autotuner writes ``<name>_<fp>.tune.json`` next to each
     generated group module (``caching.tuning_path``); records measured on
     member-batched shapes carry the batch extent under ``"batch"``.  Those
     extents are exactly the batch sizes the store holds a measured tile for,
-    so the engine prefers padding to them."""
+    so the engine prefers padding to them.  An unreadable store (or an
+    injected ``tune_read`` fault) degrades gracefully to the default counts —
+    tuning data is an optimization, never a liveness dependency."""
     counts = set()
     for obj in getattr(cp, "group_objects", ()):
         path = caching.tuning_path(obj.name, obj.fingerprint)
         try:
+            if faults is not None:
+                faults.check("tune_read", keys=(obj.name,))
             store = json.loads(path.read_text())
-        except (OSError, ValueError):
+        except (OSError, ValueError, InjectedFault):
             continue
         for rec in store.get("domains", {}).values():
             b = rec.get("batch") if isinstance(rec, dict) else None
@@ -96,11 +134,30 @@ class ForecastRequest:
     fields: Dict[str, np.ndarray]
     scalars: Dict[str, Any]
     want_stats: bool = False
+    deadline_ms: Optional[float] = None
     submitted_at: float = 0.0
+    deadline_at: Optional[float] = None  # perf_counter deadline, set at submit
+    abandoned: bool = False  # transport saw the client vanish — stop emitting
+    terminal: bool = False  # a done/error was posted; later events are dropped
     events: "asyncio.Queue[Dict[str, Any]]" = dc_field(default_factory=asyncio.Queue)
 
     def post(self, event: Dict[str, Any]) -> None:
+        """Deliver one event; a terminal event seals the stream (at-most-one
+        ``done``/``error`` per request, no matter how many failure paths
+        race) and an abandoned request drops events instead of buffering
+        frames nobody will read."""
+        if self.terminal:
+            return
+        if event["type"] in ("done", "error"):
+            self.terminal = True
+        elif self.abandoned:
+            return
         self.events.put_nowait(event)
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self.deadline_at is None:
+            return False
+        return (time.perf_counter() if now is None else now) > self.deadline_at
 
 
 class ProgramEntry:
@@ -156,15 +213,17 @@ class ProgramEntry:
         )
         self.shared_fields = tuple(n for n in prog.field_params if n not in self.batched_fields)
 
-        counts = list(member_counts) if member_counts else tuned_member_counts(cp) + list(DEFAULT_MEMBER_COUNTS)
+        counts = (
+            list(member_counts)
+            if member_counts
+            else tuned_member_counts(cp, faults=engine.faults) + list(DEFAULT_MEMBER_COUNTS)
+        )
         self.member_counts = tuple(sorted({int(c) for c in counts if int(c) >= 1}))
         if not self.member_counts:
             raise ServingError(INTERNAL, f"register({prog.name!r}): empty member_counts")
         self.max_batch = self.member_counts[-1]
         self.max_steps = int(max_steps)
-        self.ensembles = {
-            m: Ensemble(prog, m, name=f"{self.name}_serve{m}") for m in self.member_counts
-        }
+        self.ensembles = {m: Ensemble(prog, m, name=f"{self.name}_serve{m}") for m in self.member_counts}
 
     def pad_to(self, k: int) -> int:
         """Smallest registered member count holding ``k`` live requests."""
@@ -225,24 +284,36 @@ class ProgramEntry:
                 int(chunk), *[storages[n] for n in self.prog.field_params], **self.scalars
             )
 
-    def _batch_storages(self, request_fields: List[Dict[str, np.ndarray]], m: int) -> Dict[str, Storage]:
+    def _batch_storages(
+        self, states: List[Dict[str, np.ndarray]], m: int, *, full_state: bool = False
+    ) -> Dict[str, Storage]:
         """Scatter K requests into member slots of fresh batched storages.
 
-        Request fields stack (+ pad) onto the member axis; written workspace
-        is broadcast fresh per batch (never reused — a batch must not see a
-        previous batch's scratch); shared read-only fields pass through as
-        the registered template storages, which the ensemble layer broadcasts
-        without materializing copies and never writes back."""
+        A fresh batch (``full_state=False``) scatters request fields onto the
+        member axis and broadcasts written workspace fresh per batch (never
+        reused — a batch must not see a previous batch's scratch).  A
+        *resumed* batch (``full_state=True``, the retry-with-bisect path)
+        scatters every batched field from the members' gathered mid-horizon
+        states, so the re-formed half-batch continues bit-exactly where the
+        failed dispatch left off.  Shared read-only fields pass through as
+        the registered template storages either way, which the ensemble layer
+        broadcasts without materializing copies and never writes back."""
         storages: Dict[str, Storage] = {}
+        scattered = self.batched_fields if full_state else self.request_fields
         for n in self.prog.field_params:
             tmpl = self.fields[n]
-            if n in self.request_fields:
-                storages[n] = ens_batch.scatter_members([rf[n] for rf in request_fields], m, template=tmpl)
+            if n in scattered:
+                storages[n] = ens_batch.scatter_members([s[n] for s in states], m, template=tmpl)
             elif n in self.batched_fields:
                 storages[n] = ens_batch.broadcast(tmpl, m)
             else:
                 storages[n] = tmpl
         return storages
+
+    def gather_state(self, storages: Dict[str, Storage], i: int) -> Dict[str, np.ndarray]:
+        """Member ``i``'s complete batched state as host copies — everything
+        needed to resume its horizon in a fresh batch (bisect path)."""
+        return {n: ens_batch.gather_member(storages[n], i) for n in self.batched_fields}
 
     def describe(self) -> Dict[str, Any]:
         return {
@@ -283,14 +354,33 @@ def _field_stats(arr: np.ndarray) -> Dict[str, float]:
 
 
 class ServingEngine:
-    """The asyncio compute server core: admission, batching, streaming."""
+    """The asyncio compute server core: admission, batching, streaming,
+    and the resilience policies (backpressure, deadlines, retry-with-bisect,
+    health states) that keep it operable under faults and overload."""
 
-    def __init__(self, *, window_ms: float = 2.0, straggler_factor: float = 3.0):
+    def __init__(
+        self,
+        *,
+        window_ms: float = 2.0,
+        straggler_factor: float = 3.0,
+        max_queue: int = 128,
+        degraded_watermark: float = 0.5,
+        retry_attempts: int = 3,
+        retry_backoff_ms: float = 20.0,
+        faults: Optional[FaultInjector] = None,
+    ):
         self.window_s = float(window_ms) / 1e3
+        self.max_queue = int(max_queue)
+        self.degraded_watermark = float(degraded_watermark)
+        self.retry_attempts = max(1, int(retry_attempts))
+        self.retry_backoff_s = float(retry_backoff_ms) / 1e3
+        self.faults = faults if faults is not None else FaultInjector.from_env()
         self._programs: Dict[str, ProgramEntry] = {}
         self._queue: "asyncio.Queue[ForecastRequest]" = asyncio.Queue()
         self._worker: Optional[asyncio.Task] = None
         self._request_ids = itertools.count()
+        self._inflight = 0
+        self._draining = False
         self.watchdog = StragglerWatchdog(factor=straggler_factor)
         self._stats: Dict[str, Any] = {
             "requests": 0,
@@ -299,7 +389,34 @@ class ServingEngine:
             "steps_streamed": 0,
             "padded_members": 0,
             "live_members": 0,
+            "rejected_overloaded": 0,
+            "deadline_expired": 0,
+            "retries": 0,
+            "bisects": 0,
+            "worker_failures": 0,
+            "abandoned": 0,
         }
+
+    # -- health state --------------------------------------------------------
+
+    @property
+    def state(self) -> str:
+        """``SERVING`` → ``DEGRADED`` (queue past the watermark — shed
+        optional work) → ``DRAINING`` (reject new, finish in-flight)."""
+        if self._draining:
+            return DRAINING
+        if self._queue.qsize() >= max(1, math.ceil(self.degraded_watermark * self.max_queue)):
+            return DEGRADED
+        return SERVING
+
+    def _retry_after_ms(self) -> float:
+        """How long an overload-rejected client should back off: the median
+        dispatch wall (watchdog) times the number of batches queued ahead."""
+        med_s = self.watchdog.stats.median_s or max(self.window_s, 1e-3)
+        cap = max((e.max_batch for e in self._programs.values()), default=1)
+        pending = self._queue.qsize() + self._inflight
+        batches_ahead = max(1, math.ceil(max(pending, 1) / cap))
+        return med_s * batches_ahead * 1e3
 
     # -- registration ------------------------------------------------------
 
@@ -349,6 +466,7 @@ class ServingEngine:
         fingerprint: Optional[str] = None,
         request_id: Optional[str] = None,
         stats: bool = False,
+        deadline_ms: Optional[float] = None,
     ) -> ForecastRequest:
         entry = self._programs.get(program)
         if entry is None:
@@ -369,6 +487,13 @@ class ServingEngine:
             raise ServingError(INVALID_VALUE, f"steps must be in [1, {entry.max_steps}], got {steps}")
         if stream_every < 1:
             raise ServingError(INVALID_VALUE, f"stream_every must be >= 1, got {stream_every}")
+        if deadline_ms is not None:
+            try:
+                deadline_ms = float(deadline_ms)
+            except (TypeError, ValueError):
+                raise ServingError(INVALID_VALUE, "deadline_ms must be a number") from None
+            if not deadline_ms > 0:
+                raise ServingError(INVALID_VALUE, f"deadline_ms must be > 0, got {deadline_ms}")
         return ForecastRequest(
             request_id=request_id or f"req-{next(self._request_ids)}",
             entry=entry,
@@ -377,13 +502,31 @@ class ServingEngine:
             fields=entry.admit_fields(fields),
             scalars=entry.admit_scalars(dict(scalars or {})),
             want_stats=bool(stats),
+            deadline_ms=deadline_ms,
         )
 
     def submit(self, *args: Any, **kwargs: Any) -> ForecastRequest:
         """Admit and enqueue (synchronous — admission errors raise here, so a
-        rejected request never occupies the batching window)."""
+        rejected request never occupies the batching window).  Backpressure
+        rejections (503 + ``retry_after_ms``) also raise here: a full queue
+        never buffers work the engine cannot finish in time."""
+        if self._draining:
+            raise ServingError(
+                OVERLOADED,
+                "engine is draining — not admitting new requests",
+                retry_after_ms=self._retry_after_ms(),
+            )
+        if self._queue.qsize() >= self.max_queue:
+            self._stats["rejected_overloaded"] += 1
+            raise ServingError(
+                OVERLOADED,
+                f"admission queue full ({self.max_queue} requests)",
+                retry_after_ms=self._retry_after_ms(),
+            )
         req = self.admit(*args, **kwargs)
         req.submitted_at = time.perf_counter()
+        if req.deadline_ms is not None:
+            req.deadline_at = req.submitted_at + req.deadline_ms / 1e3
         self._stats["requests"] += 1
         self._ensure_worker()
         self._queue.put_nowait(req)
@@ -418,92 +561,162 @@ class ServingEngine:
     def _ensure_worker(self) -> None:
         if self._worker is None or self._worker.done():
             self._worker = asyncio.get_running_loop().create_task(self._run_worker())
+            self._worker.add_done_callback(self._worker_died)
+
+    def _worker_died(self, task: asyncio.Task) -> None:
+        """Failsafe for the orphaned-request hang: if the worker task ever
+        dies with an exception (it should survive everything), fail every
+        queued request instead of leaving them waiting forever; the next
+        submission respawns the worker."""
+        if task.cancelled() or task.exception() is None:
+            return
+        self._stats["worker_failures"] += 1
+        exc = task.exception()
+        self._fail_all_queued(f"worker died: {type(exc).__name__}: {exc}")
+        if self._worker is task:
+            self._worker = None
+
+    def _fail_all_queued(self, reason: str) -> None:
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except asyncio.QueueEmpty:
+                return
+            req.post({"type": "error", "code": INTERNAL, "reason": reason, "request_id": req.request_id})
+
+    def _fail_requests(self, requests: Sequence[ForecastRequest], code: int, reason: str) -> None:
+        for r in requests:
+            r.post({"type": "error", "code": code, "reason": reason, "request_id": r.request_id})
+
+    def _group(self, batch: List[ForecastRequest]) -> List[Tuple[ProgramEntry, List[ForecastRequest]]]:
+        """Partition one batching window by program, chunked at each
+        program's max member count."""
+        groups: Dict[str, List[ForecastRequest]] = {}
+        for r in batch:
+            groups.setdefault(r.entry.name, []).append(r)
+        out: List[Tuple[ProgramEntry, List[ForecastRequest]]] = []
+        for reqs in groups.values():
+            entry = reqs[0].entry
+            for i in range(0, len(reqs), entry.max_batch):
+                out.append((entry, reqs[i : i + entry.max_batch]))
+        return out
 
     async def _run_worker(self) -> None:
         while True:
             first = await self._queue.get()
             batch = [first]
-            loop = asyncio.get_running_loop()
-            deadline = loop.time() + self.window_s
-            cap = max(e.max_batch for e in self._programs.values())
-            while len(batch) < cap:
-                remaining = deadline - loop.time()
-                if remaining <= 0:
-                    break
-                try:
-                    batch.append(await asyncio.wait_for(self._queue.get(), remaining))
-                except asyncio.TimeoutError:
-                    break
-            groups: Dict[str, List[ForecastRequest]] = {}
-            for r in batch:
-                groups.setdefault(r.entry.name, []).append(r)
-            for reqs in groups.values():
-                entry = reqs[0].entry
-                for i in range(0, len(reqs), entry.max_batch):
-                    chunk = reqs[i : i + entry.max_batch]
+            self._inflight += 1
+            try:
+                loop = asyncio.get_running_loop()
+                # DEGRADED sheds batching latency: a quarter window drains the
+                # queue faster at the cost of occupancy
+                window = self.window_s * (0.25 if self.state == DEGRADED else 1.0)
+                deadline = loop.time() + window
+                cap = max(e.max_batch for e in self._programs.values())
+                while len(batch) < cap:
+                    remaining = deadline - loop.time()
+                    if remaining <= 0:
+                        break
+                    try:
+                        batch.append(await asyncio.wait_for(self._queue.get(), remaining))
+                        self._inflight += 1
+                    except asyncio.TimeoutError:
+                        break
+                for entry, chunk in self._group(batch):
                     try:
                         await self._run_batch(entry, chunk)
                     except ServingError as e:
-                        for r in chunk:
-                            r.post(
-                                {
-                                    "type": "error",
-                                    "code": e.code,
-                                    "reason": e.reason,
-                                    "request_id": r.request_id,
-                                }
-                            )
+                        self._fail_requests(chunk, e.code, e.reason)
                     except Exception as e:  # noqa: BLE001 — the worker must survive any batch
-                        for r in chunk:
-                            r.post(
-                                {
-                                    "type": "error",
-                                    "code": INTERNAL,
-                                    "reason": f"{type(e).__name__}: {e}",
-                                    "request_id": r.request_id,
-                                }
-                            )
+                        self._fail_requests(chunk, INTERNAL, f"{type(e).__name__}: {e}")
+            except asyncio.CancelledError:
+                self._fail_requests(batch, INTERNAL, "engine shutting down")
+                raise
+            except Exception as e:  # noqa: BLE001 — window/grouping failures must not strand requests
+                self._stats["worker_failures"] += 1
+                self._fail_requests(batch, INTERNAL, f"worker failure: {type(e).__name__}: {e}")
+            finally:
+                self._inflight -= len(batch)
+
+    # -- batch execution: segments, deadlines, retry-with-bisect -------------
 
     async def _run_batch(self, entry: ProgramEntry, requests: List[ForecastRequest]) -> None:
-        loop = asyncio.get_running_loop()
-        k = len(requests)
-        m = entry.pad_to(k)
-        ens = entry.ensembles[m]
         batch_id = self._stats["batches"]
         self._stats["batches"] += 1
-        self._stats["live_members"] += k
-        self._stats["padded_members"] += m
+        pairs = [(r, dict(r.fields)) for r in requests]
+        await self._run_span(entry, pairs, 0, None, initial=True, batch_id=batch_id)
+
+    async def _run_span(
+        self,
+        entry: ProgramEntry,
+        pairs: List[Tuple[ForecastRequest, Dict[str, np.ndarray]]],
+        t0: int,
+        segments: Optional[List[int]],
+        *,
+        initial: bool,
+        batch_id: int,
+    ) -> None:
+        """Run one scattered membership from absolute step ``t0`` through
+        ``segments``.  The initial span covers the whole batch from step 0;
+        bisected spans resume half-batches mid-horizon from gathered states."""
+        loop = asyncio.get_running_loop()
+        pairs = [p for p in pairs if self._still_wanted(p[0])]
+        if not pairs:
+            return
+        reqs = [r for r, _ in pairs]
+        if segments is None:
+            segments = _segment_plan(reqs)
+        k = len(pairs)
+        m = entry.pad_to(k)
+        ens = entry.ensembles[m]
+        if initial:
+            self._stats["live_members"] += k
+            self._stats["padded_members"] += m
         batch_info = {"id": batch_id, "members": m, "requests": k, "occupancy": k / m}
 
-        storages = entry._batch_storages([r.fields for r in requests], m)
-        scalars = _merge_scalars(entry, requests, m)
-        args = [storages[n] for n in entry.prog.field_params]
+        try:
+            storages = await self._retrying(
+                "scatter",
+                [r.request_id for r in reqs],
+                lambda: entry._batch_storages([s for _, s in pairs], m, full_state=not initial),
+            )
+        except Exception as e:  # noqa: BLE001 — scatter failure: bisect like a failed dispatch
+            await self._bisect_or_fail(entry, pairs, t0, segments, e, batch_id, None)
+            return
 
-        t = 0
-        for seg in _segment_plan(requests):
-            t0 = time.perf_counter()
-            await loop.run_in_executor(None, lambda seg=seg: ens.iterate(seg, *args, **scalars))
-            self.watchdog.record(self._stats["dispatches"], time.perf_counter() - t0)
-            self._stats["dispatches"] += 1
+        args = [storages[n] for n in entry.prog.field_params]
+        scalars = _merge_scalars(entry, reqs, m)
+
+        t = t0
+        for si, seg in enumerate(segments):
+            live = self._mark_expired(pairs)
+            if not live:
+                return
+            try:
+                t1 = time.perf_counter()
+                await self._retrying(
+                    "dispatch",
+                    [r.request_id for r, _ in live],
+                    lambda seg=seg: loop.run_in_executor(
+                        None, lambda: ens.iterate(seg, *args, **scalars)
+                    ),
+                    is_async=True,
+                )
+                self.watchdog.record(self._stats["dispatches"], time.perf_counter() - t1)
+                self._stats["dispatches"] += 1
+            except Exception as e:  # noqa: BLE001 — dispatch exhausted its retries
+                await self._bisect_or_fail(entry, live, t, segments[si:], e, batch_id, storages)
+                return
             t += seg
-            for i, r in enumerate(requests):
+            for i, (r, _) in enumerate(pairs):
+                if not self._still_wanted(r):
+                    continue
                 if t > r.steps or (t % r.stream_every != 0 and t != r.steps):
                     continue
-                gathered = {
-                    f: ens_batch.gather_member(storages[f], i) for f in entry.stream_fields
-                }
-                ev: Dict[str, Any] = {
-                    "type": "step",
-                    "request_id": r.request_id,
-                    "step": t,
-                    "fields": gathered,
-                    "batch": dict(batch_info),
-                }
-                if r.want_stats:
-                    ev["stats"] = {f: _field_stats(a) for f, a in gathered.items()}
-                r.post(ev)
-                self._stats["steps_streamed"] += 1
-        for r in requests:
+                await self._emit_step(entry, storages, r, i, t, batch_info)
+        for r, _ in pairs:
+            if not self._still_wanted(r):
+                continue
             r.post(
                 {
                     "type": "done",
@@ -514,11 +727,154 @@ class ServingEngine:
                 }
             )
 
+    def _still_wanted(self, r: ForecastRequest) -> bool:
+        if r.terminal:
+            return False
+        if r.abandoned:
+            self._stats["abandoned"] += 1
+            r.terminal = True  # nobody is listening — seal it so it counts once
+            return False
+        return True
+
+    def _mark_expired(
+        self, pairs: List[Tuple[ForecastRequest, Dict[str, np.ndarray]]]
+    ) -> List[Tuple[ForecastRequest, Dict[str, np.ndarray]]]:
+        """Deadline enforcement at a segment boundary: expired requests get
+        their 504-style error NOW instead of burning another dispatch; the
+        still-live members of the batch are returned."""
+        now = time.perf_counter()
+        live = []
+        for r, s in pairs:
+            if not self._still_wanted(r):
+                continue
+            if r.expired(now):
+                self._stats["deadline_expired"] += 1
+                r.post(
+                    {
+                        "type": "error",
+                        "code": DEADLINE_EXCEEDED,
+                        "reason": f"deadline of {r.deadline_ms:.0f} ms expired "
+                        f"after {(now - r.submitted_at) * 1e3:.0f} ms",
+                        "request_id": r.request_id,
+                    }
+                )
+                continue
+            live.append((r, s))
+        return live
+
+    async def _retrying(self, site: str, keys: Sequence[str], thunk, *, is_async: bool = False):
+        """Run ``thunk`` under the fault injector's ``site`` check with
+        exponential-backoff retries.  The last failure propagates; the caller
+        decides between bisect (batches) and a per-request error (gathers)."""
+        attempt = 0
+        while True:
+            try:
+                self.faults.check(site, keys)
+                result = thunk()
+                return await result if is_async else result
+            except asyncio.CancelledError:
+                raise
+            except Exception:  # noqa: BLE001 — injected and real faults retry alike
+                attempt += 1
+                if attempt >= self.retry_attempts:
+                    raise
+                self._stats["retries"] += 1
+                await asyncio.sleep(self.retry_backoff_s * 2 ** (attempt - 1))
+
+    async def _bisect_or_fail(
+        self,
+        entry: ProgramEntry,
+        pairs: List[Tuple[ForecastRequest, Dict[str, np.ndarray]]],
+        t0: int,
+        segments: List[int],
+        error: Exception,
+        batch_id: int,
+        storages: Optional[Dict[str, Storage]],
+    ) -> None:
+        """A span failed past its retries.  Alone → that request errors.
+        Together → gather current member states and recurse on each half, so
+        a poison request is isolated while its neighbors complete."""
+        live = [(i, r, s) for i, (r, s) in enumerate(pairs) if self._still_wanted(r)]
+        if not live:
+            return
+        if len(live) == 1:
+            _, r, _ = live[0]
+            r.post(
+                {
+                    "type": "error",
+                    "code": INTERNAL,
+                    "reason": f"dispatch failed after {self.retry_attempts} attempts: "
+                    f"{type(error).__name__}: {error}",
+                    "request_id": r.request_id,
+                }
+            )
+            return
+        self._stats["bisects"] += 1
+        if storages is not None:
+            # resume from the batch's current (step-t0) states, not the inputs
+            resumed = [(r, entry.gather_state(storages, i)) for i, r, _ in live]
+        else:
+            # scatter itself failed — re-split the states we were handed
+            resumed = [(r, s) for _, r, s in live]
+        # a half-span is "initial" (request fields only, fresh workspace) iff
+        # its states are request-shaped; resumed states carry every batched field
+        initial = all(set(s) == set(entry.request_fields) for _, s in resumed)
+        half = (len(resumed) + 1) // 2
+        for part in (resumed[:half], resumed[half:]):
+            if not part:
+                continue
+            await self._run_span(entry, part, t0, list(segments), initial=initial, batch_id=batch_id)
+
+    async def _emit_step(
+        self,
+        entry: ProgramEntry,
+        storages: Dict[str, Storage],
+        r: ForecastRequest,
+        i: int,
+        t: int,
+        batch_info: Dict[str, Any],
+    ) -> None:
+        """Gather member ``i`` and stream a ``step`` event; a gather that
+        fails past its retries errors only this request (the batch and its
+        other members keep going)."""
+        try:
+            gathered = await self._retrying(
+                "gather",
+                [r.request_id],
+                lambda: {f: ens_batch.gather_member(storages[f], i) for f in entry.stream_fields},
+            )
+        except Exception as e:  # noqa: BLE001
+            r.post(
+                {
+                    "type": "error",
+                    "code": INTERNAL,
+                    "reason": f"gather failed after {self.retry_attempts} attempts: "
+                    f"{type(e).__name__}: {e}",
+                    "request_id": r.request_id,
+                }
+            )
+            return
+        ev: Dict[str, Any] = {
+            "type": "step",
+            "request_id": r.request_id,
+            "step": t,
+            "fields": gathered,
+            "batch": dict(batch_info),
+        }
+        # DEGRADED sheds optional work: per-step statistics are dropped first
+        if r.want_stats and self.state != DEGRADED:
+            ev["stats"] = {f: _field_stats(a) for f, a in gathered.items()}
+        r.post(ev)
+        self._stats["steps_streamed"] += 1
+
     # -- lifecycle / introspection ------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
         out = dict(self._stats)
         out["programs"] = sorted(self._programs)
+        out["state"] = self.state
+        out["queue_depth"] = self._queue.qsize()
+        out["inflight"] = self._inflight
         out["mean_occupancy"] = (
             self._stats["live_members"] / self._stats["padded_members"]
             if self._stats["padded_members"]
@@ -529,7 +885,24 @@ class ServingEngine:
             "stragglers": self.watchdog.stats.stragglers,
             "median_s": self.watchdog.stats.median_s,
         }
+        if self.faults.enabled:
+            out["faults"] = self.faults.stats()
         return out
+
+    async def drain(self, timeout_s: Optional[float] = None) -> bool:
+        """Graceful shutdown: stop admitting (new submits 503), let the
+        worker finish everything queued and in flight, then stop it.  Returns
+        True when fully drained, False on timeout (remaining work is failed)."""
+        self._draining = True
+        deadline = None if timeout_s is None else time.perf_counter() + timeout_s
+        while self._queue.qsize() or self._inflight:
+            if deadline is not None and time.perf_counter() > deadline:
+                self._fail_all_queued("engine drain timed out")
+                await self.aclose()
+                return False
+            await asyncio.sleep(0.005)
+        await self.aclose()
+        return True
 
     async def aclose(self) -> None:
         if self._worker is not None:
@@ -539,6 +912,7 @@ class ServingEngine:
             except asyncio.CancelledError:
                 pass
             self._worker = None
+        self._fail_all_queued("engine closed")
 
     async def __aenter__(self) -> "ServingEngine":
         return self

@@ -23,7 +23,9 @@ and the batch the dispatch rode (members / live requests / occupancy).
 
 Admission errors reuse HTTP flavors so clients can switch on ``code``:
 400 malformed frame, 404 unknown program, 409 fingerprint mismatch,
-413 field shape/dtype mismatch, 422 bad scalars or step counts.
+413 field shape/dtype mismatch, 422 bad scalars or step counts,
+503 overloaded/draining (the frame carries ``retry_after_ms``), 504 deadline
+exceeded at a segment boundary.
 """
 
 from __future__ import annotations
@@ -41,15 +43,22 @@ FINGERPRINT_MISMATCH = 409
 SHAPE_MISMATCH = 413
 INVALID_VALUE = 422
 INTERNAL = 500
+OVERLOADED = 503  # admission queue full, or the engine is draining
+DEADLINE_EXCEEDED = 504  # request deadline expired at a segment boundary
 
 
 class ServingError(Exception):
-    """An admission- or protocol-level rejection with an HTTP-flavored code."""
+    """An admission- or protocol-level rejection with an HTTP-flavored code.
 
-    def __init__(self, code: int, reason: str):
+    503 rejections carry ``retry_after_ms`` — the engine's estimate (from the
+    watchdog's median dispatch wall and the queue depth) of when capacity
+    frees up; well-behaved clients back off that long before retrying."""
+
+    def __init__(self, code: int, reason: str, *, retry_after_ms: Optional[float] = None):
         super().__init__(f"[{code}] {reason}")
         self.code = int(code)
         self.reason = reason
+        self.retry_after_ms = None if retry_after_ms is None else float(retry_after_ms)
 
 
 def encode_array(arr: np.ndarray) -> Dict[str, Any]:
@@ -100,6 +109,7 @@ def parse_forecast(msg: Dict[str, Any]) -> Dict[str, Any]:
         "fingerprint": msg.get("fingerprint"),
         "request_id": msg.get("request_id"),
         "stats": bool(msg.get("stats", False)),
+        "deadline_ms": msg.get("deadline_ms"),
     }
 
 
@@ -122,10 +132,18 @@ def decode_event(frame: Dict[str, Any]) -> Dict[str, Any]:
     return out
 
 
-def error_frame(code: int, reason: str, request_id: Optional[str] = None) -> Dict[str, Any]:
+def error_frame(
+    code: int,
+    reason: str,
+    request_id: Optional[str] = None,
+    *,
+    retry_after_ms: Optional[float] = None,
+) -> Dict[str, Any]:
     frame: Dict[str, Any] = {"type": "error", "code": int(code), "reason": reason}
     if request_id is not None:
         frame["request_id"] = request_id
+    if retry_after_ms is not None:
+        frame["retry_after_ms"] = float(retry_after_ms)
     return frame
 
 

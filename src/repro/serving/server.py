@@ -11,12 +11,20 @@ repro[serving]``):
 
 Each connection may multiplex many requests: frames carry ``request_id`` and
 every request's events are streamed in submission order (one pump task per
-request; a per-connection send lock keeps frames whole)."""
+request; a per-connection send lock keeps frames whole).
+
+Disconnect handling: a client that vanishes mid-stream (send failure, or the
+connection closing with pumps still running) gets its in-flight requests
+marked *abandoned* — the engine stops gathering/emitting for those member
+slots, the batch's other requests finish untouched, and nothing is leaked
+into the next batch.  ``/healthz`` reflects the engine health state machine:
+200 while ``SERVING``/``DEGRADED``, 503 once ``DRAINING`` so supervisors and
+load balancers stop routing to a process that is shutting down."""
 
 from __future__ import annotations
 
 import asyncio
-from typing import Any, Dict, Optional, Set
+from typing import Any, Dict, Optional
 
 try:
     from aiohttp import WSMsgType, web
@@ -25,7 +33,7 @@ except ImportError:  # pragma: no cover - exercised via _require_aiohttp
     WSMsgType = None
 
 from . import protocol
-from .engine import ServingEngine
+from .engine import DRAINING, ForecastRequest, ServingEngine
 from .protocol import ServingError
 
 
@@ -42,13 +50,25 @@ async def _send(ws, lock: asyncio.Lock, frame: Dict[str, Any]) -> None:
         await ws.send_str(protocol.dumps(protocol.encode_event(frame)))
 
 
-async def _pump(engine: ServingEngine, req, ws, lock: asyncio.Lock) -> None:
-    """Stream one request's events to its connection until done/error."""
-    async for ev in engine.stream(req):
-        await _send(ws, lock, ev)
+async def _pump(engine: ServingEngine, req: ForecastRequest, ws, lock: asyncio.Lock) -> None:
+    """Stream one request's events to its connection until done/error.  A
+    send failure (the client vanished, or an injected ``ws_send`` fault —
+    indistinguishable from here) abandons the request: the engine stops
+    emitting for its member slot and the rest of the batch is unaffected."""
+    try:
+        async for ev in engine.stream(req):
+            engine.faults.check("ws_send", keys=(req.request_id,))
+            await _send(ws, lock, ev)
+    except asyncio.CancelledError:
+        req.abandoned = True
+        raise
+    except Exception:  # noqa: BLE001 — any transport failure means nobody is listening
+        req.abandoned = True
 
 
-async def _handle_frame(engine: ServingEngine, msg: Dict[str, Any], ws, lock, pumps: Set[asyncio.Task]):
+async def _handle_frame(
+    engine: ServingEngine, msg: Dict[str, Any], ws, lock, pumps: Dict[asyncio.Task, ForecastRequest]
+):
     kind = msg["type"]
     if kind == "programs":
         await _send(ws, lock, {"type": "catalog", "programs": engine.catalog()})
@@ -61,8 +81,8 @@ async def _handle_frame(engine: ServingEngine, msg: Dict[str, Any], ws, lock, pu
     scalars = kwargs.pop("scalars")
     req = engine.submit(program, fields, scalars, **kwargs)
     task = asyncio.get_running_loop().create_task(_pump(engine, req, ws, lock))
-    pumps.add(task)
-    task.add_done_callback(pumps.discard)
+    pumps[task] = req
+    task.add_done_callback(lambda t: pumps.pop(t, None))
 
 
 def create_app(engine: ServingEngine) -> "web.Application":
@@ -72,7 +92,7 @@ def create_app(engine: ServingEngine) -> "web.Application":
         ws = web.WebSocketResponse()
         await ws.prepare(request)
         lock = asyncio.Lock()
-        pumps: Set[asyncio.Task] = set()
+        pumps: Dict[asyncio.Task, ForecastRequest] = {}
         try:
             async for raw in ws:
                 if raw.type != WSMsgType.TEXT:
@@ -83,14 +103,24 @@ def create_app(engine: ServingEngine) -> "web.Application":
                     request_id = msg.get("request_id")
                     await _handle_frame(engine, msg, ws, lock, pumps)
                 except ServingError as e:
-                    await _send(ws, lock, protocol.error_frame(e.code, e.reason, request_id))
+                    await _send(
+                        ws,
+                        lock,
+                        protocol.error_frame(
+                            e.code, e.reason, request_id, retry_after_ms=e.retry_after_ms
+                        ),
+                    )
         finally:
-            for t in pumps:
+            # connection gone: abandon every request still streaming so the
+            # engine frees their member slots instead of gathering into the void
+            for t, req in list(pumps.items()):
+                req.abandoned = True
                 t.cancel()
         return ws
 
     async def healthz(_request: "web.Request") -> "web.Response":
-        return web.json_response({"ok": True})
+        ok = engine.state != DRAINING
+        return web.json_response({"ok": ok, "state": engine.state}, status=200 if ok else 503)
 
     async def stats(_request: "web.Request") -> "web.Response":
         return web.json_response(engine.stats())

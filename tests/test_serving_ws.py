@@ -172,7 +172,7 @@ def test_catalog_and_admission_errors_over_websocket(step, templates):
     assert out["not_json"]["type"] == "error" and out["not_json"]["code"] == 400
     assert out["bad_type"]["code"] == 400
     assert out["unknown"]["code"] == 404 and out["unknown"]["request_id"] == "nope-1"
-    assert out["healthz"] == {"ok": True}
+    assert out["healthz"] == {"ok": True, "state": "SERVING"}
     assert out["stats"]["requests"] == 0  # nothing was admitted
 
 
@@ -195,3 +195,237 @@ def test_load_generator_over_websocket(step, templates):
     for spec, res in zip(specs, rep.results):
         ref = sequential(step, templates, spec.fields["phi"], 4)
         assert np.abs(res.final_fields["phi"] - ref).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# disconnect mid-stream: the engine must not leak the slot or poison the batch
+# ---------------------------------------------------------------------------
+
+
+def test_client_disconnect_mid_stream_does_not_poison_engine(step, templates):
+    """A client that vanishes right after ``accepted`` must not hang the
+    engine or corrupt co-batched work: its request is abandoned, and a later
+    well-behaved request on a fresh connection completes bit-identically."""
+
+    async def scenario(srv):
+        phi_gone = request_state(DOM, seed=41)
+        async with aiohttp.ClientSession() as s:
+            ws = await s.ws_connect(srv.ws_url)
+            await ws.send_str(
+                protocol.dumps(
+                    {
+                        "type": "forecast",
+                        "request_id": "ghost",
+                        "program": "ws_step",
+                        "steps": 50,
+                        "stream_every": 1,
+                        "fields": {"phi": protocol.encode_array(phi_gone)},
+                    }
+                )
+            )
+            first = protocol.loads((await ws.receive()).data)
+            assert first["type"] == "accepted"
+            await ws.close()  # vanish mid-stream
+
+            # a fresh, patient client right behind the ghost
+            phi_ok = request_state(DOM, seed=42)
+            rep = await drive_server(
+                srv.ws_url,
+                [RequestSpec("ws_step", {"phi": phi_ok}, steps=3, request_id="alive")],
+                read_timeout_s=30.0,
+            )
+            # give the engine a beat to finish the ghost's (abandoned) batch
+            deadline = asyncio.get_running_loop().time() + 30.0
+            while srv.engine.stats()["abandoned"] < 1:
+                assert asyncio.get_running_loop().time() < deadline, "ghost never abandoned"
+                await asyncio.sleep(0.02)
+            return rep, srv.engine.stats(), phi_ok
+
+    rep, stats, phi_ok = serve(step, templates, scenario)
+    (res,) = rep.results
+    assert res.ok and res.steps_seen == [1, 2, 3]
+    ref = sequential(step, templates, phi_ok, 3)
+    assert np.abs(res.final_fields["phi"] - ref).max() == 0.0
+    assert stats["abandoned"] >= 1
+
+
+def test_healthz_degrades_to_503_while_draining(step, templates):
+    async def scenario(srv):
+        out = {}
+        async with aiohttp.ClientSession() as s:
+            async with s.get(f"http://{srv.host}:{srv.port}/healthz") as r:
+                out["before"] = (r.status, await r.json())
+            await srv.engine.drain(timeout_s=10.0)
+            async with s.get(f"http://{srv.host}:{srv.port}/healthz") as r:
+                out["after"] = (r.status, await r.json())
+        return out
+
+    out = serve(step, templates, scenario)
+    assert out["before"][0] == 200 and out["before"][1]["state"] == "SERVING"
+    assert out["after"][0] == 503 and out["after"][1] == {"ok": False, "state": "DRAINING"}
+
+
+def test_503_error_frame_carries_retry_after(step, templates):
+    """A full admission queue answers the ws client with a 503 error frame
+    including retry_after_ms (here: without client-side auto-retry)."""
+    fields, scalars = templates
+
+    async def go():
+        engine = ServingEngine(window_ms=25.0, max_queue=1)
+        engine.register(
+            step, fields=fields, scalars=scalars, request_fields=("phi",), member_counts=(1, 2, 4)
+        )
+        gate = asyncio.Event()
+        real_run_batch = engine._run_batch
+
+        async def gated(entry, requests):
+            await gate.wait()
+            await real_run_batch(entry, requests)
+
+        engine._run_batch = gated
+        phi = protocol.encode_array(request_state(DOM, seed=7))
+        async with ForecastServer(engine) as srv:
+            async with aiohttp.ClientSession() as s, s.ws_connect(srv.ws_url) as ws:
+
+                async def forecast(rid):
+                    await ws.send_str(
+                        protocol.dumps(
+                            {
+                                "type": "forecast",
+                                "request_id": rid,
+                                "program": "ws_step",
+                                "steps": 1,
+                                "fields": {"phi": phi},
+                            }
+                        )
+                    )
+
+                await forecast("r0")  # worker takes it, holds at the gate
+                await asyncio.sleep(0.08)
+                await forecast("r1")  # sits in the queue (now full)
+                frames = [protocol.loads((await ws.receive()).data) for _ in range(2)]
+                await forecast("r2")  # over capacity → 503
+                rejected = protocol.loads((await ws.receive()).data)
+                gate.set()
+                # r0 and r1 still complete; drain their remaining frames
+                done = set()
+                while done < {"r0", "r1"}:
+                    ev = protocol.loads((await ws.receive()).data)
+                    if ev["type"] == "done":
+                        done.add(ev["request_id"])
+                return frames, rejected
+
+    frames, rejected = asyncio.run(go())
+    assert {f["type"] for f in frames} == {"accepted"}
+    assert rejected["type"] == "error" and rejected["code"] == 503
+    assert rejected["request_id"] == "r2" and rejected["retry_after_ms"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ws_send fault injection: a failing socket write abandons only that request
+# ---------------------------------------------------------------------------
+
+
+def test_ws_send_fault_abandons_request_not_connection(step, templates):
+    from repro.serving import FaultInjector
+
+    fields, scalars = templates
+
+    async def go():
+        engine = ServingEngine(
+            window_ms=25.0,
+            faults=FaultInjector(sites=("ws_send",), rate=0.0, poison=("doomed",)),
+        )
+        engine.register(
+            step, fields=fields, scalars=scalars, request_fields=("phi",), member_counts=(1, 2, 4)
+        )
+        async with ForecastServer(engine) as srv:
+            specs = [
+                RequestSpec(
+                    "ws_step",
+                    {"phi": request_state(DOM, seed=i + 1)},
+                    steps=3,
+                    request_id="doomed" if i == 0 else f"fine-{i}",
+                )
+                for i in range(3)
+            ]
+            rep = await drive_server(srv.ws_url, specs, read_timeout_s=5.0)
+            return rep, engine.stats()
+
+    rep, stats = asyncio.run(go())
+    by_id = {r.request_id: r for r in rep.results}
+    # the doomed stream dies client-side (read timeout); the others complete
+    assert not by_id["doomed"].ok
+    for i in (1, 2):
+        res = by_id[f"fine-{i}"]
+        assert res.ok, res.error_reason
+        ref = sequential(step, templates, request_state(DOM, seed=i + 1), 3)
+        assert np.abs(res.final_fields["phi"] - ref).max() == 0.0
+    assert stats["abandoned"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end supervision: kill the server process, serving comes back
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_restores_serving_after_server_crash(step, templates):
+    """The acceptance path: a supervised real server process is force-killed;
+    the supervisor respawns it and /healthz-ready serving resumes — verified
+    by completing a real websocket forecast against the restarted process."""
+    import functools
+    import socket
+    import threading
+    import time as _time
+
+    from repro.runtime.supervise import RestartPolicy, Supervisor, http_ready, serve_command
+
+    with socket.socket() as sk:
+        sk.bind(("127.0.0.1", 0))
+        port = sk.getsockname()[1]
+    url = f"http://127.0.0.1:{port}/healthz"
+    probe = functools.partial(http_ready, url)
+    sup = Supervisor(
+        serve_command(
+            ["--port", str(port), "--no-warm", "--domain", "8", "6", "4", "--drain-timeout", "2"]
+        ),
+        probe=probe,
+        policy=RestartPolicy(backoff_s=0.1, max_crashes=10, crash_window_s=300.0),
+        ready_timeout_s=120.0,
+        probe_interval_s=0.1,
+    )
+
+    def forecast_completes():
+        phi0 = request_state((8, 6, 4), seed=1)
+
+        async def go():
+            rep = await drive_server(
+                f"ws://127.0.0.1:{port}/ws",
+                [RequestSpec("forecast_step", {"phi": phi0}, steps=2)],
+                read_timeout_s=60.0,
+            )
+            return rep.results[0]
+
+        res = asyncio.run(go())
+        assert res.ok, res.error_reason
+        assert res.steps_seen == [1, 2]
+
+    sup.start()
+    runner = threading.Thread(target=sup.run_forever, daemon=True)
+    runner.start()
+    try:
+        forecast_completes()
+        first_pid = sup.proc.pid
+        sup.proc.kill()  # the forced crash
+        deadline = _time.monotonic() + 120.0
+        while _time.monotonic() < deadline:
+            if sup.proc is not None and sup.proc.pid != first_pid and probe():
+                break
+            _time.sleep(0.1)
+        assert probe(), "supervisor never restored /healthz-ready serving"
+        assert sup.stats["restarts"] >= 1
+        forecast_completes()  # the restarted process actually serves
+    finally:
+        sup.stop()
+        runner.join(timeout=15.0)
+    assert not runner.is_alive()

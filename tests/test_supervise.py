@@ -1,0 +1,187 @@
+"""Process supervision tests (repro.runtime.supervise): restart policy math,
+readiness probing, restart-on-crash, crash-loop give-up — with cheap stdlib
+child processes (no aiohttp, no jax import in the children)."""
+
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.runtime.supervise import (
+    RestartPolicy,
+    StragglerWatchdog,
+    Supervisor,
+    SupervisorGaveUp,
+    http_ready,
+    serve_command,
+)
+
+# ---------------------------------------------------------------------------
+# restart policy: backoff progression + crash-loop detection
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_progression_and_reset():
+    p = RestartPolicy(backoff_s=0.5, backoff_factor=2.0, backoff_max_s=3.0)
+    assert [p.next_backoff() for _ in range(4)] == [0.5, 1.0, 2.0, 3.0]  # capped
+    p.reset_backoff()
+    assert p.next_backoff() == 0.5
+
+
+def test_crash_loop_detection_window():
+    p = RestartPolicy(crash_window_s=10.0, max_crashes=3)
+    assert not p.record_crash(now=0.0)
+    assert not p.record_crash(now=1.0)
+    assert p.record_crash(now=2.0)  # 3 crashes within 10s → loop
+    # old crashes age out of the window
+    p2 = RestartPolicy(crash_window_s=10.0, max_crashes=3)
+    assert not p2.record_crash(now=0.0)
+    assert not p2.record_crash(now=20.0)
+    assert not p2.record_crash(now=40.0)  # never 3 within any 10s window
+
+
+def test_http_ready_refuses_dead_endpoint():
+    assert not http_ready("http://127.0.0.1:1/healthz", timeout_s=0.2)
+
+
+def test_serve_command_shape():
+    cmd = serve_command(["--port", "9999", "--no-warm"])
+    assert cmd[0] == sys.executable
+    assert cmd[1:3] == ["-m", "repro.launch.serve"]
+    assert cmd[3:] == ["--port", "9999", "--no-warm"]
+
+
+# ---------------------------------------------------------------------------
+# the supervisor against real (tiny) child processes
+# ---------------------------------------------------------------------------
+
+
+def _touch_and_sleep_cmd(marker: Path, sleep_s: float = 60.0):
+    """A child that signals readiness by touching a file, then idles."""
+    return [
+        sys.executable,
+        "-c",
+        f"import pathlib, time; pathlib.Path({str(marker)!r}).touch(); time.sleep({sleep_s})",
+    ]
+
+
+def test_supervisor_spawns_and_probes_ready(tmp_path):
+    marker = tmp_path / "ready"
+    sup = Supervisor(
+        _touch_and_sleep_cmd(marker),
+        probe=marker.exists,
+        ready_timeout_s=15.0,
+        probe_interval_s=0.02,
+    )
+    sup.start()
+    try:
+        assert marker.exists()
+        assert sup.proc is not None and sup.proc.poll() is None
+        assert sup.stats == {"spawns": 1, "crashes": 0, "restarts": 0}
+    finally:
+        sup.stop()
+    assert sup.proc is None
+
+
+def test_supervisor_restarts_killed_child_and_recovers(tmp_path):
+    """The acceptance path: force-kill the child; the supervisor respawns it
+    and the readiness probe comes back."""
+    marker = tmp_path / "ready"
+    events = []
+    sup = Supervisor(
+        _touch_and_sleep_cmd(marker),
+        probe=marker.exists,
+        policy=RestartPolicy(backoff_s=0.05, max_crashes=10),
+        ready_timeout_s=15.0,
+        probe_interval_s=0.02,
+        on_event=lambda kind, detail: events.append(kind),
+    )
+    sup.start()
+    runner = threading.Thread(target=sup.run_forever, daemon=True)
+    runner.start()
+    try:
+        first_pid = sup.proc.pid
+        marker.unlink()  # probe goes dark...
+        sup.proc.kill()  # ...and the child is gone
+        deadline = time.monotonic() + 15.0
+        while time.monotonic() < deadline:
+            if events.count("ready") >= 2 and sup.proc is not None and sup.proc.pid != first_pid:
+                break
+            time.sleep(0.02)
+        assert marker.exists(), "supervisor never restored readiness"
+        assert sup.proc.pid != first_pid and sup.proc.poll() is None
+        assert sup.stats["restarts"] >= 1 and sup.stats["crashes"] >= 1
+        assert "crashed" in events and events.count("ready") >= 2
+    finally:
+        sup.stop()
+        runner.join(timeout=10.0)
+    assert not runner.is_alive()  # stop() ends run_forever cleanly
+
+
+def test_supervisor_gives_up_on_crash_loop():
+    """A child that exits immediately can never become ready: after
+    max_crashes rapid exits the supervisor raises instead of spinning."""
+    sup = Supervisor(
+        [sys.executable, "-c", "raise SystemExit(3)"],
+        probe=lambda: False,
+        policy=RestartPolicy(backoff_s=0.01, backoff_max_s=0.02, crash_window_s=60.0, max_crashes=3),
+        ready_timeout_s=0.3,
+        probe_interval_s=0.02,
+    )
+    with pytest.raises(SupervisorGaveUp, match="3 crashes"):
+        sup.start()
+    assert sup.stats["crashes"] == 3
+
+
+def test_supervisor_counts_ready_timeout_as_crash(tmp_path):
+    """A child that stays alive but never probes ready is killed and counted
+    as a crash (it would otherwise wedge the fleet as 'starting forever')."""
+    sup = Supervisor(
+        [sys.executable, "-c", "import time; time.sleep(60)"],
+        probe=lambda: False,
+        policy=RestartPolicy(backoff_s=0.01, backoff_max_s=0.02, max_crashes=2),
+        ready_timeout_s=0.2,
+        probe_interval_s=0.02,
+    )
+    t0 = time.monotonic()
+    with pytest.raises(SupervisorGaveUp):
+        sup.start()
+    assert time.monotonic() - t0 < 10.0
+    assert sup.stats["crashes"] == 2
+    assert sup.proc.poll() is not None  # no zombie child left behind
+
+
+def test_stop_is_idempotent_and_detaches(tmp_path):
+    marker = tmp_path / "ready"
+    sup = Supervisor(
+        _touch_and_sleep_cmd(marker),
+        probe=marker.exists,
+        ready_timeout_s=15.0,
+        probe_interval_s=0.02,
+    )
+    sup.start()
+    proc = sup.proc
+    sup.stop()
+    sup.stop()  # second stop is a no-op
+    assert proc.poll() is not None and sup.proc is None
+
+
+# ---------------------------------------------------------------------------
+# the watchdog still behaves after its move to runtime.supervise
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_flags_stragglers_and_reexports():
+    from repro.runtime.loop import StragglerWatchdog as FromLoop
+
+    assert FromLoop is StragglerWatchdog  # compat re-export intact
+    flagged = []
+    wd = StragglerWatchdog(factor=3.0, on_straggler=lambda s, dt, med: flagged.append(s))
+    for i in range(10):
+        wd.record(i, 0.01)
+    assert wd.stats.median_s == pytest.approx(0.01)
+    assert wd.record(10, 0.5)  # 50× the median
+    assert flagged == [10] and wd.stats.stragglers == 1
