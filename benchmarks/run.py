@@ -663,12 +663,13 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
             for i in range(requests)
         ]
 
-    async def run_load(faults=None, retry_attempts=3):
+    async def run_load(faults=None, retry_attempts=3, tracer=None):
         engine = ServingEngine(
             window_ms=10.0,
             faults=faults if faults is not None else FaultInjector(),
             retry_attempts=retry_attempts,
             retry_backoff_ms=2.0,
+            tracer=tracer,
         )
         engine.register(
             step,
@@ -693,6 +694,12 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
         run_load(faults=FaultInjector(sites=("dispatch",), rate=0.10, seed=42), retry_attempts=6)
     )
 
+    # the same workload with span tracing armed: what full request-lifecycle
+    # telemetry costs per request (the gate keeps it from quietly regressing)
+    from repro.obs import trace as otrace
+
+    t_first, t_repeat, _ = asyncio.run(run_load(tracer=otrace.Tracer(enabled=True)))
+
     def pair(a, b, metric):
         return {"us_per_call": metric(a), "us_repeat": metric(b)}
 
@@ -700,6 +707,7 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
     case = {
         "jax": {
             "request_wall": pair(first, repeat, lambda r: r.wall_s / r.requests * 1e6),
+            "request_wall_traced": pair(t_first, t_repeat, lambda r: r.wall_s / r.requests * 1e6),
             "p50": pair(first, repeat, lambda r: r.p50_ms * 1e3),
             "p99": pair(first, repeat, lambda r: r.p99_ms * 1e3),
             "p99_faulted": pair(f_first, f_repeat, lambda r: r.p99_ms * 1e3),
@@ -711,6 +719,10 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
         "batch_occupancy": first.mean_occupancy,
         "batches": stats["batches"],
         "steps_streamed": stats["steps_streamed"],
+        # traced / untraced per-request wall (best of two each) — full span
+        # tracing across the serving lifecycle should cost a few percent
+        "telemetry_overhead": min(t_first.wall_s, t_repeat.wall_s)
+        / min(first.wall_s, repeat.wall_s),
         "faulted": {
             "dispatch_fault_rate": 0.10,
             "recovered_rate": recovered,
@@ -726,6 +738,9 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
         f"occupancy={first.mean_occupancy:.2f} worst={best:.1f}req/s")
     row(f"serving_p99_faulted_jax_{requests}req_{ni}x{nj}x{nk}", f_first.p99_ms * 1e3,
         f"recovered={recovered:.2f} retries={f_stats['retries']} bisects={f_stats['bisects']}")
+    row(f"serving_traced_jax_{requests}req_{ni}x{nj}x{nk}",
+        min(t_first.wall_s, t_repeat.wall_s) / requests * 1e6,
+        f"telemetry_overhead={case['telemetry_overhead']:.2f}x")
     return case
 
 

@@ -30,6 +30,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as otrace
+
 from . import caching
 
 # (BI, BJ) candidates: sublane multiples × the 128-lane TPU vector width.
@@ -266,14 +268,22 @@ def select_block(
             _memory[(name, fingerprint, dkey)] = dict(entry)
             return tuple(rec["block"]), rec
 
-    blocks = candidate_blocks(module, domain, cands)
-    batch = batch_count(module, operand_shapes)
-    fields, scalars, origins = _synthetic_call_args(module, domain, batch)
-    timings: List[Dict[str, Any]] = []
-    for block in blocks:
-        us = _time_block(module, fields, scalars, domain, origins, block, warmup, iters, batch)
-        timings.append({"block": list(block), "us": us})
-    best = min(timings, key=lambda t: t["us"])
+    with otrace.span(
+        "stencil.autotune", category="compile", stencil=name, domain=list(domain)
+    ) as tsp:
+        blocks = candidate_blocks(module, domain, cands)
+        batch = batch_count(module, operand_shapes)
+        fields, scalars, origins = _synthetic_call_args(module, domain, batch)
+        timings: List[Dict[str, Any]] = []
+        for block in blocks:
+            us = _time_block(
+                module, fields, scalars, domain, origins, block, warmup, iters, batch
+            )
+            timings.append({"block": list(block), "us": us})
+        best = min(timings, key=lambda t: t["us"])
+        tsp.set("candidates", len(blocks))
+        tsp.set("block", list(best["block"]))
+        tsp.set("cache_hit", False)
     record: Dict[str, Any] = {
         "block": list(best["block"]),
         "timings": timings,

@@ -16,6 +16,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as otrace
+
 from . import analysis, caching, frontend, ir, passes
 from .storage import Storage
 
@@ -253,6 +255,19 @@ class StencilObject:
             traced = _trace_hook(self, args, kwargs, domain=domain, origin=origin)
             if traced is not NOT_TRACED:
                 return traced
+        if exec_info is not None and exec_info.get("trace") is True:
+            # per-call trace opt-in: capture this call's spans into a fresh
+            # tracer and hand back Chrome-trace JSON under exec_info["trace"]
+            from repro.obs import export as obs_export
+
+            del exec_info["trace"]
+            with otrace.capture() as cap:
+                result = self.__call__(
+                    *args, domain=domain, origin=origin,
+                    validate_args=validate_args, exec_info=exec_info, **kwargs,
+                )
+            exec_info["trace"] = obs_export.chrome_trace(cap.snapshot())
+            return result
         if exec_info is not None:
             exec_info["call_start_time"] = time.perf_counter()
             exec_info["pass_report"] = list(self.pass_report)
@@ -293,26 +308,30 @@ class StencilObject:
         if exec_info is not None:
             exec_info["run_start_time"] = time.perf_counter()
 
-        if self.backend in ("debug", "numpy"):
-            for n, v in raw_fields.items():
-                if not isinstance(v, np.ndarray):
-                    raise TypeError(
-                        f"{self.name}(): backend {self.backend!r} requires NumPy-backed fields; "
-                        f"{n!r} is {type(v)} (use storage backend={self.backend!r})"
-                    )
-            if self._numpy_tiled:
-                self._run(raw_fields, scalars, domain, origins, block=block)
-            else:
-                self._run(raw_fields, scalars, domain, origins)
-            result = None
-        else:  # jax / pallas
-            fn = self._jitted(domain, origins, block)
-            updates = fn(raw_fields, dict(scalars))
-            for n, new in updates.items():
-                val = fields[n]
-                if isinstance(val, Storage):
-                    val.data = new
-            result = updates
+        with otrace.span(
+            "stencil.run", category="stencil",
+            stencil=self.name, backend=self.backend, domain=list(domain),
+        ):
+            if self.backend in ("debug", "numpy"):
+                for n, v in raw_fields.items():
+                    if not isinstance(v, np.ndarray):
+                        raise TypeError(
+                            f"{self.name}(): backend {self.backend!r} requires NumPy-backed fields; "
+                            f"{n!r} is {type(v)} (use storage backend={self.backend!r})"
+                        )
+                if self._numpy_tiled:
+                    self._run(raw_fields, scalars, domain, origins, block=block)
+                else:
+                    self._run(raw_fields, scalars, domain, origins)
+                result = None
+            else:  # jax / pallas
+                fn = self._jitted(domain, origins, block)
+                updates = fn(raw_fields, dict(scalars))
+                for n, new in updates.items():
+                    val = fields[n]
+                    if isinstance(val, Storage):
+                        val.data = new
+                result = updates
 
         if exec_info is not None:
             if result is not None:
@@ -464,7 +483,8 @@ def build_stencil_object(
     validate_args: bool = True,
     backend_opts: Optional[Dict[str, Any]] = None,
 ) -> StencilObject:
-    definition_ir = frontend.parse_stencil_definition(definition, externals=externals, name=name)
+    with otrace.span("stencil.frontend", category="compile", stencil=name or "", backend=backend):
+        definition_ir = frontend.parse_stencil_definition(definition, externals=externals, name=name)
     return build_from_definition(definition_ir, backend, rebuild=rebuild,
                                  validate_args=validate_args, backend_opts=backend_opts)
 
@@ -537,45 +557,62 @@ def build_from_definition(
             )
             codegen_opts["tile"] = DEFAULT_NUMPY_TILE if on else None
     name = definition_ir.name
-    impl = analysis.analyze(definition_ir)
-    impl, pass_report = passes.run_pipeline(impl, **pass_cfg)
+    with otrace.span("stencil.analyze", category="compile", stencil=name, backend=backend):
+        impl = analysis.analyze(definition_ir)
+    with otrace.span("stencil.passes", category="compile", stencil=name, backend=backend) as psp:
+        impl, pass_report = passes.run_pipeline(impl, **pass_cfg)
+        # fold the pass report into span attributes: which passes fired and
+        # what each cost, correlated with this build
+        psp.set(
+            "pass_report",
+            [
+                {"pass": r["pass"], "seconds": r["seconds"], "changed": r["changed"]}
+                for r in pass_report
+            ],
+        )
     fp = caching.fingerprint(definition_ir, backend, codegen_opts, pass_config=pass_cfg)
 
-    if backend == "numpy":
-        from .codegen_array import generate_numpy_source, tiling_plan
+    with otrace.span(
+        "stencil.codegen", category="compile", stencil=name, backend=backend, fingerprint=fp
+    ):
+        if backend == "numpy":
+            from .codegen_array import generate_numpy_source, tiling_plan
 
-        tile = codegen_opts.get("tile")
-        source = generate_numpy_source(impl, tile=tile)
-        stats = passes.impl_stats(impl)
-        plan = tiling_plan(impl)
-        pass_report = list(pass_report) + [
-            {
-                "pass": "numpy_stage_tiling",
-                "seconds": 0.0,
-                "before": stats,
-                "after": stats,
-                "changed": tile is not None and plan["tiled_multistages"] > 0,
-                "detail": dict(
-                    plan, tile=tuple(tile) if tile else None, enabled=tile is not None
-                ),
-            }
-        ]
-    elif backend == "jax":
-        from .codegen_array import generate_jax_source
+            tile = codegen_opts.get("tile")
+            source = generate_numpy_source(impl, tile=tile)
+            stats = passes.impl_stats(impl)
+            plan = tiling_plan(impl)
+            pass_report = list(pass_report) + [
+                {
+                    "pass": "numpy_stage_tiling",
+                    "seconds": 0.0,
+                    "before": stats,
+                    "after": stats,
+                    "changed": tile is not None and plan["tiled_multistages"] > 0,
+                    "detail": dict(
+                        plan, tile=tuple(tile) if tile else None, enabled=tile is not None
+                    ),
+                }
+            ]
+        elif backend == "jax":
+            from .codegen_array import generate_jax_source
 
-        source = generate_jax_source(impl)
-    elif backend == "debug":
-        from .codegen_debug import generate_debug_source
+            source = generate_jax_source(impl)
+        elif backend == "debug":
+            from .codegen_debug import generate_debug_source
 
-        source = generate_debug_source(impl)
-    elif backend == "pallas":
-        from .codegen_pallas import generate_pallas_source
+            source = generate_debug_source(impl)
+        elif backend == "pallas":
+            from .codegen_pallas import generate_pallas_source
 
-        source = generate_pallas_source(impl, **codegen_opts)
-    else:
-        raise ValueError(f"unknown backend {backend!r} (expected debug|numpy|jax|pallas)")
+            source = generate_pallas_source(impl, **codegen_opts)
+        else:
+            raise ValueError(f"unknown backend {backend!r} (expected debug|numpy|jax|pallas)")
 
-    module = caching.load_generated_module(name, fp, source, rebuild=rebuild)
+    with otrace.span(
+        "stencil.load_module", category="compile", stencil=name, backend=backend, fingerprint=fp
+    ):
+        module = caching.load_generated_module(name, fp, source, rebuild=rebuild)
     if backend == "pallas":
         pinned = codegen_opts.get("block")
     elif backend == "numpy" and user_tile is not _TILE_UNSET:

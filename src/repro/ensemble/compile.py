@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core import caching
 from repro.core.storage import Storage
+from repro.obs import trace as otrace
 from repro.program.compile import CompiledProgram, DistributedProgram, ProgramObject
 from repro.program.trace import ProgramError
 
@@ -250,7 +251,11 @@ class _CompiledEnsemble:
         if exec_info is not None:
             exec_info["ensemble_report"] = dict(self.report)
             exec_info["run_start_time"] = time.perf_counter()
-        outs, writes = fn(raw_fields, scalars)
+        with otrace.span(
+            "ensemble.dispatch", category="ensemble",
+            ensemble=self.ensemble.name, members=self.members,
+        ):
+            outs, writes = fn(raw_fields, scalars)
         if exec_info is not None:
             for v in outs.values():
                 v.block_until_ready()
@@ -297,7 +302,11 @@ class _CompiledEnsemble:
             exec_info["ensemble_report"] = dict(self.report)
             exec_info["ensemble_report"]["iterated_steps"] = int(n)
             exec_info["run_start_time"] = time.perf_counter()
-        final = steps(raw_fields, scalars)
+        with otrace.span(
+            "ensemble.iterate", category="ensemble",
+            ensemble=self.ensemble.name, members=self.members, steps=int(n),
+        ):
+            final = steps(raw_fields, scalars)
         if exec_info is not None:
             for v in final.values():
                 v.block_until_ready()

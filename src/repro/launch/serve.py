@@ -37,9 +37,27 @@ import signal
 from typing import Tuple
 
 import repro  # noqa: F401
+from repro.obs import export as obs_export
+from repro.obs import trace as otrace
 from repro.runtime.supervise import RestartPolicy, Supervisor, http_ready
 from repro.serving import ProgramEntry, RequestSpec, ServingEngine, drive_engine
 from repro.stencils.forecast import build_forecast_step, make_forecast_fields, request_state
+
+
+def _arm_tracing(args: argparse.Namespace) -> bool:
+    """Enable the process tracer when ``--trace-out`` asks for a dump (or
+    ``REPRO_TRACE=1`` already armed it); returns whether a dump is due."""
+    if args.trace_out:
+        otrace.configure(enabled=True)
+    return bool(args.trace_out)
+
+
+def _dump_trace(args: argparse.Namespace) -> None:
+    data = obs_export.write_chrome_trace(
+        args.trace_out, metadata={"entry": "repro.launch.serve", "backend": args.backend}
+    )
+    n = sum(1 for ev in data["traceEvents"] if ev.get("ph") != "M")
+    print(f"wrote {n} trace events to {args.trace_out}", flush=True)
 
 
 def build_forecast_entry(
@@ -67,6 +85,7 @@ def build_forecast_entry(
 
 
 async def _load_test(args: argparse.Namespace) -> None:
+    dump = _arm_tracing(args)
     engine = ServingEngine(window_ms=args.window_ms)
     domain = tuple(args.domain)
     entry = build_forecast_entry(
@@ -93,11 +112,14 @@ async def _load_test(args: argparse.Namespace) -> None:
         f"p99 {s['p99_ms']:.1f} ms  occupancy {s['mean_occupancy']:.2f}"
     )
     print(f"  in order: {report.all_in_order}   engine: {json.dumps(engine.stats())}")
+    if dump:
+        _dump_trace(args)
 
 
 async def _serve(args: argparse.Namespace) -> None:
     from repro.serving.server import ForecastServer
 
+    dump = _arm_tracing(args)
     engine = ServingEngine(window_ms=args.window_ms)
     build_forecast_entry(engine, backend=args.backend, domain=tuple(args.domain), warm=not args.no_warm)
     stop = asyncio.Event()
@@ -111,6 +133,8 @@ async def _serve(args: argparse.Namespace) -> None:
         # rejected, queued + in-flight requests finish before we exit 0
         print(f"draining (timeout {args.drain_timeout}s) ...", flush=True)
         await engine.drain(timeout_s=args.drain_timeout)
+    if dump:
+        _dump_trace(args)
 
 
 def _supervise(args: argparse.Namespace) -> None:
@@ -160,6 +184,9 @@ def main() -> None:
                     help="seconds to finish in-flight work on SIGTERM before exiting")
     ap.add_argument("--ready-timeout", type=float, default=120.0,
                     help="(--supervise) seconds for /healthz to come up before counting a crash")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="arm span tracing and write a Chrome-trace/Perfetto JSON dump "
+                         "on exit (serve mode) or after the run (--load mode)")
     args = ap.parse_args()
 
     if args.dry:

@@ -1,0 +1,51 @@
+"""Unified telemetry: request-correlated tracing, metrics, exporters.
+
+BEYOND PAPER.  The paper's separation of concerns (frontend → IR → passes →
+backends, §2.3) pays off operationally only when an operator can see *where*
+time goes across the layers it separates.  Production deployments of this
+toolchain family (PACE, the ESCAPE dwarfs) treat per-kernel timing and
+scaling telemetry as first-class outputs; this package is that substrate:
+
+* :mod:`repro.obs.trace` — structured span tracer: nested spans on ONE
+  monotonic clock, bounded ring-buffer retention, a strict no-op fast path
+  when disabled, and per-request trace-id correlation (one batched dispatch
+  span links every request that rode it).
+* :mod:`repro.obs.metrics` — counters / gauges / streaming-quantile
+  histograms behind a registry with Prometheus text export; the serving
+  engine's ``stats()`` is a view of it and ``GET /metrics`` serves it.
+* :mod:`repro.obs.export` — Chrome-trace/Perfetto JSON dump + validation,
+  and the optional ``jax.profiler`` annotation bridge.
+
+Instrumented layers: stencil build (frontend → passes → codegen → autotune),
+program trace/compile, ensemble dispatch, and the full serving request
+lifecycle (admit → queue → window → scatter → dispatch → gather → emit).
+Everything is off by default and ≈ free while off; arm with ``REPRO_TRACE=1``,
+``serve --trace-out``, or per call via ``exec_info={"trace": True}``.
+See docs/observability.md for the span taxonomy and metric names.
+"""
+
+from . import export, metrics, trace
+from .export import chrome_trace, jax_profiler_span, validate_chrome_trace, write_chrome_trace
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import NOOP_SPAN, Span, Tracer, capture, configure, monotonic, span
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NOOP_SPAN",
+    "Span",
+    "Tracer",
+    "capture",
+    "chrome_trace",
+    "configure",
+    "export",
+    "jax_profiler_span",
+    "metrics",
+    "monotonic",
+    "span",
+    "trace",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+]

@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core import caching, ir
 from repro.core import stencil as stencil_mod
 from repro.core.storage import Storage
+from repro.obs import trace as otrace
 
 from . import halo as halo_planning
 from .graph import ProgramGraph
@@ -354,6 +355,17 @@ class CompiledProgram:
             "compile_seconds": 0.0,
         }
         self.report["compile_seconds"] = time.perf_counter() - t0
+        otrace.current_tracer().add_span(
+            "program.compile",
+            t0,
+            time.perf_counter(),
+            category="compile",
+            program=name,
+            backend=backend,
+            groups=len(groups),
+            fused_stencils=self.report["fused_stencils"],
+            fingerprint=self.fingerprint,
+        )
 
     # -- execution ---------------------------------------------------------
 
@@ -529,12 +541,14 @@ class ProgramObject:
     # -- tracing / compiling ------------------------------------------------
 
     def trace(self, fields: Dict[str, Any], scalars: Dict[str, Any]) -> Trace:
-        t = Trace(self.name)
-        handles = [t.add_field(n, fields[n]) for n in self.field_params]
-        scalar_handles = {n: t.add_scalar(n, scalars[n]) for n in self.scalar_params}
-        with tracing(t):
-            result = self.definition(*handles, **scalar_handles)
-        t.finish(result)
+        with otrace.span("program.trace", category="compile", program=self.name) as tsp:
+            t = Trace(self.name)
+            handles = [t.add_field(n, fields[n]) for n in self.field_params]
+            scalar_handles = {n: t.add_scalar(n, scalars[n]) for n in self.scalar_params}
+            with tracing(t):
+                result = self.definition(*handles, **scalar_handles)
+            t.finish(result)
+            tsp.set("nodes", len(t.nodes))
         return t
 
     def compiled(self, fields: Dict[str, Any], scalars: Dict[str, Any]) -> CompiledProgram:
@@ -561,7 +575,10 @@ class ProgramObject:
         fields, scalars = self._bind(args, kwargs)
         cp = self.compiled(fields, scalars)
         raw = {n: self._raw(v) for n, v in fields.items()}
-        outs, writes = cp.execute(raw, dict(scalars), exec_info)
+        with otrace.span(
+            "program.run", category="program", program=self.name, backend=self.backend
+        ):
+            outs, writes = cp.execute(raw, dict(scalars), exec_info)
         # every written program buffer persists into its storage (eager
         # parity on all backends), then the output binding rebinds — so a
         # rotation like {"phi": phi_new} wins over phi_new's own write
@@ -609,7 +626,11 @@ class ProgramObject:
 
             steps = jax.jit(_steps)
             cp._iter_cache[int(n)] = steps
-        final = steps(raw, values)
+        with otrace.span(
+            "program.iterate", category="program", program=self.name,
+            backend=self.backend, steps=int(n),
+        ):
+            final = steps(raw, values)
         if exec_info is not None:
             exec_info["program_report"] = dict(cp.report)
             exec_info["program_report"]["iterated_steps"] = n

@@ -32,6 +32,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import monotonic
+
 log = logging.getLogger("repro.runtime")
 
 
@@ -61,10 +63,13 @@ class StragglerWatchdog:
     def record(self, step: int, dt: float) -> bool:
         self.stats.steps += 1
         flagged = False
-        if len(self.times) >= 8:
+        if self.times:
+            # the rolling median is maintained from the very first sample —
+            # consumers like the serving engine's retry_after_ms need a real
+            # estimate long before the 8-sample straggler warm-up completes
             med = float(np.median(self.times[-self.window :]))
             self.stats.median_s = med
-            if dt > self.factor * med:
+            if len(self.times) >= 8 and dt > self.factor * med:
                 self.stats.stragglers += 1
                 flagged = True
                 log.warning("straggler: step %d took %.3fs (median %.3fs)", step, dt, med)
@@ -106,7 +111,7 @@ class RestartPolicy:
     def record_crash(self, now: Optional[float] = None) -> bool:
         """Record one child exit; returns True when this tips into a crash
         loop (caller should give up instead of restarting)."""
-        now = time.monotonic() if now is None else now
+        now = monotonic() if now is None else now
         self._crash_times.append(now)
         window = [t for t in self._crash_times if now - t <= self.crash_window_s]
         self._crash_times = window
@@ -176,8 +181,8 @@ class Supervisor:
     def wait_ready(self) -> bool:
         """Poll the probe until ready; False if the child dies or the
         readiness timeout expires first."""
-        deadline = time.monotonic() + self.ready_timeout_s
-        while time.monotonic() < deadline:
+        deadline = monotonic() + self.ready_timeout_s
+        while monotonic() < deadline:
             if self.proc is not None and self.proc.poll() is not None:
                 return False
             if self.probe():

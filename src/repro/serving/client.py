@@ -26,11 +26,12 @@ count recovered vs. failed requests instead of dying on the first casualty."""
 from __future__ import annotations
 
 import asyncio
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.obs.trace import monotonic
 
 from .engine import ServingEngine
 from .protocol import OVERLOADED, ServingError, decode_event, dumps, encode_array, loads
@@ -162,7 +163,7 @@ def _fold_events(request_id: str, events: List[Dict[str, Any]], t0: float, keep:
     steps_seen: List[int] = []
     step_fields: Dict[int, Dict[str, np.ndarray]] = {}
     final_fields: Dict[str, np.ndarray] = {}
-    occupancy, members, latency = 0.0, 0, time.perf_counter() - t0
+    occupancy, members, latency = 0.0, 0, monotonic() - t0
     error_code: Optional[int] = None
     error_reason: Optional[str] = None
     for ev in events:
@@ -211,7 +212,7 @@ async def drive_engine(
 
     async def one(i: int, spec: RequestSpec) -> RequestResult:
         rid = spec.request_id or f"load-{i}"
-        t0 = time.perf_counter()
+        t0 = monotonic()
         attempt = 0
         while True:
             try:
@@ -241,9 +242,9 @@ async def drive_engine(
         events = [ev async for ev in engine.stream(req)]
         return _fold_events(rid, events, t0, keep_fields)
 
-    t0 = time.perf_counter()
+    t0 = monotonic()
     results = await asyncio.gather(*(one(i, s) for i, s in enumerate(specs)))
-    return LoadReport(results=list(results), wall_s=time.perf_counter() - t0)
+    return LoadReport(results=list(results), wall_s=monotonic() - t0)
 
 
 def _forecast_frame(rid: str, spec: RequestSpec) -> Dict[str, Any]:
@@ -338,12 +339,12 @@ async def drive_server(
                         done[rid].set()
 
             pump = asyncio.get_running_loop().create_task(reader())
-            t0 = time.perf_counter()
+            t0 = monotonic()
             for rid in ids:
-                t0s[rid] = time.perf_counter()
+                t0s[rid] = monotonic()
                 await ws.send_str(dumps(frames[rid]))
             await asyncio.gather(*(d.wait() for d in done.values()))
-            wall = time.perf_counter() - t0
+            wall = monotonic() - t0
             pump.cancel()
             for t in resend_tasks:
                 t.cancel()

@@ -63,7 +63,7 @@ import asyncio
 import itertools
 import json
 import math
-import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field as dc_field
 from typing import Any, AsyncIterator, Dict, List, Optional, Sequence, Tuple
 
@@ -73,6 +73,10 @@ from repro.core import caching
 from repro.core.storage import Storage
 from repro.ensemble import Ensemble
 from repro.ensemble import batch as ens_batch
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
+from repro.obs.export import jax_profiler_span
+from repro.obs.trace import monotonic
 from repro.program.compile import ProgramObject
 from repro.runtime.supervise import StragglerWatchdog
 
@@ -136,7 +140,8 @@ class ForecastRequest:
     want_stats: bool = False
     deadline_ms: Optional[float] = None
     submitted_at: float = 0.0
-    deadline_at: Optional[float] = None  # perf_counter deadline, set at submit
+    queue_wait_s: Optional[float] = None  # submit → window pickup, set by the worker
+    deadline_at: Optional[float] = None  # monotonic deadline, set at submit
     abandoned: bool = False  # transport saw the client vanish — stop emitting
     terminal: bool = False  # a done/error was posted; later events are dropped
     events: "asyncio.Queue[Dict[str, Any]]" = dc_field(default_factory=asyncio.Queue)
@@ -157,7 +162,7 @@ class ForecastRequest:
     def expired(self, now: Optional[float] = None) -> bool:
         if self.deadline_at is None:
             return False
-        return (time.perf_counter() if now is None else now) > self.deadline_at
+        return (monotonic() if now is None else now) > self.deadline_at
 
 
 class ProgramEntry:
@@ -368,6 +373,9 @@ class ServingEngine:
         retry_attempts: int = 3,
         retry_backoff_ms: float = 20.0,
         faults: Optional[FaultInjector] = None,
+        tracer: Optional[otrace.Tracer] = None,
+        metrics: Optional[obs_metrics.MetricsRegistry] = None,
+        jax_profile: bool = False,
     ):
         self.window_s = float(window_ms) / 1e3
         self.max_queue = int(max_queue)
@@ -382,20 +390,81 @@ class ServingEngine:
         self._inflight = 0
         self._draining = False
         self.watchdog = StragglerWatchdog(factor=straggler_factor)
-        self._stats: Dict[str, Any] = {
-            "requests": 0,
-            "batches": 0,
-            "dispatches": 0,
-            "steps_streamed": 0,
-            "padded_members": 0,
-            "live_members": 0,
-            "rejected_overloaded": 0,
-            "deadline_expired": 0,
-            "retries": 0,
-            "bisects": 0,
-            "worker_failures": 0,
-            "abandoned": 0,
+        # a fixed tracer wins; otherwise spans follow the contextvar routing
+        # (capture() overrides, REPRO_TRACE/configure() for the process default)
+        self._tracer = tracer
+        self.jax_profile = bool(jax_profile)
+        # every operational counter lives in the registry; stats() is a view
+        # of it, and the transport serves to_prometheus() on GET /metrics
+        self.metrics = metrics if metrics is not None else obs_metrics.MetricsRegistry()
+        reg = self.metrics
+        self._c: Dict[str, obs_metrics.Counter] = {
+            "requests": reg.counter("serving_requests_total", "requests admitted"),
+            "batches": reg.counter("serving_batches_total", "batching windows dispatched"),
+            "dispatches": reg.counter("serving_dispatches_total", "segment dispatches completed"),
+            "steps_streamed": reg.counter("serving_steps_streamed_total", "step events emitted"),
+            "padded_members": reg.counter(
+                "serving_padded_members_total", "member slots dispatched (padding included)"
+            ),
+            "live_members": reg.counter(
+                "serving_live_members_total", "request-backed member slots dispatched"
+            ),
+            "rejected_overloaded": reg.counter(
+                "serving_rejected_overloaded_total", "503 backpressure rejections"
+            ),
+            "deadline_expired": reg.counter(
+                "serving_deadline_expired_total", "requests expired at a segment boundary"
+            ),
+            "retries": reg.counter("serving_retries_total", "scatter/dispatch/gather retries"),
+            "bisects": reg.counter(
+                "serving_bisects_total", "batch bisections after exhausted retries"
+            ),
+            "worker_failures": reg.counter(
+                "serving_worker_failures_total", "batching-worker failures survived"
+            ),
+            "abandoned": reg.counter("serving_abandoned_total", "requests abandoned by clients"),
         }
+        reg.gauge(
+            "serving_queue_depth", "requests waiting for a batching window", fn=self._queue.qsize
+        )
+        reg.gauge(
+            "serving_inflight",
+            "requests inside a batching window or dispatch",
+            fn=lambda: self._inflight,
+        )
+        for st in (SERVING, DEGRADED, DRAINING):
+            reg.gauge(
+                "serving_state",
+                "engine health state (1 marks the current state)",
+                fn=lambda s=st: float(self.state == s),
+                state=st,
+            )
+        self._h_window = reg.histogram(
+            "serving_window_requests", "requests collected per batching window"
+        )
+        self._h_occupancy = reg.histogram(
+            "serving_batch_occupancy", "live members / padded members per batch"
+        )
+        self._h_dispatch = reg.histogram(
+            "serving_dispatch_seconds", "segment dispatch wall seconds"
+        )
+        self._h_queue_wait = reg.histogram(
+            "serving_queue_wait_seconds", "submit-to-window-pickup wait seconds"
+        )
+        self._h_latency = reg.histogram(
+            "serving_request_latency_seconds", "submit-to-done latency seconds"
+        )
+
+    # -- telemetry plumbing --------------------------------------------------
+
+    def _trace(self) -> otrace.Tracer:
+        return self._tracer if self._tracer is not None else otrace.current_tracer()
+
+    def _span(self, name: str, **kwargs: Any):
+        return self._trace().span(name, category="serving", **kwargs)
+
+    def _tevent(self, name: str, **kwargs: Any) -> None:
+        self._trace().event(name, category="serving", **kwargs)
 
     # -- health state --------------------------------------------------------
 
@@ -411,8 +480,14 @@ class ServingEngine:
 
     def _retry_after_ms(self) -> float:
         """How long an overload-rejected client should back off: the median
-        dispatch wall (watchdog) times the number of batches queued ahead."""
-        med_s = self.watchdog.stats.median_s or max(self.window_s, 1e-3)
+        dispatch wall (watchdog) times the number of batches queued ahead.
+
+        Before any dispatch has been recorded the watchdog median is 0.0 (and
+        it must never be NaN-poisoned by an empty sample set), so the window
+        length stands in as the only latency scale the engine knows yet."""
+        med_s = self.watchdog.stats.median_s
+        if not med_s or math.isnan(med_s):
+            med_s = max(self.window_s, 1e-3)
         cap = max((e.max_batch for e in self._programs.values()), default=1)
         pending = self._queue.qsize() + self._inflight
         batches_ahead = max(1, math.ceil(max(pending, 1) / cap))
@@ -517,17 +592,24 @@ class ServingEngine:
                 retry_after_ms=self._retry_after_ms(),
             )
         if self._queue.qsize() >= self.max_queue:
-            self._stats["rejected_overloaded"] += 1
+            self._c["rejected_overloaded"].inc()
+            self._tevent(
+                "serving.reject", reason="overloaded", queue_depth=self._queue.qsize()
+            )
             raise ServingError(
                 OVERLOADED,
                 f"admission queue full ({self.max_queue} requests)",
                 retry_after_ms=self._retry_after_ms(),
             )
-        req = self.admit(*args, **kwargs)
-        req.submitted_at = time.perf_counter()
+        with self._span("serving.admit") as asp:
+            req = self.admit(*args, **kwargs)
+            asp.link(req.request_id)
+            asp.set("program", req.entry.name)
+            asp.set("steps", req.steps)
+        req.submitted_at = monotonic()
         if req.deadline_ms is not None:
             req.deadline_at = req.submitted_at + req.deadline_ms / 1e3
-        self._stats["requests"] += 1
+        self._c["requests"].inc()
         self._ensure_worker()
         self._queue.put_nowait(req)
         req.post(
@@ -570,7 +652,7 @@ class ServingEngine:
         submission respawns the worker."""
         if task.cancelled() or task.exception() is None:
             return
-        self._stats["worker_failures"] += 1
+        self._c["worker_failures"].inc()
         exc = task.exception()
         self._fail_all_queued(f"worker died: {type(exc).__name__}: {exc}")
         if self._worker is task:
@@ -601,11 +683,31 @@ class ServingEngine:
                 out.append((entry, reqs[i : i + entry.max_batch]))
         return out
 
+    def _picked_up(self, req: ForecastRequest) -> None:
+        """Queue-wait accounting at the moment the worker pops a request:
+        the wait becomes a histogram sample and a retroactive span (nothing
+        brackets it live, so it is recorded from its two endpoints)."""
+        now = monotonic()
+        if not req.submitted_at:
+            return
+        req.queue_wait_s = now - req.submitted_at
+        self._h_queue_wait.observe(req.queue_wait_s)
+        tracer = self._trace()
+        if tracer.enabled:
+            tracer.add_span(
+                "serving.queue",
+                req.submitted_at,
+                now,
+                category="serving",
+                trace_ids=(req.request_id,),
+            )
+
     async def _run_worker(self) -> None:
         while True:
             first = await self._queue.get()
             batch = [first]
             self._inflight += 1
+            self._picked_up(first)
             try:
                 loop = asyncio.get_running_loop()
                 # DEGRADED sheds batching latency: a quarter window drains the
@@ -613,15 +715,22 @@ class ServingEngine:
                 window = self.window_s * (0.25 if self.state == DEGRADED else 1.0)
                 deadline = loop.time() + window
                 cap = max(e.max_batch for e in self._programs.values())
-                while len(batch) < cap:
-                    remaining = deadline - loop.time()
-                    if remaining <= 0:
-                        break
-                    try:
-                        batch.append(await asyncio.wait_for(self._queue.get(), remaining))
+                with self._span("serving.window", window_s=window) as wsp:
+                    wsp.link(first.request_id)
+                    while len(batch) < cap:
+                        remaining = deadline - loop.time()
+                        if remaining <= 0:
+                            break
+                        try:
+                            req = await asyncio.wait_for(self._queue.get(), remaining)
+                        except asyncio.TimeoutError:
+                            break
+                        batch.append(req)
                         self._inflight += 1
-                    except asyncio.TimeoutError:
-                        break
+                        self._picked_up(req)
+                        wsp.link(req.request_id)
+                    wsp.set("requests", len(batch))
+                self._h_window.observe(len(batch))
                 for entry, chunk in self._group(batch):
                     try:
                         await self._run_batch(entry, chunk)
@@ -633,7 +742,7 @@ class ServingEngine:
                 self._fail_requests(batch, INTERNAL, "engine shutting down")
                 raise
             except Exception as e:  # noqa: BLE001 — window/grouping failures must not strand requests
-                self._stats["worker_failures"] += 1
+                self._c["worker_failures"].inc()
                 self._fail_requests(batch, INTERNAL, f"worker failure: {type(e).__name__}: {e}")
             finally:
                 self._inflight -= len(batch)
@@ -641,10 +750,19 @@ class ServingEngine:
     # -- batch execution: segments, deadlines, retry-with-bisect -------------
 
     async def _run_batch(self, entry: ProgramEntry, requests: List[ForecastRequest]) -> None:
-        batch_id = self._stats["batches"]
-        self._stats["batches"] += 1
+        batch_id = int(self._c["batches"].value)
+        self._c["batches"].inc()
         pairs = [(r, dict(r.fields)) for r in requests]
-        await self._run_span(entry, pairs, 0, None, initial=True, batch_id=batch_id)
+        # ONE batch span links every co-batched request; the scatter/dispatch/
+        # gather spans and any retry/bisect events nest inside it
+        with self._span(
+            "serving.batch",
+            trace_ids=[r.request_id for r in requests],
+            batch_id=batch_id,
+            program=entry.name,
+            requests=len(requests),
+        ):
+            await self._run_span(entry, pairs, 0, None, initial=True, batch_id=batch_id)
 
     async def _run_span(
         self,
@@ -670,16 +788,23 @@ class ServingEngine:
         m = entry.pad_to(k)
         ens = entry.ensembles[m]
         if initial:
-            self._stats["live_members"] += k
-            self._stats["padded_members"] += m
+            self._c["live_members"].inc(k)
+            self._c["padded_members"].inc(m)
+            self._h_occupancy.observe(k / m)
         batch_info = {"id": batch_id, "members": m, "requests": k, "occupancy": k / m}
 
         try:
-            storages = await self._retrying(
-                "scatter",
-                [r.request_id for r in reqs],
-                lambda: entry._batch_storages([s for _, s in pairs], m, full_state=not initial),
-            )
+            with self._span(
+                "serving.scatter",
+                trace_ids=[r.request_id for r in reqs],
+                members=m,
+                resumed=not initial,
+            ):
+                storages = await self._retrying(
+                    "scatter",
+                    [r.request_id for r in reqs],
+                    lambda: entry._batch_storages([s for _, s in pairs], m, full_state=not initial),
+                )
         except Exception as e:  # noqa: BLE001 — scatter failure: bisect like a failed dispatch
             await self._bisect_or_fail(entry, pairs, t0, segments, e, batch_id, None)
             return
@@ -693,17 +818,33 @@ class ServingEngine:
             if not live:
                 return
             try:
-                t1 = time.perf_counter()
-                await self._retrying(
-                    "dispatch",
-                    [r.request_id for r, _ in live],
-                    lambda seg=seg: loop.run_in_executor(
-                        None, lambda: ens.iterate(seg, *args, **scalars)
-                    ),
-                    is_async=True,
+                t1 = monotonic()
+                profiled = (
+                    jax_profiler_span(f"serving.dispatch[{entry.name}]")
+                    if self.jax_profile
+                    else nullcontext()
                 )
-                self.watchdog.record(self._stats["dispatches"], time.perf_counter() - t1)
-                self._stats["dispatches"] += 1
+                with self._span(
+                    "serving.dispatch",
+                    trace_ids=[r.request_id for r, _ in live],
+                    batch_id=batch_id,
+                    segment=si,
+                    steps=seg,
+                    members=m,
+                    requests=len(live),
+                ), profiled:
+                    await self._retrying(
+                        "dispatch",
+                        [r.request_id for r, _ in live],
+                        lambda seg=seg: loop.run_in_executor(
+                            None, lambda: ens.iterate(seg, *args, **scalars)
+                        ),
+                        is_async=True,
+                    )
+                dt = monotonic() - t1
+                self.watchdog.record(int(self._c["dispatches"].value), dt)
+                self._h_dispatch.observe(dt)
+                self._c["dispatches"].inc()
             except Exception as e:  # noqa: BLE001 — dispatch exhausted its retries
                 await self._bisect_or_fail(entry, live, t, segments[si:], e, batch_id, storages)
                 return
@@ -717,21 +858,27 @@ class ServingEngine:
         for r, _ in pairs:
             if not self._still_wanted(r):
                 continue
-            r.post(
-                {
-                    "type": "done",
-                    "request_id": r.request_id,
-                    "steps": r.steps,
-                    "batch": dict(batch_info),
-                    "latency_s": time.perf_counter() - r.submitted_at,
-                }
+            latency_s = monotonic() - r.submitted_at
+            self._h_latency.observe(latency_s)
+            self._tevent(
+                "serving.done", trace_ids=(r.request_id,), latency_s=latency_s, steps=r.steps
             )
+            done_event = {
+                "type": "done",
+                "request_id": r.request_id,
+                "steps": r.steps,
+                "batch": dict(batch_info),
+                "latency_s": latency_s,
+            }
+            if r.queue_wait_s is not None:
+                done_event["queue_wait_s"] = r.queue_wait_s
+            r.post(done_event)
 
     def _still_wanted(self, r: ForecastRequest) -> bool:
         if r.terminal:
             return False
         if r.abandoned:
-            self._stats["abandoned"] += 1
+            self._c["abandoned"].inc()
             r.terminal = True  # nobody is listening — seal it so it counts once
             return False
         return True
@@ -742,13 +889,19 @@ class ServingEngine:
         """Deadline enforcement at a segment boundary: expired requests get
         their 504-style error NOW instead of burning another dispatch; the
         still-live members of the batch are returned."""
-        now = time.perf_counter()
+        now = monotonic()
         live = []
         for r, s in pairs:
             if not self._still_wanted(r):
                 continue
             if r.expired(now):
-                self._stats["deadline_expired"] += 1
+                self._c["deadline_expired"].inc()
+                self._tevent(
+                    "serving.deadline",
+                    trace_ids=(r.request_id,),
+                    deadline_ms=r.deadline_ms,
+                    waited_ms=(now - r.submitted_at) * 1e3,
+                )
                 r.post(
                     {
                         "type": "error",
@@ -774,11 +927,18 @@ class ServingEngine:
                 return await result if is_async else result
             except asyncio.CancelledError:
                 raise
-            except Exception:  # noqa: BLE001 — injected and real faults retry alike
+            except Exception as e:  # noqa: BLE001 — injected and real faults retry alike
                 attempt += 1
                 if attempt >= self.retry_attempts:
                     raise
-                self._stats["retries"] += 1
+                self._c["retries"].inc()
+                self._tevent(
+                    "serving.retry",
+                    trace_ids=keys,
+                    site=site,
+                    attempt=attempt,
+                    error=f"{type(e).__name__}: {e}",
+                )
                 await asyncio.sleep(self.retry_backoff_s * 2 ** (attempt - 1))
 
     async def _bisect_or_fail(
@@ -799,6 +959,11 @@ class ServingEngine:
             return
         if len(live) == 1:
             _, r, _ = live[0]
+            self._tevent(
+                "serving.request_failed",
+                trace_ids=(r.request_id,),
+                error=f"{type(error).__name__}: {error}",
+            )
             r.post(
                 {
                     "type": "error",
@@ -809,7 +974,14 @@ class ServingEngine:
                 }
             )
             return
-        self._stats["bisects"] += 1
+        self._c["bisects"].inc()
+        self._tevent(
+            "serving.bisect",
+            trace_ids=[r.request_id for _, r, _ in live],
+            requests=len(live),
+            resume_step=t0,
+            error=f"{type(error).__name__}: {error}",
+        )
         if storages is not None:
             # resume from the batch's current (step-t0) states, not the inputs
             resumed = [(r, entry.gather_state(storages, i)) for i, r, _ in live]
@@ -838,11 +1010,14 @@ class ServingEngine:
         fails past its retries errors only this request (the batch and its
         other members keep going)."""
         try:
-            gathered = await self._retrying(
-                "gather",
-                [r.request_id],
-                lambda: {f: ens_batch.gather_member(storages[f], i) for f in entry.stream_fields},
-            )
+            with self._span("serving.gather", trace_id=r.request_id, step=t, member=i):
+                gathered = await self._retrying(
+                    "gather",
+                    [r.request_id],
+                    lambda: {
+                        f: ens_batch.gather_member(storages[f], i) for f in entry.stream_fields
+                    },
+                )
         except Exception as e:  # noqa: BLE001
             r.post(
                 {
@@ -865,20 +1040,21 @@ class ServingEngine:
         if r.want_stats and self.state != DEGRADED:
             ev["stats"] = {f: _field_stats(a) for f, a in gathered.items()}
         r.post(ev)
-        self._stats["steps_streamed"] += 1
+        self._c["steps_streamed"].inc()
 
     # -- lifecycle / introspection ------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
-        out = dict(self._stats)
+        """The operational snapshot — a *view* of the metrics registry (every
+        counter here is also a Prometheus series on ``GET /metrics``)."""
+        out: Dict[str, Any] = {k: int(c.value) for k, c in self._c.items()}
         out["programs"] = sorted(self._programs)
         out["state"] = self.state
         out["queue_depth"] = self._queue.qsize()
         out["inflight"] = self._inflight
+        padded = int(self._c["padded_members"].value)
         out["mean_occupancy"] = (
-            self._stats["live_members"] / self._stats["padded_members"]
-            if self._stats["padded_members"]
-            else None
+            int(self._c["live_members"].value) / padded if padded else None
         )
         out["straggler"] = {
             "dispatches": self.watchdog.stats.steps,
@@ -894,9 +1070,9 @@ class ServingEngine:
         worker finish everything queued and in flight, then stop it.  Returns
         True when fully drained, False on timeout (remaining work is failed)."""
         self._draining = True
-        deadline = None if timeout_s is None else time.perf_counter() + timeout_s
+        deadline = None if timeout_s is None else monotonic() + timeout_s
         while self._queue.qsize() or self._inflight:
-            if deadline is not None and time.perf_counter() > deadline:
+            if deadline is not None and monotonic() > deadline:
                 self._fail_all_queued("engine drain timed out")
                 await self.aclose()
                 return False

@@ -20,6 +20,11 @@ Server → client (per request, in this order):
 ``accepted`` → ``step``* → ``done``, or ``error`` at any point.  ``step``
 carries the streamed fields (encoded arrays), optional per-field statistics,
 and the batch the dispatch rode (members / live requests / occupancy).
+``done`` carries end-to-end telemetry: ``latency_s`` (submit → done on the
+engine's monotonic clock) and ``queue_wait_s`` (submit → batching-window
+pickup) — the same quantities the engine's metrics registry tracks as the
+``serving_request_latency_seconds`` / ``serving_queue_wait_seconds``
+summaries on ``GET /metrics``.
 
 Admission errors reuse HTTP flavors so clients can switch on ``code``:
 400 malformed frame, 404 unknown program, 409 fingerprint mismatch,

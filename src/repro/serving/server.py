@@ -7,6 +7,9 @@ repro[serving]``):
 * ``GET /ws``       — the websocket endpoint speaking ``serving.protocol``
 * ``GET /healthz``  — liveness probe
 * ``GET /stats``    — engine counters (requests, batches, occupancy, stragglers)
+  plus the full metrics-registry dump under ``"metrics"``
+* ``GET /metrics``  — the same registry as Prometheus text exposition 0.0.4
+  (request/retry/bisect counters, queue-depth/state gauges, latency summaries)
 * ``GET /programs`` — the catalog, same payload as a ``programs`` frame
 
 Each connection may multiplex many requests: frames carry ``request_id`` and
@@ -123,7 +126,15 @@ def create_app(engine: ServingEngine) -> "web.Application":
         return web.json_response({"ok": ok, "state": engine.state}, status=200 if ok else 503)
 
     async def stats(_request: "web.Request") -> "web.Response":
-        return web.json_response(engine.stats())
+        payload = engine.stats()
+        payload["metrics"] = engine.metrics.collect()
+        return web.json_response(payload)
+
+    async def metrics(_request: "web.Request") -> "web.Response":
+        return web.Response(
+            body=engine.metrics.to_prometheus().encode("utf-8"),
+            headers={"Content-Type": "text/plain; version=0.0.4; charset=utf-8"},
+        )
 
     async def programs(_request: "web.Request") -> "web.Response":
         return web.json_response({"programs": engine.catalog()})
@@ -132,6 +143,7 @@ def create_app(engine: ServingEngine) -> "web.Application":
     app.router.add_get("/ws", ws_handler)
     app.router.add_get("/healthz", healthz)
     app.router.add_get("/stats", stats)
+    app.router.add_get("/metrics", metrics)
     app.router.add_get("/programs", programs)
     return app
 

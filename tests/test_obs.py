@@ -1,0 +1,456 @@
+"""Telemetry contract tests: tracer, metrics registry, exporters, and the
+request-correlated serving instrumentation.
+
+The load-bearing assertions:
+
+* the disabled tracing path is a shared no-op singleton with a bounded cost
+  (serving/stencil hot paths call ``span()`` unconditionally);
+* trace IDs propagate through a bisected poison batch — one batch span links
+  every co-batched request, and the bisect/retry events carry the affected
+  request ids — so one request's whole story is recoverable from a dump;
+* the Chrome-trace/Perfetto export validates against its own schema checker
+  (the same one the CI trace-capture step runs);
+* the Prometheus text exposition carries the engine's counters, gauges, and
+  latency summaries;
+* ``retry_after_ms`` stays sane before the watchdog has any samples (the
+  empty-median regression).
+"""
+
+import asyncio
+import math
+import time
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
+from repro.runtime.supervise import StragglerWatchdog
+from repro.serving import FaultInjector, RequestSpec, ServingEngine, drive_engine
+from repro.stencils.forecast import build_forecast_step, make_forecast_fields, request_state
+
+DOM = (10, 8, 4)
+
+
+# ---------------------------------------------------------------------------
+# tracer: spans, nesting, ring buffer
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_attrs_events_and_links():
+    tr = otrace.Tracer(enabled=True)
+    with tr.span("outer", category="t", a=1) as outer:
+        outer.event("mark", note="hi")
+        with tr.span("inner", trace_id="req-1") as inner:
+            inner.set("b", 2)
+            inner.link("req-2")
+            inner.link("req-2")  # idempotent
+    spans = tr.snapshot()
+    assert [s["name"] for s in spans] == ["inner", "outer"]  # finish order
+    inner_d, outer_d = spans
+    assert inner_d["parent"] == outer_d["id"]
+    assert inner_d["trace_ids"] == ["req-1", "req-2"]
+    assert inner_d["attrs"]["b"] == 2
+    assert outer_d["attrs"]["a"] == 1
+    assert outer_d["events"][0]["name"] == "mark"
+    assert outer_d["end_s"] >= outer_d["start_s"]
+
+
+def test_span_records_error_attribute():
+    tr = otrace.Tracer(enabled=True)
+    with pytest.raises(ValueError):
+        with tr.span("boom"):
+            raise ValueError("kaput")
+    (sp,) = tr.snapshot()
+    assert sp["attrs"]["error"] == "ValueError: kaput"
+
+
+def test_ring_buffer_retention_is_bounded():
+    tr = otrace.Tracer(enabled=True, capacity=8)
+    for i in range(50):
+        with tr.span(f"s{i}"):
+            pass
+    spans = tr.snapshot()
+    assert len(spans) == 8
+    assert [s["name"] for s in spans] == [f"s{i}" for i in range(42, 50)]
+    tr.clear()
+    assert len(tr) == 0
+
+
+def test_standalone_event_becomes_instant_record():
+    tr = otrace.Tracer(enabled=True)
+    tr.event("lonely", trace_ids=("r1",), why="no span open")
+    (ev,) = tr.snapshot()
+    assert ev["instant"] and ev["trace_ids"] == ["r1"] and ev["start_s"] == ev["end_s"]
+
+
+def test_event_inside_span_attaches_and_carries_trace_ids():
+    tr = otrace.Tracer(enabled=True)
+    with tr.span("host"):
+        tr.event("hit", trace_ids=("r9",), site="dispatch")
+    (sp,) = tr.snapshot()
+    assert sp["trace_ids"] == ["r9"]  # linked onto the span
+    assert sp["events"][0]["attrs"]["trace_ids"] == ["r9"]  # and kept on the event
+
+
+# ---------------------------------------------------------------------------
+# the disabled fast path
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_span_is_the_noop_singleton():
+    tr = otrace.Tracer(enabled=False)
+    assert tr.span("anything") is otrace.NOOP_SPAN
+    assert tr.span("other", trace_id="x", heavy=list(range(100))) is otrace.NOOP_SPAN
+    tr.event("dropped")
+    tr.add_span("dropped", 0.0, 1.0)
+    assert len(tr) == 0
+
+
+def test_disabled_path_overhead_is_bounded():
+    """100k disabled span() round-trips must stay well under a second — the
+    serving hot path calls this unconditionally per dispatch/gather."""
+    tr = otrace.Tracer(enabled=False)
+    n = 100_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tr.span("hot", category="serving"):
+            pass
+    dt = time.perf_counter() - t0
+    assert len(tr) == 0
+    assert dt < 1.0, f"{n} disabled spans took {dt:.3f}s"
+
+
+def test_capture_routes_module_level_spans_locally():
+    before = len(otrace.get_tracer())
+    with otrace.capture() as cap:
+        with otrace.span("captured", category="test"):
+            pass
+        assert otrace.enabled()
+    assert [s["name"] for s in cap.snapshot()] == ["captured"]
+    assert len(otrace.get_tracer()) == before  # default tracer untouched
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + Prometheus exposition
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    reg = obs_metrics.MetricsRegistry()
+    c = reg.counter("t_total", "things")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("t_level", "level")
+    g.set(5)
+    g.dec(2)
+    assert g.value == 3
+    live = reg.gauge("t_live", "callback-backed", fn=lambda: 42.0)
+    assert live.value == 42.0
+    broken = reg.gauge("t_broken", "bad callback", fn=lambda: 1 / 0)
+    assert math.isnan(broken.value)  # a scrape must survive a bad callback
+    h = reg.histogram("t_seconds", "walls")
+    for v in [1.0, 2.0, 3.0, 4.0, 5.0]:
+        h.observe(v)
+    assert h.count == 5 and h.sum == 15.0
+    assert h.quantile(0.5) == 3.0
+    assert h.quantile(0.99) == 5.0
+    assert math.isnan(reg.histogram("t_empty", "no samples").quantile(0.5))
+
+
+def test_registry_rejects_kind_conflicts_and_bad_names():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("dual", "x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("dual", "x")
+    with pytest.raises(ValueError, match="invalid metric name"):
+        reg.counter("bad-name", "x")
+    with pytest.raises(ValueError, match="invalid label name"):
+        reg.counter("ok", "x", **{"bad-label": "v"})
+
+
+def test_prometheus_text_exposition_contract():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("req_total", "requests", code="200").inc(7)
+    reg.counter("req_total", "requests", code="503").inc(1)
+    reg.gauge("depth", "queue depth").set(4)
+    h = reg.histogram("lat_seconds", "latency")
+    h.observe(0.25)
+    text = reg.to_prometheus()
+    lines = text.splitlines()
+    assert "# HELP req_total requests" in lines
+    assert "# TYPE req_total counter" in lines
+    assert 'req_total{code="200"} 7.0' in lines
+    assert 'req_total{code="503"} 1.0' in lines
+    assert "# TYPE depth gauge" in lines
+    assert "depth 4.0" in lines
+    assert "# TYPE lat_seconds summary" in lines
+    assert 'lat_seconds{quantile="0.5"} 0.25' in lines
+    assert "lat_seconds_sum 0.25" in lines
+    assert "lat_seconds_count 1.0" in lines
+    # every non-comment line is "name{labels} value" with a float-parseable value
+    for ln in lines:
+        if ln.startswith("#") or not ln:
+            continue
+        float(ln.rsplit(" ", 1)[1])
+
+
+def test_collect_is_json_friendly():
+    import json
+
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("a_total", "a").inc(2)
+    reg.histogram("b_seconds", "b").observe(1.5)
+    out = reg.collect()
+    assert out["a_total"] == 2
+    assert out["b_seconds"]["count"] == 1 and out["b_seconds"]["p50"] == 1.5
+    json.dumps(out)  # /stats embeds this verbatim
+
+
+# ---------------------------------------------------------------------------
+# chrome-trace export + validation
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_schema_roundtrip(tmp_path):
+    tr = otrace.Tracer(enabled=True)
+    with tr.span("parent", category="c", trace_id="r1", k="v") as sp:
+        sp.event("ping", n=1)
+        with tr.span("child"):
+            pass
+    tr.event("orphan", trace_ids=("r2",))
+    path = tmp_path / "trace.json"
+    data = obs_export.write_chrome_trace(path, tracer=tr, metadata={"run": "test"})
+    events = obs_export.validate_chrome_trace(data)
+    names = [e["name"] for e in events]
+    assert names[0] == "process_name" and events[0]["ph"] == "M"
+    assert "parent" in names and "child" in names and "ping" in names and "orphan" in names
+    parent = next(e for e in events if e["name"] == "parent")
+    child = next(e for e in events if e["name"] == "child")
+    assert parent["ph"] == "X" and parent["args"]["trace_ids"] == ["r1"]
+    assert child["args"]["parent_span_id"] == parent["args"]["span_id"]
+    assert data["otherData"]["run"] == "test"
+    # the CLI validator agrees
+    assert obs_export.main([str(path)]) == 0
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        [],
+        {"traceEvents": "nope"},
+        {"traceEvents": [{"ph": "X"}]},  # missing name/pid/tid
+        {"traceEvents": [{"name": "a", "ph": "Z", "pid": 1, "tid": 1, "ts": 0}]},
+        {"traceEvents": [{"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0}]},  # no dur
+    ],
+)
+def test_chrome_trace_validator_rejects(bad):
+    with pytest.raises(ValueError):
+        obs_export.validate_chrome_trace(bad)
+
+
+def test_request_events_filters_by_trace_id():
+    tr = otrace.Tracer(enabled=True)
+    with tr.span("batch", trace_ids=("r1", "r2")):
+        pass
+    with tr.span("other", trace_id="r3"):
+        pass
+    data = obs_export.chrome_trace(tr.snapshot())
+    mine = obs_export.request_events(data, "r1")
+    assert [e["name"] for e in mine] == ["batch"]
+
+
+def test_jax_profiler_span_never_raises():
+    with obs_export.jax_profiler_span("unit-test"):
+        x = 1 + 1
+    assert x == 2
+
+
+# ---------------------------------------------------------------------------
+# per-call stencil trace opt-in (exec_info={"trace": True})
+# ---------------------------------------------------------------------------
+
+
+def test_stencil_exec_info_trace_opt_in():
+    from repro.core import gtscript, storage
+    from repro.core.gtscript import PARALLEL, Field, computation, interval
+
+    def defs(a: Field[np.float64], b: Field[np.float64]):
+        with computation(PARALLEL), interval(...):
+            b = a + 1.0  # noqa: F841
+
+    st = gtscript.stencil(backend="numpy")(defs)
+    a = storage.from_array(np.zeros((4, 4, 3)), backend="numpy")
+    b = storage.from_array(np.zeros((4, 4, 3)), backend="numpy")
+    info = {"trace": True}
+    st(a, b, domain=(4, 4, 3), exec_info=info)
+    events = obs_export.validate_chrome_trace(info["trace"])
+    assert any(e["name"] == "stencil.run" for e in events)
+    # the opt-in never leaks into the process tracer or later calls
+    info2 = {}
+    st(a, b, domain=(4, 4, 3), exec_info=info2)
+    assert "trace" not in info2
+
+
+# ---------------------------------------------------------------------------
+# serving: trace-id propagation through a bisected poison batch
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def step():
+    return build_forecast_step("jax", DOM, name="obs_step")
+
+
+@pytest.fixture(scope="module")
+def templates():
+    return make_forecast_fields("jax", DOM)
+
+
+def _drive(engine, specs, **kw):
+    async def go():
+        async with engine:
+            return await drive_engine(engine, specs, **kw)
+
+    return asyncio.run(go())
+
+
+def _specs(n, steps=4, poison=None):
+    out = []
+    for i in range(n):
+        rid = poison if (poison and i == 1) else f"ok-{i}"
+        out.append(
+            RequestSpec(
+                program="obs_step",
+                fields={"phi": request_state(DOM, seed=i + 1)},
+                steps=steps,
+                stream_every=2,
+                request_id=rid,
+            )
+        )
+    return out
+
+
+def _make_engine(step, templates, *, faults=None, tracer=None):
+    fields, scalars = templates
+    eng = ServingEngine(
+        window_ms=25.0,
+        retry_backoff_ms=1.0,
+        faults=faults if faults is not None else FaultInjector(),
+        tracer=tracer,
+    )
+    eng.register(
+        step,
+        fields=fields,
+        scalars=scalars,
+        request_fields=("phi",),
+        member_counts=(1, 2, 4),
+        max_steps=100,
+    )
+    return eng
+
+
+def test_trace_ids_propagate_through_bisected_poison_batch(step, templates):
+    tracer = otrace.Tracer(enabled=True)
+    inj = FaultInjector(sites=("dispatch",), rate=0.0, poison=("poison-1",))
+    eng = _make_engine(step, templates, faults=inj, tracer=tracer)
+    report = _drive(eng, _specs(4, poison="poison-1"), keep_fields="none")
+    by_id = {r.request_id: r for r in report.results}
+    assert not by_id["poison-1"].ok and all(by_id[f"ok-{i}"].ok for i in (0, 2, 3))
+
+    spans = tracer.snapshot()
+    all_ids = {"poison-1", "ok-0", "ok-2", "ok-3"}
+    batches = [s for s in spans if s["name"] == "serving.batch"]
+    assert batches, "no batch span recorded"
+    # ONE batch span links every co-batched request
+    assert any(all_ids <= set(s["trace_ids"]) for s in batches)
+    # the bisect event names the affected requests
+    bisects = [ev for s in spans for ev in s["events"] if ev["name"] == "serving.bisect"]
+    assert bisects and "poison-1" in bisects[0]["attrs"]["trace_ids"]
+    # retries fired for the poison request before the bisect
+    retries = [ev for s in spans for ev in s["events"] if ev["name"] == "serving.retry"]
+    assert any("poison-1" in ev["attrs"]["trace_ids"] for ev in retries)
+
+    # the per-request view of the Perfetto dump tells the whole story:
+    # admission span + shared batch span + the bisect instant
+    data = obs_export.chrome_trace(spans)
+    obs_export.validate_chrome_trace(data)
+    mine = {e["name"] for e in obs_export.request_events(data, "poison-1")}
+    assert {"serving.admit", "serving.batch", "serving.bisect"} <= mine
+    ok0 = {e["name"] for e in obs_export.request_events(data, "ok-0")}
+    assert {"serving.admit", "serving.batch", "serving.dispatch", "serving.done"} <= ok0
+
+
+def test_engine_metrics_registry_backs_stats_and_prometheus(step, templates):
+    eng = _make_engine(step, templates)
+    report = _drive(eng, _specs(3), keep_fields="none")
+    assert report.recovered_rate == 1.0
+    st = eng.stats()
+    assert st["requests"] == 3 and st["batches"] >= 1
+    text = eng.metrics.to_prometheus()
+    assert "# TYPE serving_requests_total counter" in text
+    assert "serving_requests_total 3" in text
+    assert "# TYPE serving_queue_depth gauge" in text
+    assert 'serving_state{state="SERVING"} 1.0' in text
+    assert "# TYPE serving_dispatch_seconds summary" in text
+    assert 'serving_dispatch_seconds{quantile="0.5"}' in text
+    assert "serving_request_latency_seconds_count 3" in text
+    assert "serving_queue_wait_seconds_count 3" in text
+    collected = eng.metrics.collect()
+    assert collected["serving_requests_total"] == 3
+    # the registry and the stats() view never disagree
+    assert collected["serving_batches_total"] == st["batches"]
+
+
+def test_engine_disabled_tracing_records_nothing(step, templates):
+    tracer = otrace.Tracer(enabled=False)
+    eng = _make_engine(step, templates, tracer=tracer)
+    report = _drive(eng, _specs(2), keep_fields="none")
+    assert report.recovered_rate == 1.0
+    assert len(tracer) == 0
+
+
+# ---------------------------------------------------------------------------
+# retry_after_ms: the empty-median regression
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_median_available_before_straggler_warmup():
+    wd = StragglerWatchdog()
+    wd.record(0, 0.05)
+    wd.record(1, 0.07)
+    assert wd.stats.median_s == pytest.approx(0.05)  # was 0.0 until 8 samples
+    assert wd.stats.stragglers == 0  # flagging still warms up at 8 samples
+
+
+def test_retry_after_ms_sane_with_no_samples(step, templates):
+    eng = _make_engine(step, templates)
+    assert eng.watchdog.stats.median_s == 0.0
+    ra = eng._retry_after_ms()
+    assert math.isfinite(ra) and ra > 0
+    # a NaN-poisoned median must not leak into client backoff either
+    eng.watchdog.stats.median_s = float("nan")
+    ra = eng._retry_after_ms()
+    assert math.isfinite(ra) and ra > 0
+    # with real samples the estimate follows the measured dispatch wall
+    eng.watchdog.stats.median_s = 0.25
+    assert eng._retry_after_ms() >= 250.0
+
+
+# ---------------------------------------------------------------------------
+# package surface
+# ---------------------------------------------------------------------------
+
+
+def test_obs_package_reexports():
+    import repro.obs as obs
+
+    assert obs.monotonic is otrace.monotonic
+    assert obs.Tracer is otrace.Tracer
+    assert obs.MetricsRegistry is obs_metrics.MetricsRegistry
+    assert obs.validate_chrome_trace is obs_export.validate_chrome_trace

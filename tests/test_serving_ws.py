@@ -176,6 +176,51 @@ def test_catalog_and_admission_errors_over_websocket(step, templates):
     assert out["stats"]["requests"] == 0  # nothing was admitted
 
 
+def test_metrics_endpoint_serves_prometheus_text(step, templates):
+    """GET /metrics speaks the Prometheus text exposition (version 0.0.4) and
+    carries the engine's request/retry/bisect/queue-depth series; /stats is
+    enriched with the registry's quantile summaries under "metrics"."""
+    specs = [
+        RequestSpec("ws_step", {"phi": request_state(DOM, seed=i + 1)}, steps=2, stream_every=1)
+        for i in range(3)
+    ]
+
+    async def scenario(srv):
+        rep = await drive_server(srv.ws_url, specs)
+        out = {"report": rep}
+        async with aiohttp.ClientSession() as s:
+            async with s.get(f"http://{srv.host}:{srv.port}/metrics") as r:
+                out["status"] = r.status
+                out["content_type"] = r.headers["Content-Type"]
+                out["text"] = await r.text()
+            async with s.get(f"http://{srv.host}:{srv.port}/stats") as r:
+                out["stats"] = await r.json()
+        return out
+
+    out = serve(step, templates, scenario)
+    assert out["report"].recovered_rate == 1.0
+    assert out["status"] == 200
+    assert out["content_type"] == "text/plain; version=0.0.4; charset=utf-8"
+    text = out["text"]
+    for family, kind in [
+        ("serving_requests_total", "counter"),
+        ("serving_retries_total", "counter"),
+        ("serving_bisects_total", "counter"),
+        ("serving_queue_depth", "gauge"),
+        ("serving_request_latency_seconds", "summary"),
+    ]:
+        assert f"# TYPE {family} {kind}" in text, family
+    assert "serving_requests_total 3" in text
+    assert 'serving_state{state="SERVING"} 1.0' in text
+    assert 'serving_request_latency_seconds{quantile="0.99"}' in text
+    assert "serving_request_latency_seconds_count 3" in text
+    # /stats keeps its legacy keys and gains the registry dump
+    st = out["stats"]
+    assert st["requests"] == 3
+    assert st["metrics"]["serving_requests_total"] == 3
+    assert st["metrics"]["serving_request_latency_seconds"]["count"] == 3
+
+
 def test_load_generator_over_websocket(step, templates):
     """The deterministic load-generator smoke: N concurrent ws clients,
     streamed steps in order, final states bit-identical to sequential."""
