@@ -27,7 +27,7 @@ See docs/observability.md for the span taxonomy and metric names.
 from . import export, metrics, trace
 from .export import chrome_trace, jax_profiler_span, validate_chrome_trace, write_chrome_trace
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
-from .trace import NOOP_SPAN, Span, Tracer, capture, configure, monotonic, span
+from .trace import NOOP_SPAN, Span, Tracer, capture, configure, monotonic, span, use_tracer
 
 __all__ = [
     "Counter",
@@ -46,6 +46,7 @@ __all__ = [
     "monotonic",
     "span",
     "trace",
+    "use_tracer",
     "validate_chrome_trace",
     "write_chrome_trace",
 ]

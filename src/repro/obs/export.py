@@ -180,16 +180,29 @@ def jax_profiler_available() -> bool:
 @contextmanager
 def jax_profiler_span(name: str):
     """Annotate the enclosed work in a jax/XLA profile when jax is present;
-    transparently a no-op otherwise."""
+    transparently a no-op otherwise.
+
+    Only the *annotation* is guarded: an exception raised by the wrapped
+    block must propagate with its original type/message (retry-with-bisect
+    keys off it), so the body is never re-yielded from an ``except`` branch —
+    that would turn every dispatch failure into contextlib's
+    ``RuntimeError("generator didn't stop after throw()")``.
+    """
+    ctx = None
     if jax_profiler_available():
         try:
-            with _jax_profiler.TraceAnnotation(name):
-                yield
-            return
+            ctx = _jax_profiler.TraceAnnotation(name)
+            ctx.__enter__()
         except Exception:  # noqa: BLE001 — profiling must never fail the dispatch
-            yield
-            return
-    yield
+            ctx = None
+    try:
+        yield
+    finally:
+        if ctx is not None:
+            try:
+                ctx.__exit__(None, None, None)
+            except Exception:  # noqa: BLE001, S110 — annotation teardown is best-effort
+                pass
 
 
 def _census(events: Iterable[Dict[str, Any]]) -> Dict[str, int]:

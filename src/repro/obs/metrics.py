@@ -28,7 +28,11 @@ label values, created on first touch::
 
 Thread-safety: instrument updates take the registry lock (they happen on
 the asyncio loop and executor threads alike); reads take it too so an
-export never sees a half-updated histogram window.
+export never sees a half-updated histogram window.  The lock is reentrant:
+:meth:`MetricsRegistry.to_prometheus` and :meth:`MetricsRegistry.collect`
+hold it across the whole walk (a scrape concurrent with first-touch child
+creation must not see the family dicts mid-mutation) while the per-child
+reads they call take it again.
 """
 
 from __future__ import annotations
@@ -61,7 +65,7 @@ def _fmt(value: float) -> str:
 class Counter:
     """Monotonic counter (one labeled child of a counter family)."""
 
-    def __init__(self, lock: threading.Lock):
+    def __init__(self, lock: threading.RLock):
         self._lock = lock
         self._value = 0.0
 
@@ -79,7 +83,7 @@ class Counter:
 class Gauge:
     """Settable level, or a live read-through when built with ``fn``."""
 
-    def __init__(self, lock: threading.Lock, fn: Optional[Callable[[], float]] = None):
+    def __init__(self, lock: threading.RLock, fn: Optional[Callable[[], float]] = None):
         self._lock = lock
         self._value = 0.0
         self._fn = fn
@@ -108,7 +112,7 @@ class Gauge:
 class Histogram:
     """All-time count/sum + nearest-rank quantiles over a recent window."""
 
-    def __init__(self, lock: threading.Lock, window: int = 512):
+    def __init__(self, lock: threading.RLock, window: int = 512):
         self._lock = lock
         self.count = 0
         self.sum = 0.0
@@ -131,10 +135,11 @@ class Histogram:
             return ordered[min(rank, len(ordered)) - 1]
 
     def summary(self) -> Dict[str, float]:
-        out: Dict[str, float] = {"count": float(self.count), "sum": self.sum}
-        for q in QUANTILES:
-            out[f"p{int(q * 100)}"] = self.quantile(q)
-        return out
+        with self._lock:  # count/sum/quantiles from ONE consistent snapshot
+            out: Dict[str, float] = {"count": float(self.count), "sum": self.sum}
+            for q in QUANTILES:
+                out[f"p{int(q * 100)}"] = self.quantile(q)
+            return out
 
 
 class _Family:
@@ -149,7 +154,9 @@ class MetricsRegistry:
     """Named metric families with labeled children; Prometheus-exportable."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        # reentrant: exports hold it across the family walk while the
+        # per-child value/quantile reads take it again
+        self._lock = threading.RLock()
         self._families: Dict[str, _Family] = {}
 
     def _family(self, name: str, help_text: str, kind: str) -> _Family:
@@ -207,34 +214,38 @@ class MetricsRegistry:
     def to_prometheus(self) -> str:
         """The Prometheus text exposition (format version 0.0.4)."""
         lines: List[str] = []
-        for name in sorted(self._families):
-            fam = self._families[name]
-            lines.append(f"# HELP {name} {fam.help}")
-            lines.append(f"# TYPE {name} {fam.kind}")
-            for key, child in sorted(fam.children.items()):
-                labels = list(key)
-                if isinstance(child, Histogram):
-                    for q in QUANTILES:
-                        lines.append(
-                            self._sample(name, labels + [("quantile", str(q))], child.quantile(q))
-                        )
-                    lines.append(self._sample(f"{name}_sum", labels, child.sum))
-                    lines.append(self._sample(f"{name}_count", labels, child.count))
-                else:
-                    lines.append(self._sample(name, labels, child.value))
+        with self._lock:  # a scrape must not race first-touch child creation
+            for name in sorted(self._families):
+                fam = self._families[name]
+                lines.append(f"# HELP {name} {fam.help}")
+                lines.append(f"# TYPE {name} {fam.kind}")
+                for key, child in sorted(fam.children.items()):
+                    labels = list(key)
+                    if isinstance(child, Histogram):
+                        for q in QUANTILES:
+                            lines.append(
+                                self._sample(
+                                    name, labels + [("quantile", str(q))], child.quantile(q)
+                                )
+                            )
+                        lines.append(self._sample(f"{name}_sum", labels, child.sum))
+                        lines.append(self._sample(f"{name}_count", labels, child.count))
+                    else:
+                        lines.append(self._sample(name, labels, child.value))
         return "\n".join(lines) + "\n"
 
     def collect(self) -> Dict[str, Any]:
         """A JSON-friendly dump (what enriches ``/stats``): counters and
         gauges as numbers, histograms as their quantile summaries."""
         out: Dict[str, Any] = {}
-        for name, fam in sorted(self._families.items()):
-            entries: Dict[str, Any] = {}
-            for key, child in sorted(fam.children.items()):
-                label = ",".join(f"{k}={v}" for k, v in key) or ""
-                value = child.summary() if isinstance(child, Histogram) else child.value
-                entries[label] = value
-            out[name] = entries[""] if list(entries) == [""] else entries
+        with self._lock:  # same discipline as to_prometheus()
+            for name, fam in sorted(self._families.items()):
+                entries: Dict[str, Any] = {}
+                for key, child in sorted(fam.children.items()):
+                    label = ",".join(f"{k}={v}" for k, v in key) or ""
+                    value = child.summary() if isinstance(child, Histogram) else child.value
+                    entries[label] = value
+                out[name] = entries[""] if list(entries) == [""] else entries
         return out
 
 

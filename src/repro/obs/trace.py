@@ -196,7 +196,7 @@ class Tracer:
             current.event(name, **attrs)
             return
         now = monotonic()
-        self._spans.append(
+        self._record(
             {
                 "name": name,
                 "cat": category,
@@ -219,7 +219,7 @@ class Tracer:
         wait, measured between two points that no context manager brackets)."""
         if not self.enabled:
             return
-        self._spans.append(
+        self._record(
             {
                 "name": name,
                 "cat": category,
@@ -234,9 +234,17 @@ class Tracer:
             }
         )
 
+    def _record(self, entry: Dict[str, Any]) -> None:
+        """Every retained-buffer write lands here, under the same lock that
+        snapshot()/clear() take — recording happens from loop and executor
+        threads alike, and the discipline must not silently rely on deque
+        append atomicity."""
+        with self._lock:
+            self._spans.append(entry)
+
     def _finish(self, span: Span) -> None:
         span.end_s = monotonic()
-        self._spans.append(span.to_dict())
+        self._record(span.to_dict())
 
     # -- inspection ---------------------------------------------------------
 
@@ -304,6 +312,37 @@ def span(name: str, **kwargs: Any):
 
 def event(name: str, **kwargs: Any) -> None:
     current_tracer().event(name, **kwargs)
+
+
+class use_tracer:
+    """Route this context's module-level :func:`span`/:func:`event` calls to
+    an *existing* tracer (contrast :class:`capture`, which makes a fresh one).
+
+    The serving engine uses this to pin its resolved tracer before snapshotting
+    a :mod:`contextvars` context for an executor thread —
+    ``loop.run_in_executor`` does not propagate contextvars, so without the
+    pin the instrumented code running in the executor (e.g.
+    ``ensemble.dispatch``/``ensemble.iterate`` spans) would silently land in
+    the process-default tracer instead of the engine's or a capture()'s::
+
+        with trace.use_tracer(tracer):
+            ctx = contextvars.copy_context()
+        await loop.run_in_executor(None, ctx.run, work)
+    """
+
+    def __init__(self, tracer: Tracer):
+        self.tracer = tracer
+        self._token: Optional[contextvars.Token] = None
+
+    def __enter__(self) -> Tracer:
+        self._token = _local.set(self.tracer)
+        return self.tracer
+
+    def __exit__(self, *exc: Any) -> bool:
+        if self._token is not None:
+            _local.reset(self._token)
+            self._token = None
+        return False
 
 
 class capture:

@@ -22,12 +22,14 @@ and the serving launcher both import from here.
 from __future__ import annotations
 
 import logging
+import os
 import subprocess
 import sys
 import time
 import urllib.error
 import urllib.request
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -63,19 +65,23 @@ class StragglerWatchdog:
     def record(self, step: int, dt: float) -> bool:
         self.stats.steps += 1
         flagged = False
-        if self.times:
-            # the rolling median is maintained from the very first sample —
-            # consumers like the serving engine's retry_after_ms need a real
-            # estimate long before the 8-sample straggler warm-up completes
-            med = float(np.median(self.times[-self.window :]))
-            self.stats.median_s = med
-            if len(self.times) >= 8 and dt > self.factor * med:
+        # straggler flagging compares dt against the median of the PRIOR
+        # samples (>= 8 of them, the warm-up), so a slow step is judged
+        # against history it is not part of
+        prior = self.times[-self.window :]
+        self.times.append(dt)
+        # ...but the published rolling median includes the sample just
+        # recorded: consumers like the serving engine's retry_after_ms need
+        # a real estimate from the very first dispatch, not the second
+        self.stats.median_s = float(np.median(self.times[-self.window :]))
+        if len(prior) >= 8:
+            med = float(np.median(prior))
+            if dt > self.factor * med:
                 self.stats.stragglers += 1
                 flagged = True
                 log.warning("straggler: step %d took %.3fs (median %.3fs)", step, dt, med)
                 if self.on_straggler:
                     self.on_straggler(step, dt, med)
-        self.times.append(dt)
         return flagged
 
 
@@ -174,7 +180,7 @@ class Supervisor:
 
     def spawn(self) -> subprocess.Popen:
         self.stats["spawns"] += 1
-        self.proc = subprocess.Popen(self.cmd)
+        self.proc = subprocess.Popen(self.cmd, env=_child_env())
         self._event("spawned", pid=self.proc.pid)
         return self.proc
 
@@ -247,6 +253,22 @@ class Supervisor:
             proc.kill()
             proc.wait()
         self._event("stopped", pid=proc.pid)
+
+
+def _child_env() -> Dict[str, str]:
+    """The environment for a supervised child: the parent's, with the root
+    this process imported :mod:`repro` from prepended to ``PYTHONPATH`` —
+    ``sys.path`` edits (a source checkout, the test conftest) do not survive
+    into a subprocess, and without this a ``-m repro.launch.serve`` child
+    dies with ModuleNotFoundError before it can ever become ready."""
+    import repro as _repro
+
+    env = dict(os.environ)
+    root = str(Path(_repro.__file__).resolve().parent.parent)
+    existing = [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    if root not in existing:
+        env["PYTHONPATH"] = os.pathsep.join([root, *existing])
+    return env
 
 
 def serve_command(argv: Sequence[str]) -> List[str]:

@@ -60,6 +60,7 @@ The engine is pure asyncio + numpy/jax — no websocket dependency; transports
 from __future__ import annotations
 
 import asyncio
+import contextvars
 import itertools
 import json
 import math
@@ -833,11 +834,19 @@ class ServingEngine:
                     members=m,
                     requests=len(live),
                 ), profiled:
+                    # run_in_executor does not propagate contextvars, so pin
+                    # the resolved tracer (and the open dispatch span) into a
+                    # context snapshot the executor thread runs under — the
+                    # ensemble.dispatch/iterate spans then land in the same
+                    # tracer, nested under serving.dispatch, instead of the
+                    # usually-disabled process default
+                    with otrace.use_tracer(self._trace()):
+                        run_ctx = contextvars.copy_context()
                     await self._retrying(
                         "dispatch",
                         [r.request_id for r, _ in live],
                         lambda seg=seg: loop.run_in_executor(
-                            None, lambda: ens.iterate(seg, *args, **scalars)
+                            None, run_ctx.run, lambda: ens.iterate(seg, *args, **scalars)
                         ),
                         is_async=True,
                     )

@@ -271,6 +271,39 @@ def test_jax_profiler_span_never_raises():
     assert x == 2
 
 
+def test_jax_profiler_span_propagates_body_exception():
+    """The wrapped block's exception must surface with its original
+    type/message — retry-with-bisect keys off it, so masking it behind
+    contextlib's 'generator didn't stop after throw()' feeds the safety
+    path a bogus error."""
+
+    class _Boom(RuntimeError):
+        pass
+
+    with pytest.raises(_Boom, match="original dispatch failure"):
+        with obs_export.jax_profiler_span("unit-test"):
+            raise _Boom("original dispatch failure")
+
+
+def test_jax_profiler_span_survives_broken_annotation(monkeypatch):
+    """A profiler whose TraceAnnotation blows up on entry must neither fail
+    the dispatch nor swallow the body's own exception."""
+
+    class _BrokenProfiler:
+        class TraceAnnotation:
+            def __init__(self, name):
+                raise OSError("profiler backend unavailable")
+
+    monkeypatch.setattr(obs_export, "_jax_profiler", _BrokenProfiler)
+    monkeypatch.setattr(obs_export, "_jax_probed", True)
+    with obs_export.jax_profiler_span("unit-test"):
+        x = 1 + 1
+    assert x == 2
+    with pytest.raises(ValueError, match="body failure"):
+        with obs_export.jax_profiler_span("unit-test"):
+            raise ValueError("body failure")
+
+
 # ---------------------------------------------------------------------------
 # per-call stencil trace opt-in (exec_info={"trace": True})
 # ---------------------------------------------------------------------------
@@ -407,6 +440,24 @@ def test_engine_metrics_registry_backs_stats_and_prometheus(step, templates):
     assert collected["serving_batches_total"] == st["batches"]
 
 
+def test_ensemble_spans_land_in_engine_tracer(step, templates):
+    """``loop.run_in_executor`` does not propagate contextvars, so the engine
+    pins its resolved tracer into the context the executor thread runs under:
+    the ensemble.iterate span recorded inside the dispatch must land in the
+    per-engine tracer, nested under its serving.dispatch span — not vanish
+    into the (disabled) process default."""
+    tracer = otrace.Tracer(enabled=True)
+    eng = _make_engine(step, templates, tracer=tracer)
+    report = _drive(eng, _specs(2), keep_fields="none")
+    assert report.recovered_rate == 1.0
+    spans = tracer.snapshot()
+    dispatch_ids = {s["id"] for s in spans if s["name"] == "serving.dispatch"}
+    assert dispatch_ids
+    ens_spans = [s for s in spans if s["name"] == "ensemble.iterate"]
+    assert ens_spans, "ensemble spans routed away from the engine tracer"
+    assert all(s["parent"] in dispatch_ids for s in ens_spans)
+
+
 def test_engine_disabled_tracing_records_nothing(step, templates):
     tracer = otrace.Tracer(enabled=False)
     eng = _make_engine(step, templates, tracer=tracer)
@@ -423,8 +474,10 @@ def test_engine_disabled_tracing_records_nothing(step, templates):
 def test_watchdog_median_available_before_straggler_warmup():
     wd = StragglerWatchdog()
     wd.record(0, 0.05)
+    # the very first sample already yields an estimate (was 0.0 until then)
+    assert wd.stats.median_s == pytest.approx(0.05)
     wd.record(1, 0.07)
-    assert wd.stats.median_s == pytest.approx(0.05)  # was 0.0 until 8 samples
+    assert wd.stats.median_s == pytest.approx(0.06)  # window includes dt
     assert wd.stats.stragglers == 0  # flagging still warms up at 8 samples
 
 
