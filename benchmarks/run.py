@@ -700,6 +700,12 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
 
     t_first, t_repeat, _ = asyncio.run(run_load(tracer=otrace.Tracer(enabled=True)))
 
+    # and with head-sampled always-on tracing (keep 10% of request ids): the
+    # production posture — most requests pay only the hash check
+    s_first, s_repeat, _ = asyncio.run(
+        run_load(tracer=otrace.Tracer(enabled=True, sample_rate=0.1))
+    )
+
     def pair(a, b, metric):
         return {"us_per_call": metric(a), "us_repeat": metric(b)}
 
@@ -708,6 +714,7 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
         "jax": {
             "request_wall": pair(first, repeat, lambda r: r.wall_s / r.requests * 1e6),
             "request_wall_traced": pair(t_first, t_repeat, lambda r: r.wall_s / r.requests * 1e6),
+            "request_wall_sampled": pair(s_first, s_repeat, lambda r: r.wall_s / r.requests * 1e6),
             "p50": pair(first, repeat, lambda r: r.p50_ms * 1e3),
             "p99": pair(first, repeat, lambda r: r.p99_ms * 1e3),
             "p99_faulted": pair(f_first, f_repeat, lambda r: r.p99_ms * 1e3),
@@ -722,6 +729,10 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
         # traced / untraced per-request wall (best of two each) — full span
         # tracing across the serving lifecycle should cost a few percent
         "telemetry_overhead": min(t_first.wall_s, t_repeat.wall_s)
+        / min(first.wall_s, repeat.wall_s),
+        # head-sampled tracing at 10%: should sit between untraced and fully
+        # traced (sampled-out requests cost one deterministic hash check)
+        "telemetry_overhead_sampled": min(s_first.wall_s, s_repeat.wall_s)
         / min(first.wall_s, repeat.wall_s),
         "faulted": {
             "dispatch_fault_rate": 0.10,
@@ -741,6 +752,9 @@ def bench_serving(ni, nj, nk, requests: int = 8, steps: int = 8, stream_every: i
     row(f"serving_traced_jax_{requests}req_{ni}x{nj}x{nk}",
         min(t_first.wall_s, t_repeat.wall_s) / requests * 1e6,
         f"telemetry_overhead={case['telemetry_overhead']:.2f}x")
+    row(f"serving_sampled_jax_{requests}req_{ni}x{nj}x{nk}",
+        min(s_first.wall_s, s_repeat.wall_s) / requests * 1e6,
+        f"telemetry_overhead_sampled={case['telemetry_overhead_sampled']:.2f}x")
     return case
 
 

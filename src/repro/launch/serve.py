@@ -38,7 +38,9 @@ from typing import Tuple
 
 import repro  # noqa: F401
 from repro.obs import export as obs_export
+from repro.obs import slo as obs_slo
 from repro.obs import trace as otrace
+from repro.obs.flight import FlightRecorder
 from repro.runtime.supervise import RestartPolicy, Supervisor, http_ready
 from repro.serving import ProgramEntry, RequestSpec, ServingEngine, drive_engine
 from repro.stencils.forecast import build_forecast_step, make_forecast_fields, request_state
@@ -46,10 +48,31 @@ from repro.stencils.forecast import build_forecast_step, make_forecast_fields, r
 
 def _arm_tracing(args: argparse.Namespace) -> bool:
     """Enable the process tracer when ``--trace-out`` asks for a dump (or
-    ``REPRO_TRACE=1`` already armed it); returns whether a dump is due."""
-    if args.trace_out:
+    ``REPRO_TRACE=1`` already armed it); returns whether a dump is due.
+    ``--trace-sample`` arms *sampled* always-on tracing: keep/drop is a
+    deterministic hash of the request id, error paths are force-sampled."""
+    if args.trace_sample is not None:
+        otrace.configure(enabled=True, sample_rate=args.trace_sample)
+    elif args.trace_out:
         otrace.configure(enabled=True)
     return bool(args.trace_out)
+
+
+def _build_engine(args: argparse.Namespace) -> ServingEngine:
+    """One engine, fully armed from the CLI: flight recorder (``--flight-dir``
+    beats ``$REPRO_FLIGHT_DIR``), default SLOs attached per program at
+    registration time (see ``_attach_slos``)."""
+    flight = FlightRecorder(args.flight_dir) if args.flight_dir else None
+    return ServingEngine(window_ms=args.window_ms, flight=flight)
+
+
+def _attach_slos(engine: ServingEngine, entry: ProgramEntry, args: argparse.Namespace) -> None:
+    if not args.no_slo:
+        engine.slo.add(
+            *obs_slo.default_objectives(
+                entry.name, availability=args.slo_availability, p99_s=args.slo_p99
+            )
+        )
 
 
 def _dump_trace(args: argparse.Namespace) -> None:
@@ -86,11 +109,12 @@ def build_forecast_entry(
 
 async def _load_test(args: argparse.Namespace) -> None:
     dump = _arm_tracing(args)
-    engine = ServingEngine(window_ms=args.window_ms)
+    engine = _build_engine(args)
     domain = tuple(args.domain)
     entry = build_forecast_entry(
         engine, backend=args.backend, domain=domain, warm=True, warm_chunk=args.stream_every
     )
+    _attach_slos(engine, entry, args)
     specs = [
         RequestSpec(
             program=entry.name,
@@ -120,12 +144,18 @@ async def _serve(args: argparse.Namespace) -> None:
     from repro.serving.server import ForecastServer
 
     dump = _arm_tracing(args)
-    engine = ServingEngine(window_ms=args.window_ms)
-    build_forecast_entry(engine, backend=args.backend, domain=tuple(args.domain), warm=not args.no_warm)
+    engine = _build_engine(args)
+    entry = build_forecast_entry(
+        engine, backend=args.backend, domain=tuple(args.domain), warm=not args.no_warm
+    )
+    _attach_slos(engine, entry, args)
     stop = asyncio.Event()
     loop = asyncio.get_running_loop()
     for sig in (signal.SIGTERM, signal.SIGINT):
         loop.add_signal_handler(sig, stop.set)
+    # operator's black-box button: SIGUSR2 drops a flight bundle on demand
+    # (no-op unless --flight-dir / $REPRO_FLIGHT_DIR armed a recorder)
+    loop.add_signal_handler(signal.SIGUSR2, lambda: engine._flight_dump("sigusr2"))
     async with ForecastServer(engine, host=args.host, port=args.port) as srv:
         print(f"forecast server on {srv.ws_url}  (GET /programs for the catalog; SIGTERM drains)", flush=True)
         await stop.wait()
@@ -143,9 +173,16 @@ def _supervise(args: argparse.Namespace) -> None:
     crash loop (SupervisorGaveUp propagates)."""
     child_args = ["--backend", args.backend, "--domain", *map(str, args.domain),
                   "--window-ms", str(args.window_ms), "--host", args.host,
-                  "--port", str(args.port), "--drain-timeout", str(args.drain_timeout)]
+                  "--port", str(args.port), "--drain-timeout", str(args.drain_timeout),
+                  "--slo-p99", str(args.slo_p99), "--slo-availability", str(args.slo_availability)]
     if args.no_warm:
         child_args.append("--no-warm")
+    if args.no_slo:
+        child_args.append("--no-slo")
+    if args.trace_sample is not None:
+        child_args.extend(["--trace-sample", str(args.trace_sample)])
+    if args.flight_dir:
+        child_args.extend(["--flight-dir", args.flight_dir])
     from repro.runtime.supervise import serve_command
 
     url = f"http://{args.host}:{args.port}/healthz"
@@ -154,6 +191,9 @@ def _supervise(args: argparse.Namespace) -> None:
         probe=functools.partial(http_ready, url),
         policy=RestartPolicy(),
         ready_timeout_s=args.ready_timeout,
+        # the supervisor's own bundles (restart cadence, exit codes) land in
+        # the same directory as the child's in-process ones
+        flight=FlightRecorder(args.flight_dir) if args.flight_dir else None,
     )
 
     def _forward(signum, _frame):
@@ -187,6 +227,19 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="arm span tracing and write a Chrome-trace/Perfetto JSON dump "
                          "on exit (serve mode) or after the run (--load mode)")
+    ap.add_argument("--trace-sample", type=float, default=None, metavar="RATE",
+                    help="arm ALWAYS-ON tracing at this head-sampling rate in [0,1] "
+                         "(deterministic per request id; error paths always kept); "
+                         "also honors REPRO_TRACE_SAMPLE")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="arm the failure flight recorder: JSON black-box bundles land "
+                         "here on worker death, SLO breach, crash-loop give-up, SIGUSR2 "
+                         "(also honors REPRO_FLIGHT_DIR)")
+    ap.add_argument("--slo-p99", type=float, default=0.5, metavar="SECONDS",
+                    help="p99 latency SLO target for the served program")
+    ap.add_argument("--slo-availability", type=float, default=0.999, metavar="FRACTION",
+                    help="availability SLO target for the served program")
+    ap.add_argument("--no-slo", action="store_true", help="disable the default SLO objectives")
     args = ap.parse_args()
 
     if args.dry:

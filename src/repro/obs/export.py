@@ -215,10 +215,20 @@ def _census(events: Iterable[Dict[str, Any]]) -> Dict[str, int]:
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    """``python -m repro.obs.export TRACE.json`` — validate + summarize."""
+    """``python -m repro.obs.export [--census-json] TRACE.json`` — validate
+    and summarize a captured dump.
+
+    The exit code is the contract: 0 only for a readable, schema-valid trace;
+    1 with a one-line reason on stderr for anything unreadable or invalid —
+    in EVERY mode, so the CI trace-validation leg can never silently pass on
+    a missing or truncated dump.  ``--census-json`` prints the span census as
+    one machine-readable JSON line (what the CI sampled-vs-unsampled
+    comparison diffs)."""
     argv = list(sys.argv[1:] if argv is None else argv)
-    if len(argv) != 1:
-        print("usage: python -m repro.obs.export TRACE.json", file=sys.stderr)
+    census_json = "--census-json" in argv
+    argv = [a for a in argv if a != "--census-json"]
+    if len(argv) != 1 or argv[0].startswith("-"):
+        print("usage: python -m repro.obs.export [--census-json] TRACE.json", file=sys.stderr)
         return 2
     path = Path(argv[0])
     try:
@@ -227,6 +237,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"INVALID trace {path}: {e}", file=sys.stderr)
         return 1
     census = _census(events)
+    if census_json:
+        print(json.dumps(
+            {"path": str(path), "events": sum(census.values()), "names": census},
+            sort_keys=True,
+        ))
+        return 0
     print(f"OK: {path} holds {len(events)} events, {len(census)} distinct names")
     for name in sorted(census):
         print(f"  {census[name]:6d}  {name}")

@@ -137,8 +137,11 @@ class Histogram:
     def summary(self) -> Dict[str, float]:
         with self._lock:  # count/sum/quantiles from ONE consistent snapshot
             out: Dict[str, float] = {"count": float(self.count), "sum": self.sum}
-            for q in QUANTILES:
-                out[f"p{int(q * 100)}"] = self.quantile(q)
+            # a never-observed histogram has NO quantiles, not NaN ones —
+            # the keys are omitted so /stats JSON consumers don't choke
+            if self._window:
+                for q in QUANTILES:
+                    out[f"p{int(q * 100)}"] = self.quantile(q)
             return out
 
 
@@ -202,6 +205,43 @@ class MetricsRegistry:
         return self._child(name, help_text, "summary", labels,
                            lambda: Histogram(self._lock, window=window))
 
+    # -- reads (the SLO engine and autoscaler sit on these) ------------------
+
+    def read(self, name: str, **labels: str) -> List[Tuple[Dict[str, str], Any]]:
+        """Children of family ``name`` whose labels include every given
+        ``labels`` pair (subset match, so ``program="x"`` finds children that
+        also carry a ``code`` label); ``[]`` for an unknown family."""
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                return []
+            want = {(k, str(v)) for k, v in labels.items()}
+            return [
+                (dict(key), child)
+                for key, child in fam.children.items()
+                if want <= set(key)
+            ]
+
+    def sum_value(self, name: str, **labels: str) -> float:
+        """Sum of matching counter/gauge children (0.0 when none match) —
+        how a per-program family with extra label dimensions rolls up."""
+        return sum(
+            child.value
+            for _, child in self.read(name, **labels)
+            if not isinstance(child, Histogram)
+        )
+
+    def quantile(self, name: str, q: float, **labels: str) -> Optional[float]:
+        """The worst (max) ``q``-quantile across matching histogram children,
+        or None when nothing has been observed yet."""
+        vals = [
+            child.quantile(q)
+            for _, child in self.read(name, **labels)
+            if isinstance(child, Histogram) and child.count
+        ]
+        vals = [v for v in vals if not math.isnan(v)]
+        return max(vals) if vals else None
+
     # -- export -------------------------------------------------------------
 
     @staticmethod
@@ -222,12 +262,16 @@ class MetricsRegistry:
                 for key, child in sorted(fam.children.items()):
                     labels = list(key)
                     if isinstance(child, Histogram):
-                        for q in QUANTILES:
-                            lines.append(
-                                self._sample(
-                                    name, labels + [("quantile", str(q))], child.quantile(q)
+                        # Prometheus-idiomatic empty summary: _sum/_count at
+                        # zero, no quantile samples (never NaN — scrapers and
+                        # the text-format parser both reject it)
+                        if child._window:
+                            for q in QUANTILES:
+                                lines.append(
+                                    self._sample(
+                                        name, labels + [("quantile", str(q))], child.quantile(q)
+                                    )
                                 )
-                            )
                         lines.append(self._sample(f"{name}_sum", labels, child.sum))
                         lines.append(self._sample(f"{name}_count", labels, child.count))
                     else:

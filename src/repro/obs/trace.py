@@ -31,6 +31,13 @@ Enable globally with ``REPRO_TRACE=1`` (capacity via
 ``REPRO_TRACE_CAPACITY``), programmatically with :func:`configure`, or
 locally/temporarily with :class:`capture` (used by the per-call
 ``exec_info={"trace": True}`` opt-in on stencils and programs).
+
+Always-on production tracing rides head-based sampling
+(:mod:`repro.obs.sampling`): ``REPRO_TRACE_SAMPLE=0.1`` /
+``Tracer(sample_rate=0.1)`` drops spans whose trace ids all hash out, for
+one hash check per id — while ``force=True`` events (the engine's
+retry/bisect/deadline/error paths) both survive the gate and pin their ids
+so the rest of those requests' stories are retained.
 """
 
 from __future__ import annotations
@@ -42,6 +49,8 @@ import threading
 import time
 from collections import deque
 from typing import Any, Dict, Iterable, List, Optional
+
+from . import sampling as _sampling
 
 #: the ONE monotonic clock for spans, latencies, and deadlines (satellite:
 #: no mixed time.time/perf_counter arithmetic across engine/client/watchdog)
@@ -147,9 +156,14 @@ NOOP_SPAN = _NoopSpan()
 class Tracer:
     """Span recorder: ring-buffered retention, contextvar nesting."""
 
-    def __init__(self, *, enabled: bool = False, capacity: int = 65536):
+    def __init__(self, *, enabled: bool = False, capacity: int = 65536,
+                 sample_rate: Optional[float] = None, sample_seed: int = 0):
         self.enabled = bool(enabled)
         self.capacity = int(capacity)
+        # None → the REPRO_TRACE_SAMPLE env default (1.0: keep everything)
+        if sample_rate is None:
+            sample_rate = _sampling.rate_from_env()
+        self.sampling = _sampling.SamplingPolicy(sample_rate, seed=sample_seed)
         self._spans: "deque[Dict[str, Any]]" = deque(maxlen=self.capacity)
         self._ids = itertools.count(1)
         self._current: contextvars.ContextVar[Optional[Span]] = contextvars.ContextVar(
@@ -157,17 +171,35 @@ class Tracer:
         )
         self._lock = threading.Lock()
 
+    @property
+    def sample_rate(self) -> float:
+        return self.sampling.rate
+
+    def force_sample(self, *trace_ids: str) -> None:
+        """Pin ids as always-sampled (error paths: the tail of a failing
+        request's story must survive even when its head hashed out)."""
+        self.sampling.force(*trace_ids)
+
+    def keeps(self, trace_ids: Iterable[str]) -> bool:
+        """Would a span carrying ``trace_ids`` be retained right now?  One
+        hash check per id on the sampled-out path; constant-time at rate 1.0."""
+        return self.enabled and self.sampling.sampled(trace_ids)
+
     # -- recording ----------------------------------------------------------
 
     def span(self, name: str, *, category: str = "repro",
              trace_id: Optional[str] = None, trace_ids: Iterable[str] = (),
              **attrs: Any):
-        """Open a span (use as a context manager).  Disabled → NOOP_SPAN."""
+        """Open a span (use as a context manager).  Disabled → NOOP_SPAN.
+        Sampling: a span whose trace ids ALL hash out (none forced) is
+        NOOP too — id-free spans (compiles, windows) are always kept."""
         if not self.enabled:
             return NOOP_SPAN
         ids = [str(t) for t in trace_ids]
         if trace_id is not None and str(trace_id) not in ids:
             ids.insert(0, str(trace_id))
+        if ids and not self.sampling.sampled(ids):
+            return NOOP_SPAN
         parent = self._current.get()
         return Span(
             self,
@@ -180,15 +212,25 @@ class Tracer:
         )
 
     def event(self, name: str, *, category: str = "repro",
-              trace_ids: Iterable[str] = (), **attrs: Any) -> None:
+              trace_ids: Iterable[str] = (), force: bool = False,
+              **attrs: Any) -> None:
         """A standalone instant event: attached to the current span when one
         is open, else recorded as a zero-duration entry of its own — so
-        retry/bisect/fault markers survive even outside any span."""
+        retry/bisect/fault markers survive even outside any span.
+
+        ``force=True`` (the engine's error paths) bypasses the sampling gate
+        AND pins the event's trace ids as force-sampled, so everything that
+        happens to those requests from here on is retained."""
         if not self.enabled:
+            return
+        trace_ids = [str(t) for t in trace_ids]
+        if force and trace_ids:
+            self.sampling.force(*trace_ids)
+        elif not force and not self.sampling.sampled(trace_ids):
             return
         current = self._current.get()
         if current is not None:
-            ids = [str(t) for t in trace_ids]
+            ids = list(trace_ids)
             for t in ids:
                 current.link(t)
             if ids:
@@ -214,10 +256,17 @@ class Tracer:
 
     def add_span(self, name: str, start_s: float, end_s: float, *,
                  category: str = "repro", trace_ids: Iterable[str] = (),
-                 **attrs: Any) -> None:
+                 force: bool = False, **attrs: Any) -> None:
         """Record a retroactive span from explicit timestamps (e.g. queue
-        wait, measured between two points that no context manager brackets)."""
+        wait, measured between two points that no context manager brackets).
+        ``force=True`` bypasses sampling and pins the ids, like
+        :meth:`event`."""
         if not self.enabled:
+            return
+        trace_ids = [str(t) for t in trace_ids]
+        if force and trace_ids:
+            self.sampling.force(*trace_ids)
+        elif trace_ids and not force and not self.sampling.sampled(trace_ids):
             return
         self._record(
             {
@@ -292,13 +341,22 @@ def current_tracer() -> Tracer:
     return local if local is not None else _default
 
 
-def configure(*, enabled: Optional[bool] = None, capacity: Optional[int] = None) -> Tracer:
+def configure(*, enabled: Optional[bool] = None, capacity: Optional[int] = None,
+              sample_rate: Optional[float] = None) -> Tracer:
     """Reconfigure the process-default tracer; returns it."""
     global _default
     if capacity is not None and capacity != _default.capacity:
-        _default = Tracer(enabled=_default.enabled, capacity=capacity)
+        _default = Tracer(
+            enabled=_default.enabled,
+            capacity=capacity,
+            sample_rate=_default.sample_rate,
+        )
     if enabled is not None:
         _default.enabled = bool(enabled)
+    if sample_rate is not None:
+        _default.sampling = _sampling.SamplingPolicy(
+            sample_rate, seed=_default.sampling.seed
+        )
     return _default
 
 
@@ -358,8 +416,10 @@ class capture:
         chrome = export.chrome_trace(t.snapshot())
     """
 
-    def __init__(self, capacity: int = 16384):
-        self.tracer = Tracer(enabled=True, capacity=capacity)
+    def __init__(self, capacity: int = 16384, sample_rate: float = 1.0):
+        # a deliberate per-call capture defaults to keeping everything —
+        # the env sampling knob governs the always-on process tracer only
+        self.tracer = Tracer(enabled=True, capacity=capacity, sample_rate=sample_rate)
         self._token: Optional[contextvars.Token] = None
 
     def __enter__(self) -> Tracer:

@@ -34,6 +34,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.flight import FlightRecorder
 from repro.obs.trace import monotonic
 
 log = logging.getLogger("repro.runtime")
@@ -149,6 +150,14 @@ class Supervisor:
     ready (:func:`http_ready` partial'd onto ``/healthz`` for the forecast
     server; tests use file- or socket-based probes).  A child that exits (or
     never probes ready within ``ready_timeout_s``) counts as one crash.
+
+    When a flight recorder is armed (``flight=`` or ``$REPRO_FLIGHT_DIR``),
+    the supervisor drops a bundle *before* every restart and on crash-loop
+    give-up: the child's own recorder (same env var, inherited through
+    :func:`_child_env`) captures the in-process story, and the supervisor's
+    bundle captures the outside view — exit codes, restart cadence, backoff
+    state — so an operator can reconstruct a crash loop from the bundles
+    alone.
     """
 
     def __init__(
@@ -160,6 +169,7 @@ class Supervisor:
         ready_timeout_s: float = 60.0,
         probe_interval_s: float = 0.1,
         on_event: Optional[Callable[[str, Dict], None]] = None,
+        flight: Optional[FlightRecorder] = None,
     ):
         self.cmd = list(cmd)
         self.probe = probe
@@ -170,11 +180,26 @@ class Supervisor:
         self.proc: Optional[subprocess.Popen] = None
         self._stopping = False
         self.stats: Dict[str, int] = {"spawns": 0, "crashes": 0, "restarts": 0}
+        self.flight = flight if flight is not None else FlightRecorder.from_env()
+        if self.flight is not None:
+            self.flight.bind(
+                stats=self._flight_stats,
+                config={"cmd": self.cmd, "ready_timeout_s": self.ready_timeout_s},
+            )
 
     def _event(self, kind: str, **detail) -> None:
         log.info("supervisor: %s %s", kind, detail)
         if self.on_event:
             self.on_event(kind, detail)
+
+    def _flight_stats(self) -> Dict:
+        return {
+            **self.stats,
+            "restarts_since_ready": self.policy._restarts,
+            "crashes_in_window": len(self.policy._crash_times),
+            "child_pid": self.proc.pid if self.proc is not None else None,
+            "child_returncode": self.proc.poll() if self.proc is not None else None,
+        }
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -231,11 +256,17 @@ class Supervisor:
             self.proc.wait()
         if self.policy.record_crash():
             self._event("gave_up", reason=why, crashes=self.stats["crashes"])
+            if self.flight is not None:
+                self.flight.dump("supervisor_gave_up", extra={"why": why})
             raise SupervisorGaveUp(
                 f"{self.policy.max_crashes} crashes within {self.policy.crash_window_s}s ({why})"
             )
         backoff = self.policy.next_backoff()
         self._event("crashed", reason=why, backoff_s=backoff)
+        # the black box goes down with the plane: record what the supervisor
+        # saw BEFORE the restart, while the dead child's exit state is fresh
+        if self.flight is not None:
+            self.flight.dump("supervisor_restart", extra={"why": why, "backoff_s": backoff})
         time.sleep(backoff)
 
     def stop(self, grace_s: float = 5.0) -> None:

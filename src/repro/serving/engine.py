@@ -75,8 +75,10 @@ from repro.core.storage import Storage
 from repro.ensemble import Ensemble
 from repro.ensemble import batch as ens_batch
 from repro.obs import metrics as obs_metrics
+from repro.obs import slo as obs_slo
 from repro.obs import trace as otrace
 from repro.obs.export import jax_profiler_span
+from repro.obs.flight import FlightRecorder
 from repro.obs.trace import monotonic
 from repro.program.compile import ProgramObject
 from repro.runtime.supervise import StragglerWatchdog
@@ -100,6 +102,33 @@ DEFAULT_MEMBER_COUNTS = (1, 2, 4, 8, 16)
 SERVING = "SERVING"
 DEGRADED = "DEGRADED"
 DRAINING = "DRAINING"
+
+#: per-program counter families: stats() flat key → (family name, help).
+#: Every one of these carries a ``program`` label so a multi-program engine
+#: is diagnosable per workload on /metrics and /stats.
+PROGRAM_COUNTERS = (
+    ("requests", "serving_requests_total", "requests admitted"),
+    ("batches", "serving_batches_total", "batching windows dispatched"),
+    ("dispatches", "serving_dispatches_total", "segment dispatches completed"),
+    ("steps_streamed", "serving_steps_streamed_total", "step events emitted"),
+    ("padded_members", "serving_padded_members_total",
+     "member slots dispatched (padding included)"),
+    ("live_members", "serving_live_members_total",
+     "request-backed member slots dispatched"),
+    ("deadline_expired", "serving_deadline_expired_total",
+     "requests expired at a segment boundary"),
+    ("retries", "serving_retries_total", "scatter/dispatch/gather retries"),
+    ("bisects", "serving_bisects_total", "batch bisections after exhausted retries"),
+    ("abandoned", "serving_abandoned_total", "requests abandoned by clients"),
+)
+
+#: per-program histogram families: entry key → (family name, help)
+PROGRAM_HISTOGRAMS = (
+    ("occupancy", "serving_batch_occupancy", "live members / padded members per batch"),
+    ("dispatch", "serving_dispatch_seconds", "segment dispatch wall seconds"),
+    ("queue_wait", "serving_queue_wait_seconds", "submit-to-window-pickup wait seconds"),
+    ("latency", "serving_request_latency_seconds", "submit-to-done latency seconds"),
+)
 
 
 def tuned_member_counts(cp, faults: Optional[FaultInjector] = None) -> List[int]:
@@ -141,6 +170,7 @@ class ForecastRequest:
     want_stats: bool = False
     deadline_ms: Optional[float] = None
     submitted_at: float = 0.0
+    sampled: bool = True  # head-sampling decision, made once at submit
     queue_wait_s: Optional[float] = None  # submit → window pickup, set by the worker
     deadline_at: Optional[float] = None  # monotonic deadline, set at submit
     abandoned: bool = False  # transport saw the client vanish — stop emitting
@@ -230,6 +260,9 @@ class ProgramEntry:
         self.max_batch = self.member_counts[-1]
         self.max_steps = int(max_steps)
         self.ensembles = {m: Ensemble(prog, m, name=f"{self.name}_serve{m}") for m in self.member_counts}
+        # per-program labeled metric children, created eagerly so /metrics
+        # shows zeroed families for every registered program from the start
+        self.counters, self.hist = engine._program_metrics(self.name)
 
     def pad_to(self, k: int) -> int:
         """Smallest registered member count holding ``k`` live requests."""
@@ -377,6 +410,9 @@ class ServingEngine:
         tracer: Optional[otrace.Tracer] = None,
         metrics: Optional[obs_metrics.MetricsRegistry] = None,
         jax_profile: bool = False,
+        slos: Optional[Sequence[obs_slo.Objective]] = None,
+        autoscaler: Optional[obs_slo.Autoscaler] = None,
+        flight: Optional[FlightRecorder] = None,
     ):
         self.window_s = float(window_ms) / 1e3
         self.max_queue = int(max_queue)
@@ -388,6 +424,8 @@ class ServingEngine:
         self._queue: "asyncio.Queue[ForecastRequest]" = asyncio.Queue()
         self._worker: Optional[asyncio.Task] = None
         self._request_ids = itertools.count()
+        self._batch_seq = itertools.count()
+        self._dispatch_seq = itertools.count()
         self._inflight = 0
         self._draining = False
         self.watchdog = StragglerWatchdog(factor=straggler_factor)
@@ -399,31 +437,16 @@ class ServingEngine:
         # of it, and the transport serves to_prometheus() on GET /metrics
         self.metrics = metrics if metrics is not None else obs_metrics.MetricsRegistry()
         reg = self.metrics
+        # per-program counters/histograms (PROGRAM_COUNTERS/_HISTOGRAMS) are
+        # created at registration and live on each ProgramEntry; only the
+        # genuinely engine-global instruments stay unlabeled here
         self._c: Dict[str, obs_metrics.Counter] = {
-            "requests": reg.counter("serving_requests_total", "requests admitted"),
-            "batches": reg.counter("serving_batches_total", "batching windows dispatched"),
-            "dispatches": reg.counter("serving_dispatches_total", "segment dispatches completed"),
-            "steps_streamed": reg.counter("serving_steps_streamed_total", "step events emitted"),
-            "padded_members": reg.counter(
-                "serving_padded_members_total", "member slots dispatched (padding included)"
-            ),
-            "live_members": reg.counter(
-                "serving_live_members_total", "request-backed member slots dispatched"
-            ),
             "rejected_overloaded": reg.counter(
                 "serving_rejected_overloaded_total", "503 backpressure rejections"
-            ),
-            "deadline_expired": reg.counter(
-                "serving_deadline_expired_total", "requests expired at a segment boundary"
-            ),
-            "retries": reg.counter("serving_retries_total", "scatter/dispatch/gather retries"),
-            "bisects": reg.counter(
-                "serving_bisects_total", "batch bisections after exhausted retries"
             ),
             "worker_failures": reg.counter(
                 "serving_worker_failures_total", "batching-worker failures survived"
             ),
-            "abandoned": reg.counter("serving_abandoned_total", "requests abandoned by clients"),
         }
         reg.gauge(
             "serving_queue_depth", "requests waiting for a batching window", fn=self._queue.qsize
@@ -443,18 +466,27 @@ class ServingEngine:
         self._h_window = reg.histogram(
             "serving_window_requests", "requests collected per batching window"
         )
-        self._h_occupancy = reg.histogram(
-            "serving_batch_occupancy", "live members / padded members per batch"
+        # SLO evaluation + the autoscaling signal read the same registry the
+        # counters above write; breaches trigger a flight-recorder dump
+        self.slo = obs_slo.SloEngine(
+            reg, list(slos or ()), tracer=self._trace, on_breach=self._on_slo_breach
         )
-        self._h_dispatch = reg.histogram(
-            "serving_dispatch_seconds", "segment dispatch wall seconds"
-        )
-        self._h_queue_wait = reg.histogram(
-            "serving_queue_wait_seconds", "submit-to-window-pickup wait seconds"
-        )
-        self._h_latency = reg.histogram(
-            "serving_request_latency_seconds", "submit-to-done latency seconds"
-        )
+        self.autoscaler = autoscaler if autoscaler is not None else obs_slo.Autoscaler()
+        self.flight = flight if flight is not None else FlightRecorder.from_env()
+        if self.flight is not None:
+            self.flight.bind(
+                tracer=self._trace,
+                metrics=reg,
+                stats=self.stats,
+                slo=self.slo,
+                config={
+                    "window_ms": self.window_s * 1e3,
+                    "max_queue": self.max_queue,
+                    "degraded_watermark": self.degraded_watermark,
+                    "retry_attempts": self.retry_attempts,
+                    "retry_backoff_ms": self.retry_backoff_s * 1e3,
+                },
+            )
 
     # -- telemetry plumbing --------------------------------------------------
 
@@ -466,6 +498,63 @@ class ServingEngine:
 
     def _tevent(self, name: str, **kwargs: Any) -> None:
         self._trace().event(name, category="serving", **kwargs)
+
+    def _program_metrics(
+        self, program: str
+    ) -> Tuple[Dict[str, obs_metrics.Counter], Dict[str, obs_metrics.Histogram]]:
+        """The labeled children every registered program gets (cached on its
+        ProgramEntry so the hot path never rebuilds a label key)."""
+        reg = self.metrics
+        counters = {
+            key: reg.counter(fam, help_, program=program)
+            for key, fam, help_ in PROGRAM_COUNTERS
+        }
+        hists = {
+            key: reg.histogram(fam, help_, program=program)
+            for key, fam, help_ in PROGRAM_HISTOGRAMS
+        }
+        return counters, hists
+
+    def _post_error(self, req: ForecastRequest, code: int, reason: str) -> None:
+        """The one chokepoint every terminal error flows through: counted in
+        ``serving_errors_total{program=,code=}`` (what the SLO engine burns
+        budget against), the request id force-sampled so the tail of a
+        failing story survives head sampling, then the sealed error post."""
+        if req.terminal:
+            return
+        tracer = self._trace()
+        if tracer.enabled:
+            tracer.force_sample(req.request_id)
+        self.metrics.counter(
+            "serving_errors_total",
+            "requests terminated by an error event",
+            program=req.entry.name,
+            code=str(code),
+        ).inc()
+        req.post({"type": "error", "code": code, "reason": reason, "request_id": req.request_id})
+
+    def _on_slo_breach(self, status: Dict[str, Any]) -> None:
+        self._flight_dump(f"slo_breach:{status['objective']}", extra={"breach": status})
+
+    def _flight_dump(self, reason: str, extra: Optional[Dict[str, Any]] = None) -> None:
+        if self.flight is not None:
+            self.flight.dump(reason, extra=extra)
+
+    def autoscale_signal(self, now: Optional[float] = None) -> Dict[str, Any]:
+        """The ``GET /autoscale`` payload: evaluate the SLOs, then apply the
+        documented desired-replica rule (queue depth + batch capacity +
+        latency-vs-SLO pressure + active breaches, hysteresis-damped)."""
+        slo_status = self.slo.evaluate(now=now)
+        max_batch = max((e.max_batch for e in self._programs.values()), default=1)
+        rec = self.autoscaler.recommend(
+            queue_depth=self._queue.qsize(),
+            inflight=self._inflight,
+            max_batch=max_batch,
+            latency_ratio=self.slo.latency_pressure(),
+            breaching=slo_status["breaching"],
+        )
+        rec["slo"] = slo_status
+        return rec
 
     # -- health state --------------------------------------------------------
 
@@ -602,15 +691,31 @@ class ServingEngine:
                 f"admission queue full ({self.max_queue} requests)",
                 retry_after_ms=self._retry_after_ms(),
             )
-        with self._span("serving.admit") as asp:
+        tracer = self._trace()
+        t_admit = monotonic()
+        try:
             req = self.admit(*args, **kwargs)
-            asp.link(req.request_id)
-            asp.set("program", req.entry.name)
-            asp.set("steps", req.steps)
+        except ServingError as e:
+            # rejected admissions still leave a trace: forced, so 4xx
+            # stories survive head sampling
+            tracer.add_span(
+                "serving.admit", t_admit, monotonic(), category="serving",
+                force=True, error=f"ServingError: {e.reason}", code=e.code,
+            )
+            raise
+        # the head-sampling decision is made ONCE here and rides the request;
+        # the admit span is recorded retroactively so a sampled-out request
+        # pays one hash check instead of a span allocation
+        req.sampled = tracer.sampling.decide(req.request_id)
+        if req.sampled:
+            tracer.add_span(
+                "serving.admit", t_admit, monotonic(), category="serving",
+                trace_ids=(req.request_id,), program=req.entry.name, steps=req.steps,
+            )
         req.submitted_at = monotonic()
         if req.deadline_ms is not None:
             req.deadline_at = req.submitted_at + req.deadline_ms / 1e3
-        self._c["requests"].inc()
+        req.entry.counters["requests"].inc()
         self._ensure_worker()
         self._queue.put_nowait(req)
         req.post(
@@ -658,6 +763,11 @@ class ServingEngine:
         self._fail_all_queued(f"worker died: {type(exc).__name__}: {exc}")
         if self._worker is task:
             self._worker = None
+        # the black box: dump spans/metrics/stats at the moment of death,
+        # after the queued requests were failed (so their errors are counted)
+        self._flight_dump(
+            "worker_death", extra={"error": f"{type(exc).__name__}: {exc}"}
+        )
 
     def _fail_all_queued(self, reason: str) -> None:
         while True:
@@ -665,11 +775,11 @@ class ServingEngine:
                 req = self._queue.get_nowait()
             except asyncio.QueueEmpty:
                 return
-            req.post({"type": "error", "code": INTERNAL, "reason": reason, "request_id": req.request_id})
+            self._post_error(req, INTERNAL, reason)
 
     def _fail_requests(self, requests: Sequence[ForecastRequest], code: int, reason: str) -> None:
         for r in requests:
-            r.post({"type": "error", "code": code, "reason": reason, "request_id": r.request_id})
+            self._post_error(r, code, reason)
 
     def _group(self, batch: List[ForecastRequest]) -> List[Tuple[ProgramEntry, List[ForecastRequest]]]:
         """Partition one batching window by program, chunked at each
@@ -692,9 +802,11 @@ class ServingEngine:
         if not req.submitted_at:
             return
         req.queue_wait_s = now - req.submitted_at
-        self._h_queue_wait.observe(req.queue_wait_s)
+        req.entry.hist["queue_wait"].observe(req.queue_wait_s)
         tracer = self._trace()
-        if tracer.enabled:
+        # the cached head decision gates the retro span; forced ids (a
+        # request already in error territory) are kept regardless
+        if tracer.enabled and (req.sampled or tracer.sampling.is_forced(req.request_id)):
             tracer.add_span(
                 "serving.queue",
                 req.submitted_at,
@@ -751,8 +863,8 @@ class ServingEngine:
     # -- batch execution: segments, deadlines, retry-with-bisect -------------
 
     async def _run_batch(self, entry: ProgramEntry, requests: List[ForecastRequest]) -> None:
-        batch_id = int(self._c["batches"].value)
-        self._c["batches"].inc()
+        batch_id = next(self._batch_seq)
+        entry.counters["batches"].inc()
         pairs = [(r, dict(r.fields)) for r in requests]
         # ONE batch span links every co-batched request; the scatter/dispatch/
         # gather spans and any retry/bisect events nest inside it
@@ -789,9 +901,9 @@ class ServingEngine:
         m = entry.pad_to(k)
         ens = entry.ensembles[m]
         if initial:
-            self._c["live_members"].inc(k)
-            self._c["padded_members"].inc(m)
-            self._h_occupancy.observe(k / m)
+            entry.counters["live_members"].inc(k)
+            entry.counters["padded_members"].inc(m)
+            entry.hist["occupancy"].observe(k / m)
         batch_info = {"id": batch_id, "members": m, "requests": k, "occupancy": k / m}
 
         try:
@@ -805,6 +917,7 @@ class ServingEngine:
                     "scatter",
                     [r.request_id for r in reqs],
                     lambda: entry._batch_storages([s for _, s in pairs], m, full_state=not initial),
+                    counters=entry.counters,
                 )
         except Exception as e:  # noqa: BLE001 — scatter failure: bisect like a failed dispatch
             await self._bisect_or_fail(entry, pairs, t0, segments, e, batch_id, None)
@@ -849,11 +962,12 @@ class ServingEngine:
                             None, run_ctx.run, lambda: ens.iterate(seg, *args, **scalars)
                         ),
                         is_async=True,
+                        counters=entry.counters,
                     )
                 dt = monotonic() - t1
-                self.watchdog.record(int(self._c["dispatches"].value), dt)
-                self._h_dispatch.observe(dt)
-                self._c["dispatches"].inc()
+                self.watchdog.record(next(self._dispatch_seq), dt)
+                entry.hist["dispatch"].observe(dt)
+                entry.counters["dispatches"].inc()
             except Exception as e:  # noqa: BLE001 — dispatch exhausted its retries
                 await self._bisect_or_fail(entry, live, t, segments[si:], e, batch_id, storages)
                 return
@@ -868,7 +982,7 @@ class ServingEngine:
             if not self._still_wanted(r):
                 continue
             latency_s = monotonic() - r.submitted_at
-            self._h_latency.observe(latency_s)
+            entry.hist["latency"].observe(latency_s)
             self._tevent(
                 "serving.done", trace_ids=(r.request_id,), latency_s=latency_s, steps=r.steps
             )
@@ -887,7 +1001,7 @@ class ServingEngine:
         if r.terminal:
             return False
         if r.abandoned:
-            self._c["abandoned"].inc()
+            r.entry.counters["abandoned"].inc()
             r.terminal = True  # nobody is listening — seal it so it counts once
             return False
         return True
@@ -904,30 +1018,32 @@ class ServingEngine:
             if not self._still_wanted(r):
                 continue
             if r.expired(now):
-                self._c["deadline_expired"].inc()
+                r.entry.counters["deadline_expired"].inc()
                 self._tevent(
                     "serving.deadline",
                     trace_ids=(r.request_id,),
+                    force=True,
                     deadline_ms=r.deadline_ms,
                     waited_ms=(now - r.submitted_at) * 1e3,
                 )
-                r.post(
-                    {
-                        "type": "error",
-                        "code": DEADLINE_EXCEEDED,
-                        "reason": f"deadline of {r.deadline_ms:.0f} ms expired "
-                        f"after {(now - r.submitted_at) * 1e3:.0f} ms",
-                        "request_id": r.request_id,
-                    }
+                self._post_error(
+                    r,
+                    DEADLINE_EXCEEDED,
+                    f"deadline of {r.deadline_ms:.0f} ms expired "
+                    f"after {(now - r.submitted_at) * 1e3:.0f} ms",
                 )
                 continue
             live.append((r, s))
         return live
 
-    async def _retrying(self, site: str, keys: Sequence[str], thunk, *, is_async: bool = False):
+    async def _retrying(self, site: str, keys: Sequence[str], thunk, *, is_async: bool = False,
+                        counters: Optional[Dict[str, obs_metrics.Counter]] = None):
         """Run ``thunk`` under the fault injector's ``site`` check with
         exponential-backoff retries.  The last failure propagates; the caller
-        decides between bisect (batches) and a per-request error (gathers)."""
+        decides between bisect (batches) and a per-request error (gathers).
+        ``counters`` is the owning program's labeled set (retries are
+        per-program); retry events are force-sampled — a request that hit a
+        retry has entered tail-latency territory and its story is kept."""
         attempt = 0
         while True:
             try:
@@ -940,10 +1056,12 @@ class ServingEngine:
                 attempt += 1
                 if attempt >= self.retry_attempts:
                     raise
-                self._c["retries"].inc()
+                if counters is not None:
+                    counters["retries"].inc()
                 self._tevent(
                     "serving.retry",
                     trace_ids=keys,
+                    force=True,
                     site=site,
                     attempt=attempt,
                     error=f"{type(e).__name__}: {e}",
@@ -971,22 +1089,21 @@ class ServingEngine:
             self._tevent(
                 "serving.request_failed",
                 trace_ids=(r.request_id,),
+                force=True,
                 error=f"{type(error).__name__}: {error}",
             )
-            r.post(
-                {
-                    "type": "error",
-                    "code": INTERNAL,
-                    "reason": f"dispatch failed after {self.retry_attempts} attempts: "
-                    f"{type(error).__name__}: {error}",
-                    "request_id": r.request_id,
-                }
+            self._post_error(
+                r,
+                INTERNAL,
+                f"dispatch failed after {self.retry_attempts} attempts: "
+                f"{type(error).__name__}: {error}",
             )
             return
-        self._c["bisects"].inc()
+        entry.counters["bisects"].inc()
         self._tevent(
             "serving.bisect",
             trace_ids=[r.request_id for _, r, _ in live],
+            force=True,
             requests=len(live),
             resume_step=t0,
             error=f"{type(error).__name__}: {error}",
@@ -1026,16 +1143,14 @@ class ServingEngine:
                     lambda: {
                         f: ens_batch.gather_member(storages[f], i) for f in entry.stream_fields
                     },
+                    counters=entry.counters,
                 )
         except Exception as e:  # noqa: BLE001
-            r.post(
-                {
-                    "type": "error",
-                    "code": INTERNAL,
-                    "reason": f"gather failed after {self.retry_attempts} attempts: "
-                    f"{type(e).__name__}: {e}",
-                    "request_id": r.request_id,
-                }
+            self._post_error(
+                r,
+                INTERNAL,
+                f"gather failed after {self.retry_attempts} attempts: "
+                f"{type(e).__name__}: {e}",
             )
             return
         ev: Dict[str, Any] = {
@@ -1049,27 +1164,46 @@ class ServingEngine:
         if r.want_stats and self.state != DEGRADED:
             ev["stats"] = {f: _field_stats(a) for f, a in gathered.items()}
         r.post(ev)
-        self._c["steps_streamed"].inc()
+        entry.counters["steps_streamed"].inc()
 
     # -- lifecycle / introspection ------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
         """The operational snapshot — a *view* of the metrics registry (every
-        counter here is also a Prometheus series on ``GET /metrics``)."""
-        out: Dict[str, Any] = {k: int(c.value) for k, c in self._c.items()}
+        counter here is also a Prometheus series on ``GET /metrics``).  Flat
+        keys are engine-wide sums across programs (the pre-label contract the
+        clients and benches read); ``per_program`` carries the labeled
+        breakdown."""
+        reg = self.metrics
+        out: Dict[str, Any] = {
+            key: int(reg.sum_value(fam)) for key, fam, _ in PROGRAM_COUNTERS
+        }
+        out["errors"] = int(reg.sum_value("serving_errors_total"))
+        for k, c in self._c.items():
+            out[k] = int(c.value)
         out["programs"] = sorted(self._programs)
+        out["per_program"] = {
+            name: {
+                **{
+                    key: int(reg.sum_value(fam, program=name))
+                    for key, fam, _ in PROGRAM_COUNTERS
+                },
+                "errors": int(reg.sum_value("serving_errors_total", program=name)),
+            }
+            for name in sorted(self._programs)
+        }
         out["state"] = self.state
         out["queue_depth"] = self._queue.qsize()
         out["inflight"] = self._inflight
-        padded = int(self._c["padded_members"].value)
-        out["mean_occupancy"] = (
-            int(self._c["live_members"].value) / padded if padded else None
-        )
+        padded = out["padded_members"]
+        out["mean_occupancy"] = out["live_members"] / padded if padded else None
         out["straggler"] = {
             "dispatches": self.watchdog.stats.steps,
             "stragglers": self.watchdog.stats.stragglers,
             "median_s": self.watchdog.stats.median_s,
         }
+        if self.slo.objectives:
+            out["slo"] = self.slo.status()
         if self.faults.enabled:
             out["faults"] = self.faults.stats()
         return out

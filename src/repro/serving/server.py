@@ -9,7 +9,12 @@ repro[serving]``):
 * ``GET /stats``    — engine counters (requests, batches, occupancy, stragglers)
   plus the full metrics-registry dump under ``"metrics"``
 * ``GET /metrics``  — the same registry as Prometheus text exposition 0.0.4
-  (request/retry/bisect counters, queue-depth/state gauges, latency summaries)
+  (per-program request/retry/bisect counters, queue-depth/state gauges,
+  latency summaries, SLO burn-rate/breach gauges)
+* ``GET /slo``      — evaluate the engine's SLOs now; burn rates per
+  objective and window, breach flags
+* ``GET /autoscale``— the desired-replica recommendation (documented rule
+  over queue depth, capacity, p99-vs-SLO pressure; hysteresis-damped)
 * ``GET /programs`` — the catalog, same payload as a ``programs`` frame
 
 Each connection may multiplex many requests: frames carry ``request_id`` and
@@ -139,11 +144,19 @@ def create_app(engine: ServingEngine) -> "web.Application":
     async def programs(_request: "web.Request") -> "web.Response":
         return web.json_response({"programs": engine.catalog()})
 
+    async def slo(_request: "web.Request") -> "web.Response":
+        return web.json_response(engine.slo.evaluate())
+
+    async def autoscale(_request: "web.Request") -> "web.Response":
+        return web.json_response(engine.autoscale_signal())
+
     app = web.Application()
     app.router.add_get("/ws", ws_handler)
     app.router.add_get("/healthz", healthz)
     app.router.add_get("/stats", stats)
     app.router.add_get("/metrics", metrics)
+    app.router.add_get("/slo", slo)
+    app.router.add_get("/autoscale", autoscale)
     app.router.add_get("/programs", programs)
     return app
 

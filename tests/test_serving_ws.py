@@ -210,15 +210,111 @@ def test_metrics_endpoint_serves_prometheus_text(step, templates):
         ("serving_request_latency_seconds", "summary"),
     ]:
         assert f"# TYPE {family} {kind}" in text, family
-    assert "serving_requests_total 3" in text
+    assert 'serving_requests_total{program="ws_step"} 3' in text
     assert 'serving_state{state="SERVING"} 1.0' in text
-    assert 'serving_request_latency_seconds{quantile="0.99"}' in text
-    assert "serving_request_latency_seconds_count 3" in text
-    # /stats keeps its legacy keys and gains the registry dump
+    assert 'serving_request_latency_seconds{program="ws_step",quantile="0.99"}' in text
+    assert 'serving_request_latency_seconds_count{program="ws_step"} 3' in text
+    # /stats keeps its legacy flat keys (cross-program sums), gains the
+    # per-program breakdown and the registry dump
     st = out["stats"]
     assert st["requests"] == 3
-    assert st["metrics"]["serving_requests_total"] == 3
-    assert st["metrics"]["serving_request_latency_seconds"]["count"] == 3
+    assert st["per_program"]["ws_step"]["requests"] == 3
+    assert st["metrics"]["serving_requests_total"] == {"program=ws_step": 3}
+    assert st["metrics"]["serving_request_latency_seconds"]["program=ws_step"]["count"] == 3
+
+
+def test_concurrent_metrics_scrapes_during_live_load(step, templates):
+    """Prometheus scrapes race live serving: a scraper hammering /metrics
+    while requests stream must always get a complete, well-formed exposition
+    — every line parseable, no NaN, counters monotonic across scrapes."""
+    specs = [
+        RequestSpec("ws_step", {"phi": request_state(DOM, seed=i + 1)}, steps=4, stream_every=2)
+        for i in range(6)
+    ]
+
+    async def scenario(srv):
+        url = f"http://{srv.host}:{srv.port}/metrics"
+        stop = asyncio.Event()
+        scrapes = []
+
+        async def scraper():
+            async with aiohttp.ClientSession() as s:
+                while not stop.is_set():
+                    async with s.get(url) as r:
+                        assert r.status == 200
+                        scrapes.append(await r.text())
+                    await asyncio.sleep(0.002)
+
+        scrapers = [asyncio.ensure_future(scraper()) for _ in range(4)]
+        try:
+            rep = await drive_server(srv.ws_url, specs)
+        finally:
+            stop.set()
+            await asyncio.gather(*scrapers)
+        return rep, scrapes
+
+    rep, scrapes = serve(step, templates, scenario)
+    assert rep.recovered_rate == 1.0
+    assert len(scrapes) >= 8  # the scrapers really ran during the load
+    seen_requests = []
+    for text in scrapes:
+        assert "NaN" not in text
+        for line in text.splitlines():
+            assert line.startswith("#") or " " in line, f"malformed line: {line!r}"
+        for line in text.splitlines():
+            if line.startswith('serving_requests_total{program="ws_step"}'):
+                seen_requests.append(float(line.rsplit(" ", 1)[1]))
+    # counters never go backwards, and the final scrape saw all six requests
+    assert seen_requests == sorted(seen_requests)
+    assert seen_requests[-1] == 6.0
+
+
+def test_slo_and_autoscale_endpoints(step, templates):
+    """GET /slo serves the burn-rate evaluation and GET /autoscale the
+    desired-replica recommendation, both as JSON."""
+    from repro.obs import slo as obs_slo
+
+    fields, scalars = templates
+
+    async def go():
+        engine = ServingEngine(window_ms=25.0, slos=obs_slo.default_objectives("ws_step"))
+        engine.register(
+            step, fields=fields, scalars=scalars, request_fields=("phi",), member_counts=(1, 2, 4)
+        )
+        async with ForecastServer(engine) as srv:
+            specs = [
+                RequestSpec("ws_step", {"phi": request_state(DOM, seed=i + 1)}, steps=2)
+                for i in range(2)
+            ]
+            rep = await drive_server(srv.ws_url, specs)
+            out = {"report": rep}
+            async with aiohttp.ClientSession() as s:
+                async with s.get(f"http://{srv.host}:{srv.port}/slo") as r:
+                    out["slo"] = (r.status, await r.json())
+                async with s.get(f"http://{srv.host}:{srv.port}/autoscale") as r:
+                    out["autoscale"] = (r.status, await r.json())
+                async with s.get(f"http://{srv.host}:{srv.port}/stats") as r:
+                    out["stats"] = await r.json()
+            return out
+
+    out = asyncio.run(go())
+    assert out["report"].recovered_rate == 1.0
+    status, slo = out["slo"]
+    assert status == 200 and slo["breaching"] is False
+    assert {o["objective"] for o in slo["objectives"]} == {
+        "ws_step-availability",
+        "ws_step-latency",
+    }
+    for obj in slo["objectives"]:
+        for rule in obj["rules"]:
+            assert {"rule", "short_burn", "long_burn", "max_burn", "breaching"} <= set(rule)
+    status, auto = out["autoscale"]
+    assert status == 200
+    assert auto["desired_replicas"] >= 1 and isinstance(auto["reason"], str)
+    assert {"queue_depth", "inflight", "max_batch", "utilization"} <= set(auto["inputs"])
+    assert auto["slo"]["breaching"] is False
+    # /stats carries the same SLO view for humans
+    assert out["stats"]["slo"]["breaching"] is False
 
 
 def test_load_generator_over_websocket(step, templates):

@@ -1,7 +1,12 @@
 """Process supervision tests (repro.runtime.supervise): restart policy math,
 readiness probing, restart-on-crash, crash-loop give-up — with cheap stdlib
-child processes (no aiohttp, no jax import in the children)."""
+child processes (no aiohttp, no jax import in the children) — plus the
+failure flight recorder riding both layers: the supervisor dumps an
+outside-view bundle before every restart / at give-up, and the engine's
+worker-death path dumps an in-process black box whose spans identify the
+poison request that took the worker down."""
 
+import asyncio
 import subprocess
 import sys
 import threading
@@ -10,6 +15,9 @@ from pathlib import Path
 
 import pytest
 
+import repro  # noqa: F401
+from repro.obs import flight as obs_flight
+from repro.obs import trace as otrace
 from repro.runtime.supervise import (
     RestartPolicy,
     StragglerWatchdog,
@@ -167,6 +175,142 @@ def test_stop_is_idempotent_and_detaches(tmp_path):
     sup.stop()
     sup.stop()  # second stop is a no-op
     assert proc.poll() is not None and sup.proc is None
+
+
+# ---------------------------------------------------------------------------
+# the flight recorder rides the supervisor: outside-view bundles per restart
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_dumps_flight_bundles_on_restart_and_give_up(tmp_path):
+    """Before every restart (and at give-up) the supervisor drops a black-box
+    bundle capturing the dead child's exit state and the restart cadence."""
+    flight_dir = tmp_path / "flight"
+    sup = Supervisor(
+        [sys.executable, "-c", "raise SystemExit(3)"],
+        probe=lambda: False,
+        policy=RestartPolicy(backoff_s=0.01, backoff_max_s=0.02, crash_window_s=60.0, max_crashes=3),
+        ready_timeout_s=0.3,
+        probe_interval_s=0.02,
+        flight=obs_flight.FlightRecorder(flight_dir),
+    )
+    with pytest.raises(SupervisorGaveUp):
+        sup.start()
+
+    bundles = [obs_flight.load_bundle(p) for p in sorted(flight_dir.glob("flight-*.json"))]
+    reasons = [b["reason"] for b in bundles]
+    # crashes 1..2 dump "supervisor_restart" before backing off; crash 3 hits
+    # the loop detector and dumps "supervisor_gave_up" before raising
+    assert reasons.count("supervisor_restart") == 2
+    assert reasons.count("supervisor_gave_up") == 1
+    for b in bundles:
+        assert b["stats"]["child_returncode"] == 3
+        assert b["stats"]["crashes"] >= 1
+        assert "cmd" in b["config"]
+    gave_up = bundles[reasons.index("supervisor_gave_up")]
+    assert gave_up["stats"]["crashes_in_window"] == 3
+    assert gave_up["extra"]["why"] == "never became ready"
+
+
+def test_supervisor_from_env_arms_flight_recorder(tmp_path, monkeypatch):
+    """$REPRO_FLIGHT_DIR alone (no explicit recorder) arms the supervisor —
+    the same env var the child inherits for its in-process bundles."""
+    monkeypatch.setenv("REPRO_FLIGHT_DIR", str(tmp_path / "env-flight"))
+    sup = Supervisor([sys.executable, "-c", "pass"], probe=lambda: False)
+    assert sup.flight is not None
+    assert sup.flight.out_dir == tmp_path / "env-flight"
+    monkeypatch.delenv("REPRO_FLIGHT_DIR")
+    sup2 = Supervisor([sys.executable, "-c", "pass"], probe=lambda: False)
+    assert sup2.flight is None
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: worker death under a poison request → the black box tells the
+# whole story (spans + metrics + stats naming the poison id)
+# ---------------------------------------------------------------------------
+
+
+def test_worker_death_black_box_identifies_poison_request(tmp_path):
+    """The acceptance path for the flight recorder: a poison request churns
+    through retry → bisect → failure (its spans force-sampled past a 10%
+    head-sampling rate), then the worker task itself dies.  The worker-death
+    bundle must be a self-contained story: the poison request id is
+    recoverable from the spans, the error shows in the metrics and stats,
+    and ``python -m repro.obs.flight`` accepts the file."""
+    from repro.serving import FaultInjector, RequestSpec, ServingEngine, drive_engine
+    from repro.stencils.forecast import build_forecast_step, make_forecast_fields, request_state
+
+    dom = (10, 8, 4)
+    poison = "poison-req-1"
+    tracer = otrace.Tracer(enabled=True, sample_rate=0.1)
+    eng = ServingEngine(
+        window_ms=25.0,
+        retry_backoff_ms=1.0,
+        faults=FaultInjector(sites=("dispatch",), rate=0.0, poison=(poison,)),
+        tracer=tracer,
+        flight=obs_flight.FlightRecorder(tmp_path / "flight"),
+    )
+    fields, scalars = make_forecast_fields("jax", dom)
+    eng.register(
+        build_forecast_step("jax", dom, name="box_step"),
+        fields=fields,
+        scalars=scalars,
+        request_fields=("phi",),
+        member_counts=(1, 2),
+        max_steps=100,
+    )
+    specs = [
+        RequestSpec(
+            program="box_step",
+            fields={"phi": request_state(dom, seed=i + 1)},
+            steps=2,
+            stream_every=1,
+            request_id=poison if i == 0 else f"ok-{i}",
+        )
+        for i in range(2)
+    ]
+
+    async def suicidal():
+        raise RuntimeError("simulated hard worker fault")
+
+    async def go():
+        async with eng:
+            report = await drive_engine(eng, specs, keep_fields="none")
+            assert sum(not r.ok for r in report.results) == 1
+            # now the worker itself dies; its done-callback dumps the box
+            task = asyncio.get_running_loop().create_task(suicidal())
+            eng._worker = task
+            task.add_done_callback(eng._worker_died)
+            await asyncio.sleep(0.05)
+
+    asyncio.run(go())
+
+    path = eng.flight.last_bundle
+    assert path is not None
+    bundle = obs_flight.load_bundle(path)
+    assert bundle["reason"] == "worker_death"
+    assert "RuntimeError: simulated hard worker fault" in bundle["extra"]["error"]
+    # the spans name the poison request and carry its whole failure arc,
+    # despite the 10% sampling rate (error paths are force-sampled)
+    story = obs_flight.request_story(bundle, poison)
+    names = {ev["name"] for ev in story}
+    assert {"serving.retry", "serving.bisect", "serving.request_failed"} <= names
+    # metrics + stats corroborate: exactly one failed request, program-labeled
+    errors = bundle["metrics"]["serving_errors_total"]
+    assert any("program=box_step" in k for k in errors)
+    assert sum(errors.values()) == 1
+    assert bundle["stats"]["errors"] == 1
+    assert bundle["stats"]["per_program"]["box_step"]["retries"] >= 1
+    # the CLI agrees the bundle is well-formed and can replay the story
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.obs.flight", str(path), "--request", poison],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=str(Path(__file__).resolve().parent.parent),
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert poison in proc.stdout and "serving.bisect" in proc.stdout
 
 
 # ---------------------------------------------------------------------------
