@@ -24,6 +24,7 @@ Candidates are filtered against the module's per-tile VMEM estimate
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -304,3 +305,54 @@ def select_block(
         except OSError:
             pass  # read-only cache: in-memory result still serves this process
     return tuple(record["block"]), record
+
+
+def record_batch_observation(
+    name: str,
+    fingerprint: str,
+    batch: int,
+    us_per_step: float,
+    *,
+    source: str = "serving",
+) -> None:
+    """Merge one *observed* ``(batch size → wall)`` record into the tune store.
+
+    The serving engine calls this with the per-step dispatch wall of batches
+    it actually ran, closing the loop the other way around: ``select_block``
+    writes measurements the tuner made, this writes measurements the traffic
+    made.  Records land under their own ``serving|batch=N`` domain key —
+    they carry ``"batch"``, so :func:`repro.serving.engine.tuned_member_counts`
+    picks the extents up as preferred padding targets, while the key shape
+    keeps them from ever colliding with a tuner-written ``(BI, BJ)`` record.
+
+    Concurrency: the store is read-merged-rewritten under the module lock
+    with an atomic (pid-suffixed tmp + ``replace``) publish, so concurrent
+    engines — or an engine racing the tuner — never clobber each other's
+    *other* keys; the worst cross-process race loses one observation, never
+    the store.  The best (minimum) wall wins; observation counts accumulate.
+    An unwritable store is ignored — feedback is an optimization, never a
+    liveness dependency."""
+    path = caching.tuning_path(name, fingerprint)
+    dkey = f"serving|batch={int(batch)}"
+    with _lock:
+        store = _load_store(path)
+        prev = store["domains"].get(dkey)
+        count = 1
+        best = float(us_per_step)
+        if isinstance(prev, dict):
+            count += int(prev.get("count", 0))
+            prev_us = prev.get("us_per_step")
+            if isinstance(prev_us, (int, float)):
+                best = min(best, float(prev_us))
+        store["domains"][dkey] = {
+            "batch": int(batch),
+            "us_per_step": best,
+            "count": count,
+            "source": source,
+        }
+        try:
+            tmp = path.with_name(f"{path.name}.{os.getpid()}.tmp")
+            tmp.write_text(json.dumps(store, indent=2) + "\n")
+            tmp.replace(path)
+        except OSError:
+            pass  # read-only store: the next engine re-observes, nothing breaks

@@ -63,7 +63,12 @@ def _build_engine(args: argparse.Namespace) -> ServingEngine:
     beats ``$REPRO_FLIGHT_DIR``), default SLOs attached per program at
     registration time (see ``_attach_slos``)."""
     flight = FlightRecorder(args.flight_dir) if args.flight_dir else None
-    return ServingEngine(window_ms=args.window_ms, flight=flight)
+    return ServingEngine(
+        window_ms=args.window_ms,
+        flight=flight,
+        scheduler=args.scheduler,
+        priority_classes=args.priority_classes,
+    )
 
 
 def _attach_slos(engine: ServingEngine, entry: ProgramEntry, args: argparse.Namespace) -> None:
@@ -174,7 +179,10 @@ def _supervise(args: argparse.Namespace) -> None:
     child_args = ["--backend", args.backend, "--domain", *map(str, args.domain),
                   "--window-ms", str(args.window_ms), "--host", args.host,
                   "--port", str(args.port), "--drain-timeout", str(args.drain_timeout),
-                  "--slo-p99", str(args.slo_p99), "--slo-availability", str(args.slo_availability)]
+                  "--slo-p99", str(args.slo_p99), "--slo-availability", str(args.slo_availability),
+                  "--priority-classes", str(args.priority_classes)]
+    if args.scheduler is not None:
+        child_args.extend(["--scheduler", args.scheduler])
     if args.no_warm:
         child_args.append("--no-warm")
     if args.no_slo:
@@ -211,6 +219,12 @@ def main() -> None:
     ap.add_argument("--backend", default="jax", choices=["jax", "pallas"])
     ap.add_argument("--domain", type=int, nargs=3, default=[48, 48, 16], metavar=("NI", "NJ", "NK"))
     ap.add_argument("--window-ms", type=float, default=2.0, help="batching window")
+    ap.add_argument("--scheduler", default=None, choices=["fifo", "edf"],
+                    help="batching scheduler policy (default: $REPRO_SCHEDULER or edf — "
+                         "earliest-deadline-first within priority classes)")
+    ap.add_argument("--priority-classes", type=int, default=3, metavar="N",
+                    help="number of request priority classes the engine accepts "
+                         "(priorities 0..N-1, lower = more urgent)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8765)
     ap.add_argument("--no-warm", action="store_true", help="skip pre-jitting every member count")

@@ -242,6 +242,20 @@ class MetricsRegistry:
         vals = [v for v in vals if not math.isnan(v)]
         return max(vals) if vals else None
 
+    def quantiles_by(self, name: str, q: float, label: str, **labels: str) -> Dict[str, float]:
+        """The ``q``-quantile per value of ``label`` across matching histogram
+        children (max within each group, same roll-up as :meth:`quantile`) —
+        e.g. p99 request latency keyed by priority class."""
+        groups: Dict[str, List[float]] = {}
+        for child_labels, child in self.read(name, **labels):
+            if not isinstance(child, Histogram) or not child.count or label not in child_labels:
+                continue
+            v = child.quantile(q)
+            if math.isnan(v):
+                continue
+            groups.setdefault(child_labels[label], []).append(v)
+        return {k: max(vs) for k, vs in sorted(groups.items())}
+
     # -- export -------------------------------------------------------------
 
     @staticmethod

@@ -22,7 +22,13 @@ target).  The *burn rate* over a window is::
 noise (short) or pages an hour late (long), so each :class:`BurnRule` pairs
 a short and a long window and fires only when BOTH exceed its threshold:
 the default rules are **fast** (5 m AND 1 h above 14.4× — a page) and
-**slow** (30 m AND 6 h above 6× — a ticket).  Breach *transitions* emit
+**slow** (30 m AND 6 h above 6× — a ticket).  Latency objectives can instead
+evaluate over windows scaled to the serving engine's *batching window*
+(:meth:`SloEngine.wire_batch_window`, called by the engine at construction):
+latency badness is made of slow batching windows, so sizing the burn windows
+in units of them makes a breach recovery observable within one evaluation
+cycle of good traffic rather than five minutes later.  Breach *transitions*
+emit
 ``slo.breach``/``slo.recovered`` trace instants, flip the
 ``serving_slo_breach{program=,objective=}`` gauge, and invoke ``on_breach``
 (the engine points that at the flight recorder).
@@ -142,7 +148,44 @@ class SloEngine:
         # p99 sits above target (the registry only holds cumulative counters)
         self._samples: Dict[str, "deque[Tuple[float, float, float]]"] = {}
         self._breaching: Dict[str, bool] = {}
+        # batch-window-scaled rules for LATENCY objectives only, armed by
+        # wire_batch_window(); None means every kind uses self.rules
+        self._latency_rules: Optional[Tuple[BurnRule, ...]] = None
         self.add(*objectives)
+
+    def wire_batch_window(
+        self,
+        window_s: float,
+        *,
+        short_windows: float = 64.0,
+        min_short_s: float = 0.25,
+    ) -> "SloEngine":
+        """Scale the **latency** objectives' burn windows to the engine's
+        batching window instead of the 5-minute SRE defaults.
+
+        A latency breach is made of requests that rode slow batching windows,
+        so its natural evaluation timescale is the window length, not wall-
+        clock minutes: with the short window at ``~64`` batching windows
+        (floored at ``min_short_s`` so a 2 ms window doesn't evaluate over
+        noise), one evaluation cycle after traffic goes good again the bad
+        samples have aged out of the short window and the breach recovers —
+        observable immediately, instead of waiting out five minutes of
+        history.  Availability/error-rate objectives keep the default rules:
+        their failure modes aren't paced by the batching window."""
+        w = max(float(window_s), 1e-4)
+        short = max(w * float(short_windows), float(min_short_s))
+        self._latency_rules = (
+            BurnRule("batch_fast", short_s=short, long_s=short * 8.0, max_burn=14.4),
+            BurnRule("batch_slow", short_s=short * 4.0, long_s=short * 32.0, max_burn=6.0),
+        )
+        return self
+
+    def rules_for(self, obj: Objective) -> Tuple[BurnRule, ...]:
+        """The burn rules one objective evaluates under (latency objectives
+        get the batch-window-scaled pair once :meth:`wire_batch_window` ran)."""
+        if obj.kind == LATENCY_P99 and self._latency_rules is not None:
+            return self._latency_rules
+        return self.rules
 
     def add(self, *objectives: Objective) -> "SloEngine":
         """Register objectives after construction — programs arrive at the
@@ -229,7 +272,7 @@ class SloEngine:
         for obj in self.objectives:
             rules = []
             breaching = False
-            for rule in self.rules:
+            for rule in self.rules_for(obj):
                 short = self._window_burn(obj, rule.short_s, now)
                 long = self._window_burn(obj, rule.long_s, now)
                 fired = short > rule.max_burn and long > rule.max_burn

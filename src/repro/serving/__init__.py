@@ -42,6 +42,7 @@ from .engine import (
     tuned_member_counts,
 )
 from .faults import FaultInjector, InjectedFault
+from .scheduler import BatchingScheduler, EdfScheduler, FifoScheduler, make_scheduler
 from .protocol import (
     DEADLINE_EXCEEDED,
     OVERLOADED,
@@ -51,11 +52,14 @@ from .protocol import (
 )
 
 __all__ = [
+    "BatchingScheduler",
     "DEADLINE_EXCEEDED",
     "DEFAULT_MEMBER_COUNTS",
     "DEGRADED",
     "DRAINING",
+    "EdfScheduler",
     "FaultInjector",
+    "FifoScheduler",
     "ForecastRequest",
     "InjectedFault",
     "LoadReport",
@@ -72,6 +76,7 @@ __all__ = [
     "drive_server",
     "encode_array",
     "faults",
+    "make_scheduler",
     "percentile",
     "protocol",
     "tuned_member_counts",

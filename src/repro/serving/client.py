@@ -57,6 +57,7 @@ class RequestSpec:
     request_id: Optional[str] = None
     fingerprint: Optional[str] = None
     deadline_ms: Optional[float] = None
+    priority: Optional[int] = None  # urgency class, lower = more urgent
 
 
 @dataclass
@@ -226,6 +227,7 @@ async def drive_engine(
                     request_id=rid,
                     stats=spec.stats,
                     deadline_ms=spec.deadline_ms,
+                    priority=spec.priority,
                 )
                 break
             except ServingError as e:
@@ -262,6 +264,8 @@ def _forecast_frame(rid: str, spec: RequestSpec) -> Dict[str, Any]:
         frame["fingerprint"] = spec.fingerprint
     if spec.deadline_ms is not None:
         frame["deadline_ms"] = spec.deadline_ms
+    if spec.priority is not None:
+        frame["priority"] = spec.priority
     return frame
 
 

@@ -15,16 +15,28 @@ requests into full batches:
    queue rejects with 503 + ``retry_after_ms`` (computed from the watchdog's
    median dispatch wall and the queue depth) instead of buffering unbounded
    work it cannot finish.
-2. **Batching window** — a worker task takes the first queued request, then
-   keeps collecting until ``window_ms`` elapses (or the max member count is
-   reached).  Requests for the same program form one batch.  Under load
-   (state ``DEGRADED``) the window shrinks so queued work drains faster.
+2. **Batching window** — a worker task moves arrivals into the pluggable
+   scheduler's backlog (:mod:`serving.scheduler`): on an empty backlog it
+   blocks for the first arrival, then keeps collecting until ``window_ms``
+   elapses or the backlog covers the present programs' member caps; a
+   non-empty backlog dispatches immediately (only already-arrived requests
+   join).  The scheduler then forms **per-program windows in urgency order**
+   (default ``edf``: earliest deadline first within priority classes —
+   FIFO-identical when requests carry neither), distinct programs dispatch
+   concurrently, and the surplus stays in the backlog where it is re-ordered
+   against newer, possibly more urgent, arrivals every round.  Requests that
+   expired while queued are 504'd at pickup without burning a dispatch.
+   Under load (state ``DEGRADED``) the window shrinks so queued work drains
+   faster.
 3. **Padding to tuned member counts** — the batch is padded up to the nearest
    registered member count (by default the counts with a persisted autotune
    ``batch`` record, via :func:`tuned_member_counts`, plus small powers of
    two) by repeating the last request's state.  Padded members compute
    garbage nobody gathers; in exchange every dispatch reuses a warm,
-   possibly autotuned, jit artifact.
+   possibly autotuned, jit artifact.  The loop closes both ways: observed
+   ``(batch size → wall)`` records are written back into the tune store
+   (:func:`repro.core.autotune.record_batch_observation`), so the counts
+   :func:`tuned_member_counts` prefers are learned from real traffic.
 4. **Segmented iterate + streaming** — the union of the batch's stream points
    splits the horizon into segments; each segment is one vmapped
    ``Ensemble.iterate`` dispatch, after which per-request member slices are
@@ -35,8 +47,10 @@ requests into full batches:
 Resilience (the failure model, chaos-tested via :mod:`serving.faults`):
 
 * **Deadlines** — a request may carry ``deadline_ms``; expiry is checked at
-  every segment boundary and expired requests get a 504-style ``error``
-  event instead of burning further dispatches.
+  window pickup (a request that died in the queue is 504'd before any
+  scatter or dispatch is spent on it) and again at every segment boundary,
+  so expired requests get a 504-style ``error`` event instead of burning
+  further dispatches.
 * **Retry-with-bisect** — a failed batched dispatch retries with exponential
   backoff; if it keeps failing and the batch holds more than one request,
   the batch is *bisected* (current member states gathered and re-scattered
@@ -66,11 +80,11 @@ import json
 import math
 from contextlib import nullcontext
 from dataclasses import dataclass, field as dc_field
-from typing import Any, AsyncIterator, Dict, List, Optional, Sequence, Tuple
+from typing import Any, AsyncIterator, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import caching
+from repro.core import autotune, caching
 from repro.core.storage import Storage
 from repro.ensemble import Ensemble
 from repro.ensemble import batch as ens_batch
@@ -94,6 +108,7 @@ from .protocol import (
     UNKNOWN_PROGRAM,
     ServingError,
 )
+from .scheduler import BatchingScheduler, make_scheduler
 
 #: padding targets always available, even with no autotune record on disk
 DEFAULT_MEMBER_COUNTS = (1, 2, 4, 8, 16)
@@ -116,7 +131,7 @@ PROGRAM_COUNTERS = (
     ("live_members", "serving_live_members_total",
      "request-backed member slots dispatched"),
     ("deadline_expired", "serving_deadline_expired_total",
-     "requests expired at a segment boundary"),
+     "requests expired at window pickup or a segment boundary"),
     ("retries", "serving_retries_total", "scatter/dispatch/gather retries"),
     ("bisects", "serving_bisects_total", "batch bisections after exhausted retries"),
     ("abandoned", "serving_abandoned_total", "requests abandoned by clients"),
@@ -169,6 +184,8 @@ class ForecastRequest:
     scalars: Dict[str, Any]
     want_stats: bool = False
     deadline_ms: Optional[float] = None
+    priority: int = 0  # urgency class in [0, engine.priority_classes), 0 most urgent
+    seq: int = 0  # admission sequence number — the deterministic tiebreaker
     submitted_at: float = 0.0
     sampled: bool = True  # head-sampling decision, made once at submit
     queue_wait_s: Optional[float] = None  # submit → window pickup, set by the worker
@@ -413,6 +430,8 @@ class ServingEngine:
         slos: Optional[Sequence[obs_slo.Objective]] = None,
         autoscaler: Optional[obs_slo.Autoscaler] = None,
         flight: Optional[FlightRecorder] = None,
+        scheduler: Union[str, BatchingScheduler, None] = None,
+        priority_classes: int = 3,
     ):
         self.window_s = float(window_ms) / 1e3
         self.max_queue = int(max_queue)
@@ -426,8 +445,14 @@ class ServingEngine:
         self._request_ids = itertools.count()
         self._batch_seq = itertools.count()
         self._dispatch_seq = itertools.count()
+        self._submit_seq = itertools.count()
         self._inflight = 0
         self._draining = False
+        self.scheduler = make_scheduler(scheduler)
+        self.priority_classes = max(1, int(priority_classes))
+        # best observed us/step per (program, batch size) — gates tune-store
+        # write-backs so the hot path rewrites the store only on improvement
+        self._batch_best: Dict[Tuple[str, int], float] = {}
         self.watchdog = StragglerWatchdog(factor=straggler_factor)
         # a fixed tracer wins; otherwise spans follow the contextvar routing
         # (capture() overrides, REPRO_TRACE/configure() for the process default)
@@ -449,7 +474,9 @@ class ServingEngine:
             ),
         }
         reg.gauge(
-            "serving_queue_depth", "requests waiting for a batching window", fn=self._queue.qsize
+            "serving_queue_depth",
+            "requests waiting for dispatch (admission queue + scheduler backlog)",
+            fn=self.queue_depth,
         )
         reg.gauge(
             "serving_inflight",
@@ -471,6 +498,10 @@ class ServingEngine:
         self.slo = obs_slo.SloEngine(
             reg, list(slos or ()), tracer=self._trace, on_breach=self._on_slo_breach
         )
+        # latency objectives evaluate over windows scaled to the batching
+        # window, so a breach recovery is observable within one evaluation
+        # cycle of good traffic instead of waiting out the 5-minute default
+        self.slo.wire_batch_window(self.window_s)
         self.autoscaler = autoscaler if autoscaler is not None else obs_slo.Autoscaler()
         self.flight = flight if flight is not None else FlightRecorder.from_env()
         if self.flight is not None:
@@ -481,6 +512,8 @@ class ServingEngine:
                 slo=self.slo,
                 config={
                     "window_ms": self.window_s * 1e3,
+                    "scheduler": self.scheduler.name,
+                    "priority_classes": self.priority_classes,
                     "max_queue": self.max_queue,
                     "degraded_watermark": self.degraded_watermark,
                     "retry_attempts": self.retry_attempts,
@@ -515,6 +548,29 @@ class ServingEngine:
         }
         return counters, hists
 
+    def _sched_decision(self, decision: str) -> obs_metrics.Counter:
+        """Scheduler decision counters (``serving_scheduler_decisions_total``
+        labeled by policy + decision): windows formed, windows whose dispatch
+        order differs from arrival order, concurrent-program rounds, and
+        requests expired at pickup."""
+        return self.metrics.counter(
+            "serving_scheduler_decisions_total",
+            "batching-scheduler decisions",
+            scheduler=self.scheduler.name,
+            decision=decision,
+        )
+
+    def _priority_hist(self, program: str, priority: int) -> obs_metrics.Histogram:
+        """Per-priority-class latency (its own family, not extra labels on
+        ``serving_request_latency_seconds`` — the existing summary's roll-up
+        reads would double-count a second label dimension)."""
+        return self.metrics.histogram(
+            "serving_priority_latency_seconds",
+            "submit-to-done latency seconds per priority class",
+            program=program,
+            priority=str(priority),
+        )
+
     def _post_error(self, req: ForecastRequest, code: int, reason: str) -> None:
         """The one chokepoint every terminal error flows through: counted in
         ``serving_errors_total{program=,code=}`` (what the SLO engine burns
@@ -547,7 +603,7 @@ class ServingEngine:
         slo_status = self.slo.evaluate(now=now)
         max_batch = max((e.max_batch for e in self._programs.values()), default=1)
         rec = self.autoscaler.recommend(
-            queue_depth=self._queue.qsize(),
+            queue_depth=self.queue_depth(),
             inflight=self._inflight,
             max_batch=max_batch,
             latency_ratio=self.slo.latency_pressure(),
@@ -558,13 +614,20 @@ class ServingEngine:
 
     # -- health state --------------------------------------------------------
 
+    def queue_depth(self) -> int:
+        """Requests waiting for dispatch: the admission queue plus the
+        scheduler's backlog (arrivals the worker has pooled but not yet taken
+        into a window) — the quantity backpressure, the DEGRADED watermark,
+        and the autoscaler all key on."""
+        return self._queue.qsize() + self.scheduler.backlog()
+
     @property
     def state(self) -> str:
         """``SERVING`` → ``DEGRADED`` (queue past the watermark — shed
         optional work) → ``DRAINING`` (reject new, finish in-flight)."""
         if self._draining:
             return DRAINING
-        if self._queue.qsize() >= max(1, math.ceil(self.degraded_watermark * self.max_queue)):
+        if self.queue_depth() >= max(1, math.ceil(self.degraded_watermark * self.max_queue)):
             return DEGRADED
         return SERVING
 
@@ -579,7 +642,7 @@ class ServingEngine:
         if not med_s or math.isnan(med_s):
             med_s = max(self.window_s, 1e-3)
         cap = max((e.max_batch for e in self._programs.values()), default=1)
-        pending = self._queue.qsize() + self._inflight
+        pending = self.queue_depth() + self._inflight
         batches_ahead = max(1, math.ceil(max(pending, 1) / cap))
         return med_s * batches_ahead * 1e3
 
@@ -632,6 +695,7 @@ class ServingEngine:
         request_id: Optional[str] = None,
         stats: bool = False,
         deadline_ms: Optional[float] = None,
+        priority: Optional[int] = None,
     ) -> ForecastRequest:
         entry = self._programs.get(program)
         if entry is None:
@@ -659,6 +723,21 @@ class ServingEngine:
                 raise ServingError(INVALID_VALUE, "deadline_ms must be a number") from None
             if not deadline_ms > 0:
                 raise ServingError(INVALID_VALUE, f"deadline_ms must be > 0, got {deadline_ms}")
+        if priority is None:
+            # the "normal" class: below the most urgent (0) whenever more
+            # than one class exists, so explicit urgency means something
+            priority = min(1, self.priority_classes - 1)
+        else:
+            if isinstance(priority, bool) or not isinstance(priority, (int, np.integer)):
+                raise ServingError(
+                    INVALID_VALUE, f"priority must be an integer, got {priority!r}"
+                )
+            priority = int(priority)
+            if not 0 <= priority < self.priority_classes:
+                raise ServingError(
+                    INVALID_VALUE,
+                    f"priority must be in [0, {self.priority_classes}), got {priority}",
+                )
         return ForecastRequest(
             request_id=request_id or f"req-{next(self._request_ids)}",
             entry=entry,
@@ -668,6 +747,7 @@ class ServingEngine:
             scalars=entry.admit_scalars(dict(scalars or {})),
             want_stats=bool(stats),
             deadline_ms=deadline_ms,
+            priority=priority,
         )
 
     def submit(self, *args: Any, **kwargs: Any) -> ForecastRequest:
@@ -681,10 +761,10 @@ class ServingEngine:
                 "engine is draining — not admitting new requests",
                 retry_after_ms=self._retry_after_ms(),
             )
-        if self._queue.qsize() >= self.max_queue:
+        if self.queue_depth() >= self.max_queue:
             self._c["rejected_overloaded"].inc()
             self._tevent(
-                "serving.reject", reason="overloaded", queue_depth=self._queue.qsize()
+                "serving.reject", reason="overloaded", queue_depth=self.queue_depth()
             )
             raise ServingError(
                 OVERLOADED,
@@ -715,6 +795,7 @@ class ServingEngine:
         req.submitted_at = monotonic()
         if req.deadline_ms is not None:
             req.deadline_at = req.submitted_at + req.deadline_ms / 1e3
+        req.seq = next(self._submit_seq)
         req.entry.counters["requests"].inc()
         self._ensure_worker()
         self._queue.put_nowait(req)
@@ -770,6 +851,8 @@ class ServingEngine:
         )
 
     def _fail_all_queued(self, reason: str) -> None:
+        for req in self.scheduler.flush():
+            self._post_error(req, INTERNAL, reason)
         while True:
             try:
                 req = self._queue.get_nowait()
@@ -781,18 +864,50 @@ class ServingEngine:
         for r in requests:
             self._post_error(r, code, reason)
 
-    def _group(self, batch: List[ForecastRequest]) -> List[Tuple[ProgramEntry, List[ForecastRequest]]]:
-        """Partition one batching window by program, chunked at each
-        program's max member count."""
-        groups: Dict[str, List[ForecastRequest]] = {}
-        for r in batch:
-            groups.setdefault(r.entry.name, []).append(r)
-        out: List[Tuple[ProgramEntry, List[ForecastRequest]]] = []
-        for reqs in groups.values():
-            entry = reqs[0].entry
-            for i in range(0, len(reqs), entry.max_batch):
-                out.append((entry, reqs[i : i + entry.max_batch]))
-        return out
+    def _pool_admit(self, req: ForecastRequest) -> bool:
+        """Move one arrival from the admission queue into the scheduler's
+        backlog — unless it is already dead: abandoned/terminal requests are
+        dropped, and a request whose deadline expired while queued is 504'd
+        right here, before any window slot or dispatch is spent on it."""
+        if not self._still_wanted(req):
+            return False
+        if req.expired():
+            self._expire_at_pickup(req)
+            return False
+        self.scheduler.push(req)
+        return True
+
+    def _expire_at_pickup(self, req: ForecastRequest, now: Optional[float] = None) -> None:
+        """The 504-at-pickup path: the request died waiting in the queue, so
+        it terminates without burning a scatter or dispatch (the satellite
+        bugfix — previously an expired request still rode a full first
+        segment before ``_mark_expired`` caught it)."""
+        now = monotonic() if now is None else now
+        req.entry.counters["deadline_expired"].inc()
+        self._sched_decision("expired_at_pickup").inc()
+        self._tevent(
+            "serving.deadline",
+            trace_ids=(req.request_id,),
+            force=True,
+            deadline_ms=req.deadline_ms,
+            waited_ms=(now - req.submitted_at) * 1e3,
+            at="pickup",
+        )
+        self._post_error(
+            req,
+            DEADLINE_EXCEEDED,
+            f"deadline of {req.deadline_ms:.0f} ms expired after "
+            f"{(now - req.submitted_at) * 1e3:.0f} ms in queue — not dispatched",
+        )
+
+    def _sweep_expired(self) -> None:
+        """Purge the backlog of requests that died waiting (expired,
+        abandoned, or already terminal) before windows form."""
+        now = monotonic()
+        dead = self.scheduler.sweep(lambda r: r.terminal or r.abandoned or r.expired(now))
+        for req in dead:
+            if self._still_wanted(req) and req.expired(now):
+                self._expire_at_pickup(req, now)
 
     def _picked_up(self, req: ForecastRequest) -> None:
         """Queue-wait accounting at the moment the worker pops a request:
@@ -817,48 +932,100 @@ class ServingEngine:
 
     async def _run_worker(self) -> None:
         while True:
-            first = await self._queue.get()
-            batch = [first]
-            self._inflight += 1
-            self._picked_up(first)
+            sched = self.scheduler
+            fresh = False
+            if not sched.backlog():
+                # idle: block for the first arrival, then open a window
+                if not self._pool_admit(await self._queue.get()):
+                    continue
+                fresh = True
+            picked: List[ForecastRequest] = []
             try:
                 loop = asyncio.get_running_loop()
                 # DEGRADED sheds batching latency: a quarter window drains the
                 # queue faster at the cost of occupancy
                 window = self.window_s * (0.25 if self.state == DEGRADED else 1.0)
-                deadline = loop.time() + window
-                cap = max(e.max_batch for e in self._programs.values())
-                with self._span("serving.window", window_s=window) as wsp:
-                    wsp.link(first.request_id)
-                    while len(batch) < cap:
-                        remaining = deadline - loop.time()
-                        if remaining <= 0:
-                            break
+                with self._span(
+                    "serving.window", window_s=window, scheduler=sched.name
+                ) as wsp:
+                    if fresh:
+                        deadline = loop.time() + window
+                        while sched.backlog() < sched.window_cap():
+                            remaining = deadline - loop.time()
+                            if remaining <= 0:
+                                break
+                            try:
+                                req = await asyncio.wait_for(self._queue.get(), remaining)
+                            except asyncio.TimeoutError:
+                                break
+                            self._pool_admit(req)
+                    # everything already handed off joins the pool regardless
+                    # of the cap — the cap only bounds how long we WAIT for
+                    # more, never what the ordering policy gets to see (a
+                    # leftover backlog therefore dispatches immediately: only
+                    # already-arrived requests join, no second window wait)
+                    while True:
                         try:
-                            req = await asyncio.wait_for(self._queue.get(), remaining)
-                        except asyncio.TimeoutError:
+                            self._pool_admit(self._queue.get_nowait())
+                        except asyncio.QueueEmpty:
                             break
-                        batch.append(req)
+                    self._sweep_expired()
+                    windows = sched.take(monotonic())
+                    picked = [r for _, chunk in windows for r in chunk]
+                    for r in picked:
                         self._inflight += 1
-                        self._picked_up(req)
-                        wsp.link(req.request_id)
-                    wsp.set("requests", len(batch))
-                self._h_window.observe(len(batch))
-                for entry, chunk in self._group(batch):
-                    try:
-                        await self._run_batch(entry, chunk)
-                    except ServingError as e:
-                        self._fail_requests(chunk, e.code, e.reason)
-                    except Exception as e:  # noqa: BLE001 — the worker must survive any batch
-                        self._fail_requests(chunk, INTERNAL, f"{type(e).__name__}: {e}")
+                        self._picked_up(r)
+                        wsp.link(r.request_id)
+                    wsp.set("requests", len(picked))
+                    wsp.set("windows", len(windows))
+                if not picked:
+                    continue
+                self._h_window.observe(len(picked))
+                self._count_decisions(windows)
+                # distinct programs' windows dispatch CONCURRENTLY (they hold
+                # independent jit artifacts); _run_group contains per-window
+                # failures so one program's poison never fails another's batch
+                await asyncio.gather(
+                    *(self._run_group(entry, chunk) for entry, chunk in windows)
+                )
             except asyncio.CancelledError:
-                self._fail_requests(batch, INTERNAL, "engine shutting down")
+                self._fail_requests(picked + sched.flush(), INTERNAL, "engine shutting down")
                 raise
-            except Exception as e:  # noqa: BLE001 — window/grouping failures must not strand requests
+            except Exception as e:  # noqa: BLE001 — window/scheduling failures must not strand requests
                 self._c["worker_failures"].inc()
-                self._fail_requests(batch, INTERNAL, f"worker failure: {type(e).__name__}: {e}")
+                self._fail_requests(
+                    picked + sched.flush(),
+                    INTERNAL,
+                    f"worker failure: {type(e).__name__}: {e}",
+                )
             finally:
-                self._inflight -= len(batch)
+                self._inflight -= len(picked)
+
+    async def _run_group(self, entry: ProgramEntry, chunk: List[ForecastRequest]) -> None:
+        """One program's window: any failure terminates exactly this chunk's
+        requests and the worker (plus the other programs' windows) survives."""
+        try:
+            await self._run_batch(entry, chunk)
+        except asyncio.CancelledError:
+            raise
+        except ServingError as e:
+            self._fail_requests(chunk, e.code, e.reason)
+        except Exception as e:  # noqa: BLE001 — the worker must survive any batch
+            self._fail_requests(chunk, INTERNAL, f"{type(e).__name__}: {e}")
+
+    def _count_decisions(
+        self, windows: List[Tuple[ProgramEntry, List[ForecastRequest]]]
+    ) -> None:
+        self._sched_decision("window").inc(len(windows))
+        if len(windows) > 1:
+            self._sched_decision("concurrent_programs").inc()
+        # "reordered" = the policy actually changed an outcome this round: the
+        # pickup order differs from arrival order, or a picked request
+        # overtook an older one still waiting in the backlog
+        seqs = [r.seq for _, chunk in windows for r in chunk]
+        oldest = self.scheduler.oldest_waiting()
+        if seqs and (seqs != sorted(seqs) or (oldest is not None and max(seqs) > oldest)):
+            self._sched_decision("reordered").inc()
 
     # -- batch execution: segments, deadlines, retry-with-bisect -------------
 
@@ -968,6 +1135,7 @@ class ServingEngine:
                 self.watchdog.record(next(self._dispatch_seq), dt)
                 entry.hist["dispatch"].observe(dt)
                 entry.counters["dispatches"].inc()
+                self._observe_batch_shape(entry, m, seg, dt)
             except Exception as e:  # noqa: BLE001 — dispatch exhausted its retries
                 await self._bisect_or_fail(entry, live, t, segments[si:], e, batch_id, storages)
                 return
@@ -983,6 +1151,7 @@ class ServingEngine:
                 continue
             latency_s = monotonic() - r.submitted_at
             entry.hist["latency"].observe(latency_s)
+            self._priority_hist(entry.name, r.priority).observe(latency_s)
             self._tevent(
                 "serving.done", trace_ids=(r.request_id,), latency_s=latency_s, steps=r.steps
             )
@@ -996,6 +1165,27 @@ class ServingEngine:
             if r.queue_wait_s is not None:
                 done_event["queue_wait_s"] = r.queue_wait_s
             r.post(done_event)
+
+    def _observe_batch_shape(self, entry: ProgramEntry, m: int, steps: int, dt: float) -> None:
+        """Feed the observed (batch size → wall) back into the tune store so
+        :func:`tuned_member_counts` — and with it tuned-count padding — learns
+        from real traffic.  Gated on improvement: only a new batch size, or a
+        ≥2% better per-step wall, rewrites the store (the merge itself is an
+        atomic read-merge-write inside :mod:`repro.core.autotune`, so
+        concurrent engines don't clobber each other's records)."""
+        if steps <= 0 or dt <= 0:
+            return
+        us_per_step = dt / steps * 1e6
+        key = (entry.name, m)
+        best = self._batch_best.get(key)
+        if best is not None and us_per_step >= best * 0.98:
+            return
+        self._batch_best[key] = us_per_step if best is None else min(best, us_per_step)
+        for obj in getattr(entry.cp, "group_objects", ()):
+            try:
+                autotune.record_batch_observation(obj.name, obj.fingerprint, m, us_per_step)
+            except Exception:  # noqa: BLE001 — tune feedback is never a liveness dependency
+                pass
 
     def _still_wanted(self, r: ForecastRequest) -> bool:
         if r.terminal:
@@ -1193,8 +1383,22 @@ class ServingEngine:
             for name in sorted(self._programs)
         }
         out["state"] = self.state
-        out["queue_depth"] = self._queue.qsize()
+        out["queue_depth"] = self.queue_depth()
         out["inflight"] = self._inflight
+        out["scheduler"] = {
+            "policy": self.scheduler.name,
+            "backlog": self.scheduler.backlog(),
+            "priority_classes": self.priority_classes,
+            "decisions": {
+                labels["decision"]: int(c.value)
+                for labels, c in reg.read(
+                    "serving_scheduler_decisions_total", scheduler=self.scheduler.name
+                )
+            },
+            "priority_latency_p99_s": reg.quantiles_by(
+                "serving_priority_latency_seconds", 0.99, "priority"
+            ),
+        }
         padded = out["padded_members"]
         out["mean_occupancy"] = out["live_members"] / padded if padded else None
         out["straggler"] = {
@@ -1214,7 +1418,7 @@ class ServingEngine:
         True when fully drained, False on timeout (remaining work is failed)."""
         self._draining = True
         deadline = None if timeout_s is None else monotonic() + timeout_s
-        while self._queue.qsize() or self._inflight:
+        while self.queue_depth() or self._inflight:
             if deadline is not None and monotonic() > deadline:
                 self._fail_all_queued("engine drain timed out")
                 await self.aclose()

@@ -11,7 +11,11 @@ Client → server:
 ``forecast``
     ``{"type": "forecast", "request_id", "program", "steps", "stream_every",
     "fields": {name: array}, "scalars": {name: float}, "fingerprint"?,
-    "stats"?}`` — submit one forecast request.
+    "stats"?, "deadline_ms"?, "priority"?}`` — submit one forecast request.
+    ``priority`` is an integer urgency class in ``[0, priority_classes)``
+    (lower is more urgent; the engine defaults omitted priorities to the
+    normal class and rejects out-of-range values with 422); deadline-aware
+    schedulers order the backlog by ``(priority, deadline)``.
 ``programs``
     ``{"type": "programs"}`` — ask for the catalog of registered programs.
 
@@ -28,9 +32,10 @@ summaries on ``GET /metrics``.
 
 Admission errors reuse HTTP flavors so clients can switch on ``code``:
 400 malformed frame, 404 unknown program, 409 fingerprint mismatch,
-413 field shape/dtype mismatch, 422 bad scalars or step counts,
+413 field shape/dtype mismatch, 422 bad scalars, step counts, or priority,
 503 overloaded/draining (the frame carries ``retry_after_ms``), 504 deadline
-exceeded at a segment boundary.
+exceeded — either at window pickup (the request died waiting in the queue and
+was never dispatched) or at a segment boundary mid-horizon.
 """
 
 from __future__ import annotations
@@ -49,7 +54,7 @@ SHAPE_MISMATCH = 413
 INVALID_VALUE = 422
 INTERNAL = 500
 OVERLOADED = 503  # admission queue full, or the engine is draining
-DEADLINE_EXCEEDED = 504  # request deadline expired at a segment boundary
+DEADLINE_EXCEEDED = 504  # deadline expired at window pickup or a segment boundary
 
 
 class ServingError(Exception):
@@ -115,6 +120,7 @@ def parse_forecast(msg: Dict[str, Any]) -> Dict[str, Any]:
         "request_id": msg.get("request_id"),
         "stats": bool(msg.get("stats", False)),
         "deadline_ms": msg.get("deadline_ms"),
+        "priority": msg.get("priority"),
     }
 
 

@@ -280,10 +280,13 @@ def test_padding_picks_nearest_member_count(engine):
 def test_tuned_member_counts_read_autotune_store(step, templates):
     fields, scalars = templates
     cp = step.compiled(fields, scalars)
-    # no store on disk → no tuned counts → registration falls back to defaults
-    assert tuned_member_counts(cp) == []
     obj = cp.group_objects[0]
     path = caching.tuning_path(obj.name, obj.fingerprint)
+    # serving engines in earlier tests may have written observed-batch records
+    # (the write-back loop is on by default); start from a clean store
+    path.unlink(missing_ok=True)
+    # no store on disk → no tuned counts → registration falls back to defaults
+    assert tuned_member_counts(cp) == []
     try:
         path.write_text(json.dumps({"version": 1, "domains": {"k": {"block": [8, 8], "batch": 6}}}))
         assert tuned_member_counts(cp) == [6]

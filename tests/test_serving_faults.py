@@ -190,6 +190,41 @@ def test_chaos_matrix_every_request_terminates(step, templates, site):
     assert rep2.results[0].ok or rep2.results[0].error_code == 500
 
 
+@pytest.mark.parametrize("site", ["dispatch", "scatter", "gather"])
+def test_chaos_under_edf_reordering(step, templates, site):
+    """The PR-10 leg: the chaos invariant must survive the deadline-aware
+    scheduler REORDERING the backlog.  Mixed priorities and (loose) deadlines
+    push requests through different windows than arrival order — every
+    accepted request still terminates, and every survivor is still bit-exact
+    against its sequential oracle: reordering is free because batched
+    execution is bit-identical per request."""
+    inj = chaos_injector((site,), rate=0.3, seed=29)
+    eng = make_engine(step, templates, faults=inj, scheduler="edf")
+    n, steps = 8, 4
+    specs = [
+        RequestSpec(
+            "chaos_step",
+            {"phi": request_state(DOM, seed=i + 1)},
+            steps=steps,
+            stream_every=2,
+            priority=i % 3,
+            deadline_ms=None if i % 2 else 60_000.0,  # loose: never expires
+        )
+        for i in range(n)
+    ]
+    rep = drive(eng, specs)
+    assert rep.requests == n  # nobody hung
+    for spec, res in zip(specs, rep.results):
+        if res.ok:
+            assert res.steps_seen == [2, 4]
+            ref = sequential(step, templates, spec.fields["phi"], steps)
+            assert np.abs(res.final_fields["phi"] - ref).max() == 0.0
+        else:
+            assert res.error_code in (500, OVERLOADED)
+    assert eng.stats()["deadline_expired"] == 0  # reordering, not expiry
+    assert eng.stats()["scheduler"]["policy"] == "edf"
+
+
 def test_chaos_all_sites_at_once(step, templates):
     """Everything armed simultaneously — the worst day in production."""
     inj = chaos_injector(SITES, rate=0.15, seed=5)
@@ -392,12 +427,13 @@ def test_drain_finishes_queued_then_rejects(step, templates):
 
 
 def test_worker_failure_outside_batch_fails_requests_not_liveness(step, templates):
-    """Regression: an exception outside the per-chunk try (here: grouping)
-    used to kill the worker silently, hanging every queued request forever.
-    Now the batch gets error events and the very next request still works."""
+    """Regression: an exception outside the per-chunk try (here: window
+    formation in the scheduler) used to kill the worker silently, hanging
+    every queued request forever.  Now the pooled requests get error events
+    and the very next request still works."""
     eng = make_engine(step, templates)
-    real_group = eng._group
-    eng._group = lambda batch: (_ for _ in ()).throw(RuntimeError("grouping exploded"))
+    real_take = eng.scheduler.take
+    eng.scheduler.take = lambda now: (_ for _ in ()).throw(RuntimeError("grouping exploded"))
 
     async def go():
         async with eng:
@@ -407,8 +443,8 @@ def test_worker_failure_outside_batch_fails_requests_not_liveness(step, template
             assert evs[-1]["type"] == "error" and evs[-1]["code"] == 500
             assert "grouping exploded" in evs[-1]["reason"]
             assert eng.stats()["worker_failures"] == 1
-            # heal the grouping; the worker survived and serves again
-            eng._group = real_group
+            # heal the scheduler; the worker survived and serves again
+            eng.scheduler.take = real_take
             req2 = eng.submit("chaos_step", {"phi": phi}, steps=1)
             evs2 = await asyncio.wait_for(_collect(eng, req2), timeout=30.0)
             assert evs2[-1]["type"] == "done"
